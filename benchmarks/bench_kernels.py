@@ -1,0 +1,103 @@
+"""Kernel micro-benchmarks: wall time of the XLA paths on this host +
+static schedule quality (VMEM footprint / arithmetic intensity) of the
+Pallas plans for the TPU target.
+
+On this CPU-only container the wall times are indicative (XLA:CPU), but
+the derived columns -- tile shapes, VMEM working set, arithmetic intensity
+-- are the TPU-relevant outputs of the generator, independent of host.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import Dataflow, GemminiConfig
+from repro.core.tiling import plan_gemm
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def gemm_rows():
+    rng = np.random.default_rng(0)
+    rows = []
+    for (m, n, k) in [(512, 512, 512), (1024, 1024, 1024), (128, 4096, 1024)]:
+        for df in (Dataflow.OS, Dataflow.WS):
+            cfg = GemminiConfig(dataflow=df)
+            plan = plan_gemm(cfg, m, n, k)
+            a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+            b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+            f = jax.jit(lambda a, b, cfg=cfg: ops.gemm(a, b, None, cfg=cfg,
+                                                       shift=8,
+                                                       backend="xla"))
+            us = _time(f, a, b)
+            rows.append(dict(
+                name=f"gemm_{df.value}_{m}x{n}x{k}", us=us,
+                tile=(plan.tile_m, plan.tile_n, plan.tile_k),
+                vmem_kib=(plan.vmem_streamed_bytes +
+                          plan.vmem_resident_bytes) // 1024,
+                ai=plan.arithmetic_intensity))
+    return rows
+
+
+def attention_rows():
+    rng = np.random.default_rng(0)
+    rows = []
+    from repro.models.attention import blockwise_attention_xla
+    for (b, t, h, kvh, d, win) in [(1, 1024, 8, 2, 64, None),
+                                   (1, 2048, 8, 2, 64, 256)]:
+        q = jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((b, t, kvh, d)), jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((b, t, kvh, d)), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v, win=win: blockwise_attention_xla(
+            q, k, v, causal=True, window=win))
+        us = _time(f, q, k, v, iters=3)
+        rows.append(dict(name=f"attn_b{b}_t{t}_w{win}", us=us,
+                         tile=None, vmem_kib=0, ai=0))
+    return rows
+
+
+def ssd_rows():
+    rng = np.random.default_rng(0)
+    from repro.models.ssm import ssd_chunked_xla
+    rows = []
+    for (b, t, h, p, g, n) in [(1, 2048, 16, 64, 1, 64)]:
+        x = jnp.asarray(rng.standard_normal((b, t, h, p)), jnp.float32)
+        dt = jnp.abs(jnp.asarray(rng.standard_normal((b, t, h)),
+                                 jnp.float32)) + .01
+        al = jnp.asarray(rng.standard_normal((h,)) * .3, jnp.float32)
+        bb = jnp.asarray(rng.standard_normal((b, t, g, n)) * .3, jnp.float32)
+        cc = jnp.asarray(rng.standard_normal((b, t, g, n)) * .3, jnp.float32)
+        f = jax.jit(lambda x, dt, bb, cc: ssd_chunked_xla(x, dt, al, bb, cc,
+                                                          chunk=256))
+        us = _time(f, x, dt, bb, cc, iters=3)
+        rows.append(dict(name=f"ssd_t{t}_h{h}", us=us, tile=None,
+                         vmem_kib=0, ai=0))
+    return rows
+
+
+def main(csv=True):
+    rows = gemm_rows() + attention_rows() + ssd_rows()
+    if csv:
+        print("# bench_kernels: XLA-path wall time (this host) + TPU plan "
+              "quality")
+        print("name,us_per_call,tile,vmem_kib,arith_intensity")
+        for r in rows:
+            print(f"{r['name']},{r['us']:.0f},\"{r['tile']}\","
+                  f"{r['vmem_kib']},{r['ai']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Fig 7b's tiling-fit finding + the scratchpad sweep.
+
+"MLP 4 outperformed MLP 3, because its dimensions, which were powers-of-2,
+mapped better onto our maximum tiling factors." -- reproduced via the
+tiling solver's utilization (useful MACs / padded MACs) and the resulting
+cycles, plus a scratchpad-capacity sweep showing the reuse effect that
+design point 7 probes.
+"""
+
+from __future__ import annotations
+
+from repro.core import dse, isa
+from repro.core.config import PAPER_DESIGN_POINTS
+from repro.core.tiling import plan_gemm
+
+BASE = PAPER_DESIGN_POINTS[1]
+
+
+def mlp_fit_rows():
+    out = []
+    for name in ("mlp1", "mlp2", "mlp3", "mlp4"):
+        wl = dse.PAPER_MLPS[name]
+        r = dse.evaluate(BASE, wl, isa.ROCKET)
+        cpu = sum(2.0 * g.m * g.n * g.k * g.repeats for g in wl.gemms)
+        out.append(dict(workload=name, utilization=r["utilization"],
+                        speedup=cpu / r["total_cycles"],
+                        macs_per_cycle=r["macs"] / r["total_cycles"]))
+    return out
+
+
+def scratchpad_sweep(sizes=(16, 32, 64, 128, 256, 512)):
+    """Arithmetic intensity of one large GEMM vs scratchpad KiB (the
+    accumulator scales with it, as in the paper's physical-design configs:
+    256 KiB spad / 64 KiB acc)."""
+    out = []
+    for kib in sizes:
+        cfg = BASE.replace(scratchpad_bytes=kib * 1024,
+                           accumulator_bytes=kib * 256)
+        plan = plan_gemm(cfg, 1024, 1024, 1024)
+        out.append(dict(scratchpad_kib=kib,
+                        tile=(plan.tile_m, plan.tile_n, plan.tile_k),
+                        arith_intensity=plan.arithmetic_intensity,
+                        hbm_bytes=plan.hbm_read_bytes +
+                        plan.hbm_write_bytes))
+    return out
+
+
+def main(csv=True):
+    fit = mlp_fit_rows()
+    sweep = scratchpad_sweep()
+    if csv:
+        print("# bench_tiling: MLP tiling fit (Fig 7b) + scratchpad sweep "
+              "(point 7)")
+        print("workload,utilization,speedup_vs_cpu,macs_per_cycle")
+        for r in fit:
+            print(f"{r['workload']},{r['utilization']:.3f},"
+                  f"{r['speedup']:.1f},{r['macs_per_cycle']:.1f}")
+        print("scratchpad_kib,tile_m,tile_n,tile_k,arith_intensity,hbm_bytes")
+        for r in sweep:
+            tm, tn, tk = r["tile"]
+            print(f"{r['scratchpad_kib']},{tm},{tn},{tk},"
+                  f"{r['arith_intensity']:.2f},{r['hbm_bytes']}")
+    return dict(fit=fit, sweep=sweep)
+
+
+if __name__ == "__main__":
+    main()

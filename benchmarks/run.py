@@ -1,0 +1,34 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_dse, bench_kernels, bench_roofline,
+                            bench_system_amdahl, bench_tiling)
+    t0 = time.time()
+    sections = [
+        ("DSE (Table 1 / Figs 6-8)", bench_dse.main),
+        ("System Amdahl (section 8 finding)", bench_system_amdahl.main),
+        ("Tiling fit (Fig 7b) + scratchpad sweep", bench_tiling.main),
+        ("Kernel micro-benchmarks", bench_kernels.main),
+        ("Roofline table (dry-run artifacts)", bench_roofline.main),
+    ]
+    for title, fn in sections:
+        print(f"\n===== {title} =====")
+        try:
+            fn()
+        except Exception as e:  # noqa
+            print(f"SECTION FAILED: {e!r}", file=sys.stderr)
+            raise
+    print(f"\n# all benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

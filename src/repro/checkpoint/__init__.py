@@ -1,0 +1,5 @@
+from repro.checkpoint.store import (CheckpointManager, save_checkpoint,
+                                    restore_checkpoint, latest_step)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

@@ -1,0 +1,83 @@
+"""Architecture registry: the 10 assigned archs + paper DSE design points.
+
+``get(name)`` returns the full-size ModelConfig; ``get_smoke(name)`` returns
+the reduced same-family config used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.models.transformer import ModelConfig
+
+_REGISTRY: Dict[str, Tuple[Callable[[], ModelConfig],
+                           Callable[[], ModelConfig]]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> ModelConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    import dataclasses
+    cfg = get(name)
+    kw = dict(
+        n_layers=2, d_model=64, vocab=128, d_ff=128 if cfg.d_ff else 0,
+        head_dim=16, dtype=cfg.dtype)
+    if cfg.has_attn:
+        kw.update(n_heads=4, n_kv_heads=max(1, cfg.n_kv_heads * 4
+                                            // max(cfg.n_heads, 1)))
+    if cfg.family == "moe":
+        kw.update(n_experts=4, top_k=min(cfg.top_k, 2), moe_d_ff=32,
+                  expert_padding=1)
+    if cfg.has_ssm:
+        kw.update(d_state=8, ssm_head_dim=8)
+    if cfg.local_window:
+        kw.update(local_window=8)
+    if cfg.n_meta_tokens:
+        kw.update(n_meta_tokens=4)
+    return dataclasses.replace(cfg, **kw)
+
+
+def names():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (gemma2_2b, gemma3_1b, gemma3_4b,        # noqa
+                               granite_moe_3b, hymba_1_5b,
+                               llama4_scout, llava_next_34b,
+                               mamba2_1_3b, musicgen_medium, qwen1_5_4b)
+    _LOADED = True
+
+
+# archs for which long_500k is runnable (sub-quadratic; see DESIGN.md sec. 5)
+LONG_CONTEXT_ARCHS = frozenset({
+    "gemma2-2b", "gemma3-1b", "gemma3-4b", "hymba-1.5b", "mamba2-1.3b"})
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def shapes_for(arch: str):
+    base = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_CONTEXT_ARCHS:
+        base.append("long_500k")
+    return tuple(base)

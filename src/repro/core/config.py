@@ -1,0 +1,212 @@
+"""Gemmini generator configuration.
+
+This module is the TPU-native analogue of the Chisel generator's parameter
+space (paper §2.2).  A :class:`GemminiConfig` fully determines one "elaborated
+accelerator instance": the dataflow, the systolic tile dimensions (mapped to
+MXU-aligned Pallas block shapes), the input/accumulator datatypes, the
+scratchpad (VMEM) budget that the tiling solver must respect, the pipelining
+depth (number of in-flight double-buffered blocks), and the banking analogue.
+
+``DESIGN_POINTS`` reproduces Table 1 of the paper (design points 1-10) with
+each ASIC parameter re-targeted to its TPU analogue as documented in
+DESIGN.md section 2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class Dataflow(enum.Enum):
+    """Systolic dataflow (paper section 2.2, "Dataflow").
+
+    OS: output-stationary -- the C tile is resident in the (wider-bitwidth)
+        accumulator while A/B stream through; K is the innermost grid axis.
+    WS: weight-stationary -- the B tile is resident ("preloaded into the PEs'
+        weight buffer"), A streams, partial sums accumulate into the output.
+    BOTH: runtime-selectable (design point 3); the generated callable takes a
+        per-call dataflow argument.
+    """
+
+    OS = "OS"
+    WS = "WS"
+    BOTH = "BOTH"
+
+
+class Activation(enum.Enum):
+    """Fused non-linear activation units (paper section 2.1)."""
+
+    NONE = "none"
+    RELU = "relu"
+    RELU6 = "relu6"
+    GELU = "gelu"      # beyond-paper: needed by the LM model zoo
+    SILU = "silu"      # beyond-paper: needed by the LM model zoo
+
+
+# dtype name -> (jnp dtype, bytes). Gemmini is datatype-generic via Scala
+# typeclasses; we are datatype-generic over this table.
+_DTYPES: Mapping[str, Any] = {
+    "int8": jnp.int8,
+    "int16": jnp.int16,
+    "int32": jnp.int32,
+    "bf16": jnp.bfloat16,
+    "fp16": jnp.float16,
+    "fp32": jnp.float32,
+}
+
+
+def dtype_of(name: str):
+    if name not in _DTYPES:
+        raise ValueError(f"unknown datatype {name!r}; options: {sorted(_DTYPES)}")
+    return _DTYPES[name]
+
+
+def bytes_of(name: str) -> int:
+    return jnp.dtype(dtype_of(name)).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class GemminiConfig:
+    """One elaborated accelerator instance.
+
+    Attributes:
+      dataflow: OS / WS / BOTH (runtime-selectable).
+      dim: systolic array dimension analogue. The paper's DIM x DIM PE grid
+        maps to the *minimum* MXU-aligned tile granularity: operands are
+        zero-padded to multiples of ``dim`` exactly as the paper zero-pads to
+        the array size (section 3.3). Must be a multiple of 128 for MXU
+        alignment on the lane axis (the paper's 16x16 int8 array has the same
+        8b x 16-lane = 128B row granularity as a TPU lane).
+      input_dtype / acc_dtype / output_dtype: datatype parameterization.
+        Baseline: int8 inputs, int32 accumulation (Table 1).
+      scratchpad_bytes: VMEM budget for streamed A/B/D tiles (the banked
+        scratchpad). The tiling solver will not produce a schedule whose
+        double-buffered working set exceeds this.
+      accumulator_bytes: VMEM budget for the resident accumulator tile(s)
+        (the paper's separate, wider-bitwidth accumulator SRAM).
+      banks: scratchpad banking analogue -- number of concurrently live
+        streamed operands the schedule may hold (A, B, D plus extra K-split
+        accumulation buffers). >= 2 required for an A/B GEMM.
+      pipeline_depth: grid-pipeline buffering depth. 2 = double buffering
+        (the paper's fully-pipelined PE double-buffering); 1 = no overlap
+        (the "fully combinational" point 6 analogue -- smaller footprint,
+        lower throughput).
+      max_tile_m/n/k: optional hard caps on the solver's tile search, used by
+        the DSE to emulate narrower configurations.
+    """
+
+    dataflow: Dataflow = Dataflow.OS
+    dim: int = 128
+    input_dtype: str = "int8"
+    acc_dtype: str = "int32"
+    output_dtype: str = "int8"
+    scratchpad_bytes: int = 8 * 1024 * 1024
+    accumulator_bytes: int = 4 * 1024 * 1024
+    banks: int = 4
+    pipeline_depth: int = 2
+    max_tile_m: Optional[int] = None
+    max_tile_n: Optional[int] = None
+    max_tile_k: Optional[int] = None
+
+    def __post_init__(self):
+        if self.dim % 8 != 0 or self.dim <= 0:
+            raise ValueError(f"dim must be a positive multiple of 8, got {self.dim}")
+        if self.banks < 2:
+            raise ValueError("banks >= 2 required (A and B streams)")
+        if self.pipeline_depth not in (1, 2, 3):
+            raise ValueError("pipeline_depth in {1,2,3}")
+        dtype_of(self.input_dtype), dtype_of(self.acc_dtype), dtype_of(self.output_dtype)
+        if self.scratchpad_bytes < 4 * self.dim * self.dim * bytes_of(self.input_dtype):
+            raise ValueError("scratchpad too small for even one double-buffered tile pair")
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def input_jnp(self):
+        return dtype_of(self.input_dtype)
+
+    @property
+    def acc_jnp(self):
+        return dtype_of(self.acc_dtype)
+
+    @property
+    def output_jnp(self):
+        return dtype_of(self.output_dtype)
+
+    @property
+    def is_quantized(self) -> bool:
+        return jnp.issubdtype(dtype_of(self.input_dtype), jnp.integer)
+
+    def replace(self, **kw) -> "GemminiConfig":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> str:
+        return (
+            f"Gemmini[{self.dataflow.value} dim={self.dim} "
+            f"{self.input_dtype}->{self.acc_dtype}->{self.output_dtype} "
+            f"spad={self.scratchpad_bytes//1024}KiB acc={self.accumulator_bytes//1024}KiB "
+            f"banks={self.banks} pipe={self.pipeline_depth}]"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Table 1 design points, re-targeted to the TPU analogue space.
+#
+# The ASIC baseline is a 16x16 int8 array with a 64 KiB scratchpad. A 16x16
+# int8 systolic array consumes 16B/cycle/edge; one TPU MXU pass consumes a
+# 128-lane tile. We scale the *ratios* of Table 1 rather than its absolute
+# SRAM sizes: dim doubles where the paper doubles DIM, scratchpad quadruples
+# where the paper quadruples it, bitwidths widen identically, banking and
+# pipelining map per DESIGN.md section 2. "Bus width" and "host CPU" rows are
+# system-level parameters handled by the DSE's analytic DMA model (isa.py)
+# and the bench harness, not by the kernel config; they keep baseline kernel
+# parameters here.
+# ---------------------------------------------------------------------------
+_BASE = GemminiConfig()
+
+DESIGN_POINTS: Mapping[int, GemminiConfig] = {
+    1: _BASE,                                                     # baseline (OS)
+    2: _BASE.replace(dataflow=Dataflow.WS),                       # WS
+    3: _BASE.replace(dataflow=Dataflow.BOTH),                     # OS + WS runtime
+    4: _BASE.replace(input_dtype="fp32", acc_dtype="fp32",        # 32b in / 32b acc
+                     output_dtype="fp32"),
+    5: _BASE.replace(dim=256),                                    # 32x32 (2x DIM)
+    6: _BASE.replace(pipeline_depth=1),                           # fully combinational
+    7: _BASE.replace(scratchpad_bytes=32 * 1024 * 1024),          # 4x scratchpad
+    8: _BASE.replace(banks=8),                                    # more banks
+    9: _BASE,                                                     # bus width (DMA model)
+    10: _BASE,                                                    # host CPU (bench-level)
+}
+
+# Which Table-1 rows are kernel-level vs system-level (evaluated where).
+SYSTEM_LEVEL_POINTS = {9: "bus_width_64b", 10: "host_cpu_boom"}
+
+# ---------------------------------------------------------------------------
+# Paper-native design points (Table 1 at its ORIGINAL scale: 16x16 int8
+# array, 64 KiB scratchpad). These drive the analytic ISA/DSE reproduction
+# of the paper's own tables -- dims here are PE counts, not MXU tiles, so
+# they are never lowered to Pallas. DESIGN_POINTS above are the TPU-scaled
+# retargeting used by the kernels.
+# ---------------------------------------------------------------------------
+_PAPER_BASE = GemminiConfig(
+    dim=16, scratchpad_bytes=64 * 1024, accumulator_bytes=16 * 1024,
+    banks=5, pipeline_depth=2)
+
+PAPER_DESIGN_POINTS: Mapping[int, GemminiConfig] = {
+    1: _PAPER_BASE,                                              # baseline OS
+    2: _PAPER_BASE.replace(dataflow=Dataflow.WS),                # WS
+    3: _PAPER_BASE.replace(dataflow=Dataflow.BOTH),              # OS + WS
+    4: _PAPER_BASE.replace(input_dtype="fp32", acc_dtype="fp32",
+                           output_dtype="fp32"),                 # 32b in
+    5: _PAPER_BASE.replace(dim=32, accumulator_bytes=64 * 1024), # 32x32
+    6: _PAPER_BASE.replace(pipeline_depth=1),                    # combinational
+    7: _PAPER_BASE.replace(scratchpad_bytes=256 * 1024,          # 4x spad
+                           accumulator_bytes=64 * 1024),         # (paper sec.4
+                                                                 # pairs 256K/64K)
+    8: _PAPER_BASE.replace(banks=33),                            # more banks
+    9: _PAPER_BASE,                                              # narrow bus
+    10: _PAPER_BASE,                                             # BOOM host
+}

@@ -1,0 +1,77 @@
+"""Optimization switches for the perf-iteration loop (EXPERIMENTS.md §Perf).
+
+Each flag gates one beyond-paper optimization so the paper-faithful
+baseline and the optimized variant can be lowered from the same source
+tree and compared cell-by-cell. The dry-run CLI sets them via
+``--opt name[=value]``; tests pin them explicitly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+_DEFAULTS: Dict[str, Any] = {
+    # A: update KV caches with a one-hot select instead of
+    # dynamic-update-slice (DUS on a sequence-sharded cache forces the
+    # partitioner to all-gather the whole cache; select is elementwise and
+    # sharding-preserving).
+    "onehot_cache_update": False,
+    # B: group MoE dispatch per data-parallel shard so the scatter-add /
+    # gather stay shard-local and the expert regroup lowers to an
+    # all-to-all instead of a full-buffer all-reduce.
+    "moe_grouped_dispatch": 0,      # truthy = group by the mesh shard grid
+    # C: activation-rematerialization policy for the train step:
+    # "full" (paper-style minimal residency), "dots" (save MXU outputs,
+    # recompute elementwise), "none" (save everything).
+    "remat_policy": "full",
+    # A3: carry the stacked KV/SSM caches through the layer scan and
+    # dynamic-update-slice the current layer's slice in place, instead of
+    # streaming them through scan xs/ys. The xs/ys path makes XLA stage the
+    # stack through f32 convert round-trips and a non-in-place update
+    # fusion that rewrites the WHOLE stack every layer (measured 15 GB /
+    # device/token on gemma2-2b @ 500k).
+    "cache_as_carry": False,
+    # A4: unroll the decode layer loop: static layer indices turn every
+    # cache update into an in-place static-index DUS and remove the scan's
+    # xs/ys staging entirely (decode bodies are small; HLO size is fine).
+    "decode_unroll": False,
+    # A2: grouped-GQA decode attention: contract per KV-head group with
+    # einsum batch dims instead of jnp.repeat-ing K/V up to H heads.
+    # repeat materializes an H-wide cache copy AND breaks the partitioner's
+    # sharding propagation on the sequence axis (measured: SPMD falls back
+    # to "involuntary full rematerialization" = all-gather of the cache).
+    "gqa_grouped_decode": False,
+}
+
+_values: Dict[str, Any] = dict(_DEFAULTS)
+
+
+def get(name: str) -> Any:
+    return _values[name]
+
+
+def set_flag(name: str, value: Any) -> None:
+    if name not in _DEFAULTS:
+        raise KeyError(f"unknown flag {name!r}; have {sorted(_DEFAULTS)}")
+    _values[name] = value
+
+
+def reset() -> None:
+    _values.clear()
+    _values.update(_DEFAULTS)
+
+
+def parse_opt(spec: str) -> None:
+    """``name`` (-> True) or ``name=value`` with int/bool coercion."""
+    if "=" in spec:
+        name, raw = spec.split("=", 1)
+        if raw.lower() in ("true", "false"):
+            val: Any = raw.lower() == "true"
+        else:
+            try:
+                val = int(raw)
+            except ValueError:
+                val = raw
+    else:
+        name, val = spec, True
+    set_flag(name, val)

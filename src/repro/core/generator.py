@@ -1,0 +1,86 @@
+"""Elaboration: GemminiConfig -> a concrete accelerator instance.
+
+``elaborate(cfg)`` is the analogue of running the Chisel generator: it
+produces a :class:`GemminiInstance` holding
+
+  * ``gemm`` / ``matmul`` / ``conv2d``: the engine entry points (dispatching
+    to the Pallas kernels on TPU or the XLA path for SPMD dry-runs),
+  * ``header``: the "generated header file" of tiling parameters the software
+    library compiles against (paper section 2.3),
+  * the analytic DMA model used by the DSE.
+
+The model zoo (src/repro/models) takes a GemminiInstance so the paper's
+engine is the compute substrate of every assigned architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core.config import Activation, Dataflow, GemminiConfig
+from repro.core.tiling import TilePlan, plan_gemm
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class GemminiInstance:
+    """One elaborated accelerator + its co-designed software parameters."""
+
+    cfg: GemminiConfig
+    backend: str = "xla"   # "pallas" on real TPUs; "xla" for SPMD dry-runs;
+                           # "interpret" in kernel tests.
+
+    # -- engine entry points ----------------------------------------------
+    def gemm(self, a, b, d=None, *, dataflow: Optional[Dataflow] = None,
+             shift: int = 0, activation: Activation = Activation.NONE,
+             plan: Optional[TilePlan] = None):
+        return ops.gemm(a, b, d, cfg=self.cfg, plan=plan, dataflow=dataflow,
+                        shift=shift, activation=activation,
+                        backend=self.backend)
+
+    def matmul(self, a, b, **kw):
+        return ops.matmul(a, b, cfg=self.cfg, backend=self.backend, **kw)
+
+    def conv2d(self, x, w, b=None, **kw):
+        return ops.conv2d(x, w, b, cfg=self.cfg, backend=self.backend, **kw)
+
+    # -- the generated "header file" ---------------------------------------
+    def header(self, m: int, n: int, k: int, *,
+               dataflow: Optional[Dataflow] = None,
+               has_bias: bool = False) -> Dict[str, Any]:
+        """Tiling parameters for an (m, n, k) GEMM, as the generator emits
+        them for the software library."""
+        plan = plan_gemm(self.cfg, m, n, k, dataflow=dataflow,
+                         has_bias=has_bias)
+        return {
+            "DIM": self.cfg.dim,
+            "TILE_M": plan.tile_m, "TILE_N": plan.tile_n,
+            "TILE_K": plan.tile_k, "GRID": plan.grid,
+            "SPAD_BYTES": self.cfg.scratchpad_bytes,
+            "ACC_BYTES": self.cfg.accumulator_bytes,
+            "DATAFLOW": plan.dataflow.value,
+            "UTILIZATION": plan.utilization,
+            "ARITH_INTENSITY": plan.arithmetic_intensity,
+        }
+
+    def plan(self, m: int, n: int, k: int, **kw) -> TilePlan:
+        return plan_gemm(self.cfg, m, n, k, **kw)
+
+    def with_backend(self, backend: str) -> "GemminiInstance":
+        return dataclasses.replace(self, backend=backend)
+
+
+@functools.lru_cache(maxsize=64)
+def elaborate(cfg: GemminiConfig, backend: str = "xla") -> GemminiInstance:
+    """Run the generator: validate the parameterization and build an instance."""
+    # Elaboration-time legality checks (the Chisel generator's require()s).
+    min_tile = cfg.dim * cfg.dim
+    if cfg.accumulator_bytes < min_tile * jnp.dtype(cfg.acc_jnp).itemsize:
+        raise ValueError("accumulator cannot hold one output tile")
+    if backend not in ("xla", "pallas", "interpret"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return GemminiInstance(cfg=cfg, backend=backend)

@@ -1,0 +1,139 @@
+"""Quantization numerics of the Gemmini datapath (paper sections 2.1-2.2).
+
+Gemmini accumulates int8 x int8 products into 32-bit accumulators and scales
+the result back down with a *rounding, saturating bitshift* ("Gemmini saturates
+and rounds such scaling operations to the nearest bit in order to maximize
+accuracy", citing Jacob et al. [18]).  This module implements those exact
+numerics as pure-jnp functions shared by the Pallas kernel epilogue, the XLA
+fallback path, and the ref oracle -- so all three are bit-identical.
+
+Also provides the host-side helpers the software library needs: per-tensor
+scale calibration, fake-quant for accuracy experiments, and the
+multiplier+shift decomposition used when a real-valued rescale must run on
+integer hardware (gemmlowp-style fixed-point multiply).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rounding_shift(x: jnp.ndarray, shift) -> jnp.ndarray:
+    """Round-half-to-even right shift of an integer tensor (Gemmini's unit).
+
+    Equivalent to round(x / 2**shift) with ties-to-even, computed purely with
+    integer ops so it lowers to the same arithmetic the PE's bitshift unit
+    performs. ``shift`` may be a python int or a traced int32 scalar; shift=0
+    is the identity.
+    """
+    x = x.astype(jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+
+    def do_shift(x):
+        half = jnp.left_shift(jnp.int32(1), shift - 1)
+        frac = jnp.bitwise_and(x, jnp.left_shift(jnp.int32(1), shift) - 1)
+        shifted = jnp.right_shift(x, shift)  # arithmetic shift (floor)
+        # round half to even: bump when frac > half, or frac == half and odd.
+        bump = (frac > half) | ((frac == half) & (jnp.bitwise_and(shifted, 1) == 1))
+        return shifted + bump.astype(jnp.int32)
+
+    return jnp.where(shift > 0, do_shift(x), x)
+
+
+def saturate(x: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Saturating cast to a narrower integer dtype."""
+    info = jnp.iinfo(dtype)
+    return jnp.clip(x, info.min, info.max).astype(dtype)
+
+
+def scale_and_saturate(acc: jnp.ndarray, shift, out_dtype) -> jnp.ndarray:
+    """The accumulator-output path: rounding shift then saturating cast."""
+    return saturate(rounding_shift(acc, shift), out_dtype)
+
+
+def quantize_multiplier(scale: float) -> Tuple[int, int]:
+    """Decompose a real rescale into (int32 multiplier, right shift).
+
+    gemmlowp-style: scale ~= multiplier * 2**-shift with multiplier in
+    [2**30, 2**31). Used when layers need non-power-of-two rescales on the
+    integer datapath.
+    """
+    if scale <= 0:
+        raise ValueError("scale must be positive")
+    mant, exp = np.frexp(scale)            # scale = mant * 2**exp, mant in [0.5,1)
+    q = int(np.round(mant * (1 << 31)))
+    if q == (1 << 31):
+        q //= 2
+        exp += 1
+    shift = 31 - exp
+    if shift < 0:
+        raise ValueError(f"scale {scale} too large for fixed-point path")
+    return q, int(shift)
+
+
+def fixed_point_rescale(acc, multiplier: int, shift: int) -> np.ndarray:
+    """int32 acc * (multiplier * 2**-shift) on integer arithmetic.
+
+    Implements SaturatingRoundingDoublingHighMul + rounding shift, matching
+    the quantized-inference reference of Jacob et al. [18]. Host-side
+    (numpy int64): the *device* datapath uses the paper's power-of-two
+    rounding bitshift (``rounding_shift``); non-power-of-two per-tensor
+    rescales are resolved to (multiplier, shift) on the host at calibration
+    time, exactly as the Gemmini software library bakes them into the
+    generated header. (Not jittable: JAX CPU runs with x64 disabled, which
+    would silently truncate the 62-bit product.)
+    """
+    acc64 = np.asarray(acc, np.int64)
+    prod = acc64 * np.int64(multiplier)
+    nudge = np.where(prod >= 0, np.int64(1) << 30,
+                     np.int64(1) - (np.int64(1) << 30))
+    q64 = prod + nudge
+    # gemmlowp divides by 2^31 truncating toward zero (not a floor shift)
+    high = np.sign(q64) * (np.abs(q64) >> 31)     # fits in int32
+    rs = shift - 31
+    if rs <= 0:                                   # scale >= 1: left shift
+        return (high << (-rs)).astype(np.int32)
+    # round-half-to-even right shift of the remaining factor
+    half = np.int64(1) << (rs - 1)
+    frac = high & ((np.int64(1) << rs) - 1)
+    shifted = high >> rs
+    bump = (frac > half) | ((frac == half) & ((shifted & 1) == 1))
+    return (shifted + bump).astype(np.int32)
+
+
+def calibrate_symmetric(x: jnp.ndarray, dtype=jnp.int8) -> float:
+    """Per-tensor symmetric scale: max|x| mapped to the dtype max."""
+    amax = float(jnp.max(jnp.abs(x)))
+    qmax = jnp.iinfo(dtype).max
+    return (amax / qmax) if amax > 0 else 1.0
+
+
+def quantize(x: jnp.ndarray, scale: float, dtype=jnp.int8) -> jnp.ndarray:
+    info = jnp.iinfo(dtype)
+    q = jnp.round(x / scale)
+    return jnp.clip(q, info.min, info.max).astype(dtype)
+
+
+def dequantize(q: jnp.ndarray, scale: float) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jnp.ndarray, scale: float, dtype=jnp.int8) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through gradient estimator."""
+
+    @jax.custom_vjp
+    def _fq(x):
+        return dequantize(quantize(x, scale, dtype), scale)
+
+    def fwd(x):
+        return _fq(x), None
+
+    def bwd(_, g):
+        return (g,)
+
+    _fq.defvjp(fwd, bwd)
+    return _fq(x)

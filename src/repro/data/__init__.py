@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLMConfig, SyntheticLM,
+                                 make_global_batch)
+
+__all__ = ["SyntheticLMConfig", "SyntheticLM", "make_global_batch"]

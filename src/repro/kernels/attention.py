@@ -1,0 +1,267 @@
+"""Flash attention as a Pallas TPU kernel (the LM-serving hot spot).
+
+Supports everything the assigned architectures need: grouped-query attention
+(any H/KVH ratio incl. MQA), causal masking, sliding-window "local" layers,
+gemma-2 logit soft-capping, and non-square Tq != Tk (cache-backed prefill).
+
+Schedule (TPU-native, re-derived for HBM->VMEM->MXU per DESIGN.md):
+  grid = (B, H, nq, nk) with the KV axis innermost ("arbitrary" = sequential,
+  enabling the carried online-softmax state). The q tile is resident in VMEM
+  across the KV stream -- this is exactly the Gemmini *output-stationary*
+  dataflow applied to attention: the output accumulator (acc, m, l) stays in
+  the wide-precision scratch while K/V tiles stream past, and the epilogue
+  (1/l normalization) runs on the last KV step, like the OS GEMM's
+  rounding-shift epilogue on the last K step.
+
+Block-skipping: fully-masked KV blocks (beyond the causal frontier or
+outside the sliding window) are skipped via ``pl.when``, so local-attention
+layers do O(T*window) work, not O(T^2) -- the kernel-level reason gemma3's
+5:1 local:global pattern makes 128k context affordable.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 nk: int, block_q: int, block_k: int, tq: int, tk: int,
+                 causal: bool, window: Optional[int],
+                 softcap: Optional[float], scale: float):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # global positions; queries are right-aligned against the keys
+    q0 = i * block_q + (tk - tq)
+    k0 = j * block_k
+
+    # ---- whole-block skip test (static-shape friendly) -------------------
+    # block live iff some (qpos, kpos) pair is unmasked:
+    #   causal:  k0 <= q0 + block_q - 1
+    #   window:  k0 + block_k - 1 > q0 - window
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (k0 <= q0 + block_q - 1)
+    if window is not None:
+        live = live & (k0 + block_k - 1 > q0 - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < tk                                   # kv padding
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Tq, H, D); k/v: (B, Tk, KVH, D); returns (B, Tq, H, D).
+
+    ``window``: sliding-window size for local layers (None = global).
+    """
+    b, tq, h, d = q.shape
+    _, tk, kvh, _ = k.shape
+    if h % kvh != 0:
+        raise ValueError(f"H={h} not a multiple of KVH={kvh}")
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(tq, 8))
+    block_k = min(block_k, max(tk, 8))
+    nq = -(-tq // block_q)
+    nk = -(-tk // block_k)
+    pad_q = nq * block_q - tq
+    pad_k = nk * block_k - tk
+
+    # (B, H, T, D) layout: last-two-dim tiles are (block, D) -- MXU-aligned.
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    rep = h // kvh
+    kernel = functools.partial(
+        _attn_kernel, nk=nk, block_q=block_q, block_k=block_k,
+        tq=tq, tk=tk, causal=causal, window=window, softcap=softcap,
+        scale=sc)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, i, j: (bb, hh // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, i, j: (bb, hh // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :tq]
+    return jnp.moveaxis(out, 1, 2)   # back to (B, Tq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# single-token decode kernel: one query row vs a long KV cache
+# ---------------------------------------------------------------------------
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, nk: int, block_k: int,
+                   window: Optional[int], softcap: Optional[float],
+                   scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = len_ref[0]                     # current position (keys <= pos live)
+    k0 = j * block_k
+    live = k0 <= pos
+    if window is not None:
+        live = live & (k0 + block_k - 1 > pos - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale           # (H, D) heads tile
+        k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (H, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None, block_k: int = 1024,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B, 1, H, D) vs cache k/v: (B, S, KVH, D); pos: scalar int32.
+
+    The per-(batch) grid streams KV blocks while the H query rows stay
+    resident; MQA/GQA is handled by flattening each query-group's heads into
+    the rows of a single (H_per_group, D) matmul tile.
+    """
+    b, tq, h, d = q.shape
+    assert tq == 1
+    _, s, kvh, _ = k.shape
+    rep = h // kvh
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_k = min(block_k, s)
+    nk = -(-s // block_k)
+    pad_k = nk * block_k - s
+
+    # (B*KVH, rep, D) query rows; (B*KVH, S, D) caches
+    qg = q[:, 0].reshape(b, kvh, rep, d).reshape(b * kvh, rep, d)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * kvh, s, d)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * kvh, s, d)
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad_k), (0, 0)))
+    lens = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b * kvh,))
+
+    kernel = functools.partial(_decode_kernel, nk=nk, block_k=block_k,
+                               window=window, softcap=softcap, scale=sc)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, nk),
+        in_specs=[
+            pl.BlockSpec((1, rep, d), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((1,), lambda g, j: (g,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, rep, d), lambda g, j: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qg, kt, vt, lens)
+    return out.reshape(b, kvh * rep, d)[:, None].reshape(b, 1, h, d)

@@ -1,0 +1,59 @@
+"""Shared accumulator->output epilogue used inside Pallas kernels.
+
+Implements the Gemmini peripheral circuitry (paper section 2.1): rounding
+bitshift, saturation to the output bitwidth, and the activation units
+(ReLU / ReLU6; GELU/SiLU added for the LM model zoo). Written against plain
+jnp ops on values (not refs) so the identical code runs inside a Pallas
+kernel body, in the XLA fallback path, and in the ref oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Activation
+
+
+def _rounding_shift(x, shift: int):
+    # Static-shift variant of core.quantize.rounding_shift (kernel-friendly:
+    # no jnp.where over traced shift).
+    if shift <= 0:
+        return x
+    half = 1 << (shift - 1)
+    frac = jnp.bitwise_and(x, (1 << shift) - 1)
+    shifted = jax.lax.shift_right_arithmetic(x, shift)
+    bump = (frac > half) | ((frac == half) & (jnp.bitwise_and(shifted, 1) == 1))
+    return shifted + bump.astype(x.dtype)
+
+
+def activate(x, activation: Activation):
+    if activation is Activation.NONE:
+        return x
+    if activation is Activation.RELU:
+        return jnp.maximum(x, 0)
+    if activation is Activation.RELU6:
+        six = jnp.asarray(6, x.dtype) if jnp.issubdtype(x.dtype, jnp.integer) \
+            else jnp.asarray(6.0, x.dtype)
+        return jnp.clip(x, 0, six)
+    if activation is Activation.GELU:
+        return jax.nn.gelu(x)
+    if activation is Activation.SILU:
+        return x * jax.nn.sigmoid(x)
+    raise ValueError(activation)
+
+
+def apply(acc, *, shift: int, activation: Activation, out_dtype):
+    """acc (int32 or fp32) -> activation(round_shift(acc)) saturated to out."""
+    if jnp.issubdtype(acc.dtype, jnp.integer):
+        y = _rounding_shift(acc.astype(jnp.int32), shift)
+        y = activate(y, activation)
+        if jnp.issubdtype(jnp.dtype(out_dtype), jnp.integer) and \
+                jnp.dtype(out_dtype) != jnp.int32:
+            info = jnp.iinfo(out_dtype)
+            y = jnp.clip(y, info.min, info.max)
+        return y.astype(out_dtype)
+    y = activate(acc, activation)
+    if shift:
+        y = y / (2.0 ** shift)
+    return y.astype(out_dtype)

@@ -1,0 +1,200 @@
+"""Gemmini-generated tiled GEMM as Pallas TPU kernels.
+
+This is the elaborated "systolic array instance": ``C = A @ B + D`` with the
+paper's two dataflows, datatype genericity (int8->int32 quantized path and
+bf16/fp32 float paths), fused bias, fused activation, and the
+rounding/saturating-bitshift output scaling of the quantized datapath.
+
+Dataflow mapping (DESIGN.md section 2):
+
+* **OS (output-stationary)** -- grid (gm, gn, gk) with K innermost
+  ("arbitrary" semantics). The C tile lives in a wider-bitwidth VMEM
+  accumulator scratch across the K stream (the PE-resident accumulators of
+  the paper), and the epilogue -- rounding bitshift, saturation, activation --
+  is applied *inside the kernel* on the last K step ("within PEs (for the
+  output-stationary dataflow)").
+
+* **WS (weight-stationary)** -- grid (gn, gk, gm) with M innermost. The B
+  (weight) tile's block index is constant along the inner M axis, so the
+  weight block stays resident in VMEM while A tiles stream past it -- the
+  preloaded PE weight buffer. Partial sums are accumulated through an
+  aliased accumulator operand (read-modify-write), which is the paper's
+  accumulator-SRAM-with-input-adders. The epilogue runs as a separate pass
+  over the accumulator (``accumulator_epilogue``), matching "at the output of
+  the accumulator (for the weight-stationary dataflow)". A bias D is applied
+  by initializing the accumulator with it ("executing a mvin into the
+  accumulator").
+
+Both kernels double-buffer streamed operands through the Pallas grid pipeline
+(pipeline_depth=2 in the generator config); pipeline_depth=1 ("fully
+combinational" analogue) is emulated by forcing a serial grid.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.config import Activation, Dataflow, GemminiConfig
+from repro.core.tiling import TilePlan
+from repro.kernels import epilogue as epi
+
+
+# ---------------------------------------------------------------------------
+# Output-stationary kernel
+# ---------------------------------------------------------------------------
+def _os_kernel(a_ref, b_ref, d_ref, c_ref, acc_ref, *, nk: int,
+               acc_dtype, out_dtype, shift: int, activation: Activation,
+               has_bias: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        if has_bias:
+            # D is preloaded into the PE accumulators (paper fig. 4, step 1).
+            acc_ref[...] = d_ref[...].astype(acc_dtype)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=acc_dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        c_ref[...] = epi.apply(acc_ref[...], shift=shift,
+                               activation=activation, out_dtype=out_dtype)
+
+
+def gemm_os(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
+            plan: TilePlan, cfg: GemminiConfig, *, shift: int = 0,
+            activation: Activation = Activation.NONE,
+            interpret: bool = False) -> jnp.ndarray:
+    """Output-stationary GEMM on padded operands (shapes divide the tiles)."""
+    m, n, k = plan.m, plan.n, plan.k
+    tm, tn, tk = plan.tile_m, plan.tile_n, plan.tile_k
+    gm, gn, gk = plan.grid
+    assert a.shape == (m, k) and b.shape == (k, n), (a.shape, b.shape)
+    has_bias = d is not None
+    if not has_bias:
+        d = jnp.zeros((1, n), cfg.acc_jnp)  # placeholder operand (never read)
+
+    kernel = functools.partial(
+        _os_kernel, nk=gk, acc_dtype=cfg.acc_jnp, out_dtype=cfg.output_jnp,
+        shift=shift, activation=activation, has_bias=has_bias)
+
+    # pipeline_depth=1 emulation: make every axis "arbitrary" (serial), which
+    # disables cross-iteration overlap in the Mosaic pipeline.
+    if cfg.pipeline_depth == 1:
+        semantics = ("arbitrary", "arbitrary", "arbitrary")
+    else:
+        semantics = ("parallel", "parallel", "arbitrary")
+
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tm if has_bias else 1, tn),
+                         (lambda i, j, kk: (i, j)) if has_bias
+                         else (lambda i, j, kk: (0, j))),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), cfg.output_jnp),
+        scratch_shapes=[pltpu.VMEM((tm, tn), cfg.acc_jnp)],
+        compiler_params=pltpu.CompilerParams(dimension_semantics=semantics),
+        interpret=interpret,
+    )(a, b, d)
+
+
+# ---------------------------------------------------------------------------
+# Weight-stationary kernel
+# ---------------------------------------------------------------------------
+def _ws_kernel(b_ref, a_ref, acc_in_ref, acc_out_ref, *, acc_dtype):
+    # B resident (index constant along inner m axis); A streams; partial sums
+    # accumulate through the aliased accumulator (read-modify-write adders).
+    acc_out_ref[...] = acc_in_ref[...] + jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype)
+
+
+def gemm_ws(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
+            plan: TilePlan, cfg: GemminiConfig, *, shift: int = 0,
+            activation: Activation = Activation.NONE,
+            interpret: bool = False) -> jnp.ndarray:
+    """Weight-stationary GEMM: resident weights, streamed A, aliased acc."""
+    m, n, k = plan.m, plan.n, plan.k
+    tm, tn, tk = plan.tile_m, plan.tile_n, plan.tile_k
+    gm, gn, gk = plan.grid
+    assert a.shape == (m, k) and b.shape == (k, n)
+
+    # mvin D into the accumulator (or zeros) before the compute stream.
+    if d is not None:
+        acc0 = jnp.broadcast_to(d.astype(cfg.acc_jnp), (m, n))
+    else:
+        acc0 = jnp.zeros((m, n), cfg.acc_jnp)
+
+    acc = pl.pallas_call(
+        functools.partial(_ws_kernel, acc_dtype=cfg.acc_jnp),
+        grid=(gn, gk, gm),  # m innermost: weight tile resident across m
+        in_specs=[
+            pl.BlockSpec((tk, tn), lambda j, kk, i: (kk, j)),   # B (resident)
+            pl.BlockSpec((tm, tk), lambda j, kk, i: (i, kk)),   # A (streams)
+            pl.BlockSpec((tm, tn), lambda j, kk, i: (i, j)),    # acc in
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda j, kk, i: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), cfg.acc_jnp),
+        input_output_aliases={2: 0},
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+            if cfg.pipeline_depth > 1 else ("arbitrary",) * 3),
+        interpret=interpret,
+    )(b, a, acc0)
+
+    # Epilogue at the output of the accumulator (paper: WS scaling location).
+    return accumulator_epilogue(acc, plan, cfg, shift=shift,
+                                activation=activation, interpret=interpret)
+
+
+def _epilogue_kernel(acc_ref, c_ref, *, shift, activation, out_dtype):
+    c_ref[...] = epi.apply(acc_ref[...], shift=shift, activation=activation,
+                           out_dtype=out_dtype)
+
+
+def accumulator_epilogue(acc: jnp.ndarray, plan: TilePlan, cfg: GemminiConfig,
+                         *, shift: int = 0,
+                         activation: Activation = Activation.NONE,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Scale/saturate/activate pass over the accumulator (mvout path)."""
+    m, n = acc.shape
+    tm, tn = plan.tile_m, plan.tile_n
+    return pl.pallas_call(
+        functools.partial(_epilogue_kernel, shift=shift, activation=activation,
+                          out_dtype=cfg.output_jnp),
+        grid=(m // tm, n // tn),
+        in_specs=[pl.BlockSpec((tm, tn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), cfg.output_jnp),
+        interpret=interpret,
+    )(acc)
+
+
+def gemm(a, b, d, plan: TilePlan, cfg: GemminiConfig, *,
+         dataflow: Optional[Dataflow] = None, shift: int = 0,
+         activation: Activation = Activation.NONE,
+         interpret: bool = False) -> jnp.ndarray:
+    """Dispatch on the elaborated (or runtime-selected) dataflow."""
+    df = dataflow or plan.dataflow
+    if cfg.dataflow is not Dataflow.BOTH and df is not cfg.dataflow:
+        raise ValueError(f"instance elaborated with {cfg.dataflow}, got {df}")
+    fn = gemm_os if df is Dataflow.OS else gemm_ws
+    return fn(a, b, d, plan, cfg, shift=shift, activation=activation,
+              interpret=interpret)

@@ -1,0 +1,141 @@
+"""Chunked SSD (Mamba-2 state-space duality) as a Pallas TPU kernel.
+
+The SSD decomposition splits the linear recurrence into
+
+  * intra-chunk terms  -- (Q x N)@(N x Q) score GEMMs and (Q x Q)@(Q x P)
+    output GEMMs: dense matmuls that run on the MXU; *this* is the part the
+    Gemmini technique covers (the paper's thesis: GEMM is the common kernel),
+  * an inter-chunk recurrence -- a length-``n_chunks`` scan over the (N x P)
+    state, attention-free and sequential; carried in a VMEM scratch across
+    the sequential grid axis.
+
+Schedule: grid = (B, H, nc) with the chunk axis innermost ("arbitrary").
+The (N, P) running state is the resident accumulator (Gemmini
+output-stationary residency applied to the SSM state); per chunk the kernel
+performs only 2-D dots:
+
+  scores  = C (Q,N) @ B^T (N,Q)               [MXU]
+  y_diag  = (scores * L * dt) (Q,Q) @ X (Q,P) [MXU]
+  y_off   = exp(seg) * (C (Q,N) @ state (N,P))[MXU]
+  state   = decay * state + (w * B)^T (N,Q) @ X (Q,P)  [MXU]
+
+B/C group mapping (G groups shared GQA-style across H heads) is resolved in
+the BlockSpec index maps, so no repeat/gather materializes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                nc: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0]                                   # scalar: -exp(a_log)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)       # (Q,)
+    x = x_ref[0, 0, 0].astype(jnp.float32)         # (Q, P)
+    b = b_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+    c = c_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+
+    dta = dt * a                                   # (Q,)
+    seg = jnp.cumsum(dta)                          # inclusive cumsum
+
+    # intra-chunk decay L[i, j] = exp(seg_i - seg_j) for i >= j else 0
+    li = seg[:, None] - seg[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ldec = jnp.where(ii >= jj, jnp.exp(li), 0.0)
+
+    # scores = C_i . B_j  (Q, Q): a GEMM on the engine schedule
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(scores * ldec * dt[None, :], x,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # contribution of the carried-in state to every step of this chunk
+    y_off = jax.lax.dot_general(c, state_ref[...], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(seg)[:, None]
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: state = exp(seg_Q) * state + sum_j w_j B_j x_j^T
+    decay_to_end = jnp.exp(seg[-1] - seg)          # (Q,)
+    wb = b * (decay_to_end * dt)[:, None]          # (Q, N)
+    ds = jax.lax.dot_general(wb, x, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = state_ref[...] * jnp.exp(seg[-1]) + ds
+
+
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
+        c: jnp.ndarray, *, d_skip: Optional[jnp.ndarray] = None,
+        chunk: int = 256, interpret: bool = False,
+        return_final_state: bool = False):
+    """x: (B,T,H,P), dt: (B,T,H) (softplus'd), a_log: (H,), b/c: (B,T,G,N).
+
+    Returns y: (B,T,H,P) [and the final (B,H,N,P) state if requested].
+    """
+    bsz, t, h, p = x.shape
+    _, _, g, n = b.shape
+    hpg = h // g
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // q
+
+    # (B, H, nc, Q, ...) layouts so the last two dims are MXU tiles
+    xt = jnp.moveaxis(x, 2, 1).reshape(bsz, h, nc, q, p)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(bsz, h, nc, q)
+    bt = jnp.moveaxis(b, 2, 1).reshape(bsz, g, nc, q, n)
+    ct = jnp.moveaxis(c, 2, 1).reshape(bsz, g, nc, q, n)
+    a = -jnp.exp(a_log.astype(jnp.float32))        # (H,)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, chunk=q)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bb, hh, cc: (bb, hh, cc, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bb, hh, cc: (bb, hh, cc, 0)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, q, n),
+                         lambda bb, hh, cc: (bb, hh // hpg, cc, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, n),
+                         lambda bb, hh, cc: (bb, hh // hpg, cc, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q, p),
+                               lambda bb, hh, cc: (bb, hh, cc, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, nc, q, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xt, dtt, a, bt, ct)
+
+    y = jnp.moveaxis(y.reshape(bsz, h, tt, p), 1, 2)[:, :t]   # (B,T,H,P)
+    if d_skip is not None:
+        y = (y.astype(jnp.float32) +
+             d_skip[None, None, :, None] * x[:, :t].astype(jnp.float32)
+             ).astype(x.dtype)
+    if return_final_state:
+        from repro.models.ssm import _final_state
+        _, fs = _final_state(x[:, :t], dt[:, :t], a_log, b[:, :t], c[:, :t])
+        return y, fs
+    return y

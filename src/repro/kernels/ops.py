@@ -1,0 +1,138 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Every op takes a ``backend`` argument:
+
+* ``"pallas"``    -- real TPU lowering (Mosaic). Target deployment path.
+* ``"interpret"`` -- pl.pallas_call(interpret=True): executes the kernel body
+                     in Python on CPU. Used by all kernel tests in this repo.
+* ``"xla"``       -- pure-jnp path (the ref oracle numerics) that XLA can
+                     SPMD-partition; used by the 512-device multi-pod dry-run,
+                     where Mosaic kernels cannot lower on the CPU backend.
+
+The wrappers own shape legalization (zero-padding to the elaborated array
+dimension, exactly as the paper's library zero-pads operands, section 3.3)
+and unpadding of results.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Activation, Dataflow, GemminiConfig
+from repro.core.tiling import TilePlan, plan_gemm
+from repro.kernels import gemm as gemm_kernel
+from repro.kernels import ref as ref_ops
+
+Backend = str  # "pallas" | "interpret" | "xla"
+
+
+def _pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
+         cfg: GemminiConfig, plan: Optional[TilePlan] = None,
+         dataflow: Optional[Dataflow] = None, shift: int = 0,
+         activation: Activation = Activation.NONE,
+         backend: Backend = "xla") -> jnp.ndarray:
+    """C = act(round_shift(A @ B + D)) on the elaborated instance.
+
+    a: (M, K), b: (K, N), d: broadcastable (1|M, N) bias at acc dtype.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
+    if backend == "xla":
+        return ref_ops.gemm_ref(a, b, d, acc_dtype=cfg.acc_jnp,
+                                out_dtype=cfg.output_jnp, shift=shift,
+                                activation=activation)
+    plan = plan or plan_gemm(cfg, m, n, k, dataflow=dataflow,
+                             has_bias=d is not None)
+    ap = _pad2(a, plan.m, plan.k)
+    bp = _pad2(b, plan.k, plan.n)
+    dp = None
+    if d is not None:
+        dp = _pad2(jnp.broadcast_to(d, (m, n)).astype(cfg.acc_jnp),
+                   plan.m, plan.n)
+    out = gemm_kernel.gemm(ap, bp, dp, plan, cfg, dataflow=dataflow,
+                           shift=shift, activation=activation,
+                           interpret=(backend == "interpret"))
+    return out[:m, :n]
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, cfg: GemminiConfig,
+           backend: Backend = "xla", **kw) -> jnp.ndarray:
+    """Batched-LHS matmul: a may be (..., K); collapsed to 2D for the engine."""
+    lead = a.shape[:-1]
+    y = gemm(a.reshape(-1, a.shape[-1]), b, cfg=cfg, backend=backend, **kw)
+    return y.reshape(*lead, b.shape[-1])
+
+
+# -- conv2d -------------------------------------------------------------------
+def conv2d(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
+           padding: int = 0, shift: int = 0,
+           activation: Activation = Activation.NONE,
+           backend: Backend = "xla", fused: bool = False):
+    """Conv2D on the GEMM engine.
+
+    fused=False: explicit im2col on the host then engine GEMM (the paper's
+    shipped design). fused=True: the implicit-im2col Pallas kernel (paper
+    section 7 future work; see kernels/conv.py).
+    """
+    if fused and backend != "xla":
+        from repro.kernels import conv as conv_kernel
+        return conv_kernel.conv2d_implicit(
+            x, w, b, cfg=cfg, stride=stride, padding=padding, shift=shift,
+            activation=activation, interpret=(backend == "interpret"))
+    if backend == "xla":
+        return ref_ops.conv2d_ref(x, w, b, stride=stride, padding=padding,
+                                  acc_dtype=cfg.acc_jnp,
+                                  out_dtype=cfg.output_jnp, shift=shift,
+                                  activation=activation)
+    n, h, wd, c = x.shape
+    kh, kw, _, co = w.shape
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (wd + 2 * padding - kw) // stride + 1
+    a = ref_ops.im2col(x, kh, kw, stride, padding)   # host-side im2col
+    y = gemm(a, w.reshape(-1, co), None if b is None else b[None, :],
+             cfg=cfg, shift=shift, activation=activation, backend=backend)
+    return y.reshape(n, oh, ow, co)
+
+
+# -- attention ---------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    backend: Backend = "xla"):
+    """Blockwise-softmax attention. See kernels/attention.py for the TPU kernel."""
+    if backend == "xla":
+        from repro.models.attention import blockwise_attention_xla
+        return blockwise_attention_xla(q, k, v, causal=causal, window=window,
+                                       softcap=softcap, scale=scale)
+    from repro.kernels import attention as attn_kernel
+    return attn_kernel.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(backend == "interpret"))
+
+
+# -- mamba2 ssd ---------------------------------------------------------------
+def ssd(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
+        backend: Backend = "xla"):
+    """Mamba-2 SSD mixer. See kernels/mamba2.py for the chunked TPU kernel."""
+    if backend == "xla":
+        from repro.models.ssm import ssd_chunked_xla
+        return ssd_chunked_xla(x, dt, a_log, b, c, d_skip=d_skip, chunk=chunk)
+    from repro.kernels import mamba2 as m2
+    return m2.ssd(x, dt, a_log, b, c, d_skip=d_skip, chunk=chunk,
+                  interpret=(backend == "interpret"))

@@ -1,0 +1,141 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each ``*_ref`` is the mathematically-straightforward implementation the
+kernels must match (bit-exactly for the integer datapath; to fp tolerance for
+float paths). Kept dependency-light so tests can sweep shapes/dtypes quickly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import Activation
+from repro.kernels import epilogue as epi
+
+
+# -- GEMM -------------------------------------------------------------------
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
+             *, acc_dtype, out_dtype, shift: int = 0,
+             activation: Activation = Activation.NONE) -> jnp.ndarray:
+    """C = epilogue(A @ B + D) with accumulation in acc_dtype."""
+    acc = jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                              preferred_element_type=acc_dtype)
+    if d is not None:
+        acc = acc + d.astype(acc_dtype)
+    return epi.apply(acc, shift=shift, activation=activation,
+                     out_dtype=out_dtype)
+
+
+# -- Conv2D (explicit im2col, the paper's shipped host-side path) ------------
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int,
+           padding: int) -> jnp.ndarray:
+    """NHWC -> (N*OH*OW, KH*KW*C) patch matrix."""
+    n, h, w, c = x.shape
+    x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    patches = []
+    for i in range(kh):
+        for j in range(kw):
+            patches.append(
+                jax.lax.slice(x, (0, i, j, 0),
+                              (n, i + (oh - 1) * stride + 1,
+                               j + (ow - 1) * stride + 1, c),
+                              (1, stride, stride, 1)))
+    stacked = jnp.stack(patches, axis=3)          # (N, OH, OW, KH*KW, C)
+    return stacked.reshape(n * oh * ow, kh * kw * c)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: Optional[jnp.ndarray],
+               *, stride: int = 1, padding: int = 0, acc_dtype=jnp.int32,
+               out_dtype=jnp.int8, shift: int = 0,
+               activation: Activation = Activation.NONE) -> jnp.ndarray:
+    """Conv2D NHWC x HWIO via explicit im2col + GEMM (paper section 3.3)."""
+    n, h, wd, c = x.shape
+    kh, kw, ci, co = w.shape
+    assert ci == c
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (wd + 2 * padding - kw) // stride + 1
+    a = im2col(x, kh, kw, stride, padding)
+    bmat = w.reshape(kh * kw * c, co)
+    d = None if b is None else b[None, :]
+    y = gemm_ref(a, bmat, d, acc_dtype=acc_dtype, out_dtype=out_dtype,
+                 shift=shift, activation=activation)
+    return y.reshape(n, oh, ow, co)
+
+
+# -- Flash attention oracle ---------------------------------------------------
+def mha_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+            softcap: Optional[float] = None, scale: Optional[float] = None):
+    """Reference multi-head attention.
+
+    q: (B, Tq, H, D); k/v: (B, Tk, KVH, D) with H % KVH == 0 (GQA).
+    window: sliding-window size (local attention) if set.
+    softcap: gemma-2 style logit soft-capping if set.
+    Positions are aligned at the end: query i attends keys <= i + (Tk - Tq).
+    """
+    b, tq, h, dd = q.shape
+    _, tk, kvh, _ = k.shape
+    rep = h // kvh
+    kk = jnp.repeat(k, rep, axis=2)
+    vv = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32))
+    s *= (scale if scale is not None else 1.0 / jnp.sqrt(dd))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# -- Mamba-2 SSD oracle -------------------------------------------------------
+def ssd_ref(x, dt, a_log, b, c, *, d_skip=None):
+    """Naive-recurrence SSD (state-space duality) oracle.
+
+    Shapes (all batch-first, chunk-free):
+      x:     (B, T, H, P)   input heads
+      dt:    (B, T, H)      softplus'd step sizes (already positive)
+      a_log: (H,)           log of -A (per head, scalar SSM)
+      b:     (B, T, G, N)   input->state projections (G state groups)
+      c:     (B, T, G, N)   state->output projections
+    Returns y: (B, T, H, P).  Head h uses group h % G... (G divides H; heads
+    are grouped contiguously: group = h // (H // G)).
+    """
+    bsz, t, h, p = x.shape
+    _, _, g, n = b.shape
+    heads_per_group = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,)
+    dt = dt.astype(jnp.float32)
+    da = jnp.exp(dt * a[None, None, :])                     # (B, T, H) decay
+
+    def step(state, inp):
+        da_t, x_t, dt_t, b_t, c_t = inp
+        # state: (B, H, P, N)
+        b_h = jnp.repeat(b_t, heads_per_group, axis=1)      # (B, H, N)
+        c_h = jnp.repeat(c_t, heads_per_group, axis=1)
+        state = state * da_t[..., None, None] + \
+            (dt_t[..., None] * x_t)[..., None] * b_h[:, :, None, :]
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_h)
+        return state, y_t
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    y = jnp.moveaxis(ys, 0, 1)                              # (B, T, H, P)
+    if d_skip is not None:
+        y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)

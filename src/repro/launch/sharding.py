@@ -1,0 +1,216 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Strategy (DESIGN.md section 4): TP over ``model`` for weights (head / ff /
+expert dims), DP over ``pod``x``data`` for the batch, ZeRO-1 over the DP
+domain for optimizer state, sequence-sharded storage for the layer-scan
+residual (Megatron-style SP), and sequence-sharded KV caches for decode.
+
+Divisibility-safe by construction: every rule asks :func:`_first_divisible`
+for the highest-priority tensor dim actually divisible by the mesh-axis
+size, falling back to replication -- this is what makes one rule set work
+across all 10 archs (56 heads, 40 experts, odd vocabs, ...).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models.transformer import ModelConfig
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _first_divisible(shape: Sequence[int], mesh, axis,
+                     priority: Sequence[int]) -> Optional[int]:
+    n = _axis_size(mesh, axis)
+    for dim in priority:
+        if dim < len(shape) and shape[dim] % n == 0 and shape[dim] >= n:
+            return dim
+    return None
+
+
+def _spec_with(shape, ndim, mesh, axis, priority) -> P:
+    dim = _first_divisible(shape, mesh, axis, priority)
+    entries: list = [None] * ndim
+    if dim is not None:
+        entries[dim] = axis
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (path-pattern -> dim priority for the `model` axis)
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# priority lists are dim indices *from the right* (negative), so the same
+# rule covers stacked (L, ...) block params and unstacked params.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[int, ...]], ...] = (
+    ("attn/wq",   (-1, -2)),
+    ("attn/wk",   (-1, -2)),
+    ("attn/wv",   (-1, -2)),
+    ("attn/wo",   (-2, -1)),
+    ("attn/bq",   (-1,)),
+    ("attn/bk",   (-1,)),
+    ("attn/bv",   (-1,)),
+    ("mlp/wi",    (-1, -2)),
+    ("mlp/wg",    (-1, -2)),
+    ("mlp/wo",    (-2, -1)),
+    ("moe/router", (-1,)),
+    ("moe/wi",    (-3, -1)),     # expert dim (EP), else ff
+    ("moe/wg",    (-3, -1)),
+    ("moe/wo",    (-3, -2)),
+    ("shared/wi", (-1, -2)),
+    ("shared/wg", (-1, -2)),
+    ("shared/wo", (-2, -1)),
+    ("mamba/in_proj",  (-1, -2)),
+    ("mamba/out_proj", (-2, -1)),
+    ("mamba/conv_w",   (-1,)),
+    ("mamba/a_log",    (-1,)),
+    ("mamba/d_skip",   (-1,)),
+    ("mamba/dt_bias",  (-1,)),
+    ("heads",     (-1, -2)),     # musicgen output heads: vocab else d
+    ("unembed",   (-1, -2)),
+    ("embed",     (-2, -1)),     # vocab else d_model
+    ("meta_tokens", ()),
+)
+
+
+def param_spec(path, leaf, mesh) -> P:
+    ps = _path_str(path)
+    shape = leaf.shape
+    for pat, prio in _PARAM_RULES:
+        if pat in ps:
+            prio_abs = [len(shape) + d for d in prio]
+            return _spec_with(shape, len(shape), mesh, "model", prio_abs)
+    return P()   # norms, scalars: replicated
+
+
+def param_specs(params_shape, mesh) -> Any:
+    """Pytree of PartitionSpecs for a params (ShapeDtypeStruct) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh), params_shape)
+
+
+def opt_state_specs(params_shape, mesh) -> Dict[str, Any]:
+    """ZeRO-1: m/v take the param spec extended with a DP-axis shard on the
+    highest-priority still-unsharded divisible dim."""
+    dp = mesh_lib.data_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+
+    def mv_spec(path, leaf):
+        base = param_spec(path, leaf, mesh)
+        entries = list(base) + [None] * (len(leaf.shape) - len(base))
+        # try to extend with dp on an unsharded divisible dim (prefer last
+        # dims: big vocab/ff/d axes; avoid dim 0 = layer stack, usually odd)
+        n = _axis_size(mesh, dp_ax)
+        for dim in range(len(leaf.shape) - 1, -1, -1):
+            if entries[dim] is None and leaf.shape[dim] % n == 0 \
+                    and leaf.shape[dim] >= n:
+                entries[dim] = dp_ax
+                break
+        return P(*entries)
+
+    mv = jax.tree_util.tree_map_with_path(mv_spec, params_shape)
+    return {"m": mv, "v": mv, "count": P()}
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache rules
+# ---------------------------------------------------------------------------
+def batch_spec(mesh) -> P:
+    dp = mesh_lib.data_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def tokens_spec(mesh, batch: int, ndim: int = 2) -> P:
+    """(B, T[, n_q]) token arrays; replicate if B not divisible (long_500k)."""
+    dp = mesh_lib.data_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    if batch % _axis_size(mesh, dp_ax) != 0:
+        return P(*([None] * ndim))
+    return P(*([dp_ax] + [None] * (ndim - 1)))
+
+
+def residual_spec(cfg: ModelConfig, mesh, batch: int, seq: int) -> P:
+    """Layer-scan carry (B, T, D): DP batch + sequence-parallel T storage."""
+    dp = mesh_lib.data_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    b_ok = batch % _axis_size(mesh, dp_ax) == 0
+    t_ok = seq % mesh.shape["model"] == 0 and seq >= mesh.shape["model"]
+    return P(dp_ax if b_ok else None, "model" if t_ok else None, None)
+
+
+def logits_spec(cfg: ModelConfig, mesh, batch: int) -> P:
+    dp = mesh_lib.data_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    b_ok = batch % _axis_size(mesh, dp_ax) == 0
+    v_ok = cfg.vocab % mesh.shape["model"] == 0
+    base = [dp_ax if b_ok else None, None]
+    if cfg.n_codebooks > 1:
+        base.append(None)
+    base.append("model" if v_ok else None)
+    return P(*base)
+
+
+def decode_state_specs(cfg: ModelConfig, mesh, batch: int, max_seq: int
+                       ) -> Any:
+    """Specs for transformer.DecodeState (kv_k, kv_v, conv, ssm, pos)."""
+    dp = mesh_lib.data_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    b_ok = batch % _axis_size(mesh, dp_ax) == 0
+    bs = dp_ax if b_ok else None
+
+    kv = conv = st = None
+    if cfg.has_attn:
+        if b_ok:
+            # (L, B, S, KVH, D): batch over DP, sequence over model
+            kv = P(None, bs, "model", None, None)
+        else:
+            # long_500k (B=1): sequence over the whole mesh
+            seq_ax = tuple(mesh.axis_names)
+            kv = P(None, None, seq_ax, None, None)
+    if cfg.has_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.d_state
+        conv_entries = [None, bs, None, None]
+        if conv_dim % mesh.shape["model"] == 0:
+            conv_entries[3] = "model"
+        conv = P(*conv_entries)
+        # (L, B, H, N, P): heads over model if divisible, else N, else P
+        sshape = (cfg.n_layers, batch, cfg.n_ssm_heads, cfg.d_state,
+                  cfg.ssm_head_dim)
+        dim = _first_divisible(sshape, mesh, "model", (2, 3, 4))
+        entries = [None, bs, None, None, None]
+        if dim is not None:
+            entries[dim] = "model"
+        st = P(*entries)
+    from repro.models.transformer import DecodeState
+    return DecodeState(kv_k=kv, kv_v=kv, conv=conv, ssm=st, pos=P())
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,231 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded dispatch.
+
+Covers granite-moe (40 experts, top-8, tiny d_ff=512) and llama4-scout
+(16 experts, top-1, + shared expert). Design notes:
+
+* **Dispatch** is scatter/gather based (deterministic, SPMD-friendly): each
+  token's top-k choices compute a position-in-expert via a per-expert cumsum
+  over the (batch-local) token axis; tokens beyond the expert capacity are
+  dropped (standard GShard/Switch semantics, capacity_factor configurable).
+  This avoids materializing a (tokens, E, capacity) one-hot and keeps
+  HLO FLOPs equal to *active* FLOPs, so the roofline "useful compute" ratio
+  stays honest.
+
+* **Expert parallelism**: expert weights are stacked on a leading E axis and
+  sharded over the ``model`` mesh axis. When E is not divisible by the EP
+  degree (granite: 40 experts on 16-way model axis), experts are padded to
+  the next multiple (48) and the router logits of padded experts are masked
+  to -inf -- uneven GSPMD shardings are rejected by JAX, and padding is the
+  production-standard workaround (documented in DESIGN.md).
+
+* The expert FFNs themselves are batched GEMMs, i.e. they run on the
+  Gemmini engine schedule -- the paper's technique applied at the MoE layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generator import GemminiInstance
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+def pad_experts(n_experts: int, ep: int) -> int:
+    """Number of expert slots after padding to the EP degree."""
+    return ((n_experts + ep - 1) // ep) * ep
+
+
+def _dispatch_grid(b: int, t: int):
+    """(groups, (gb, gt) or None) for the grouped-dispatch perf flag.
+
+    gb x gt mirrors the mesh's (data-parallel x model) shard grid so every
+    group is device-local. Returns (1, None) when the flag is off, the mesh
+    is unavailable, or shapes do not divide.
+    """
+    import jax.sharding as js
+    from repro.core import flags
+    if not flags.get("moe_grouped_dispatch"):
+        return 1, None
+    try:
+        mesh = js.get_abstract_mesh()
+    except Exception:               # noqa
+        return 1, None
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return 1, None
+    gb = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            gb *= mesh.shape[ax]
+    gt = mesh.shape["model"]
+    if gb < 1 or gt < 1 or b % gb or t % gt:
+        return 1, None
+    return gb * gt, (gb, gt)
+
+
+def moe_init(key, d: int, d_ff: int, n_experts: int, *, ep: int = 1,
+             n_shared: int = 0, d_ff_shared: Optional[int] = None,
+             dtype=jnp.bfloat16) -> Params:
+    e_pad = pad_experts(n_experts, ep)
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": layers.dense_init(ks[0], d, e_pad, dtype=jnp.float32),
+        # stacked gated-FFN expert weights: (E, d, ff) / (E, ff, d)
+        "wi": (jax.random.normal(ks[1], (e_pad, d, d_ff), jnp.float32)
+               * scale).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (e_pad, d, d_ff), jnp.float32)
+               * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (e_pad, d_ff, d), jnp.float32)
+               / jnp.sqrt(d_ff)).astype(dtype),
+    }
+    if n_shared:
+        p["shared"] = layers.mlp_init(ks[4], d, (d_ff_shared or d_ff) * n_shared,
+                                      dtype=dtype)
+    return p
+
+
+def moe_apply(engine: GemminiInstance, p: Params, x: jnp.ndarray, *,
+              n_experts: int, top_k: int, capacity_factor: float = 1.25,
+              activation: str = "silu",
+              router_weights_before: bool = False,
+              dropless: bool = False) -> jnp.ndarray:
+    """x: (B, T, D) -> (B, T, D).
+
+    router_weights_before: llama4 multiplies the (sigmoid) router weight into
+    the expert *input*; granite/mixtral scale the expert *output* by the
+    softmax weight.
+    dropless: capacity = n_tokens (no token ever dropped). Used on serving
+    paths, where a dropped token would corrupt a user-visible sequence;
+    training keeps the capacity-bounded GShard semantics.
+    """
+    from repro.core import flags
+    b, t, d = x.shape
+    e_pad = p["wi"].shape[0]
+    n_tok = b * t
+    xf = x.reshape(n_tok, d)
+
+    # ---- grouping (perf flag B) -------------------------------------------
+    # groups = 1 is the baseline: one GLOBAL dispatch, whose cumsum /
+    # scatter-add over the full token axis the partitioner lowers to
+    # full-buffer all-reduces (measured 1.46 TB/device on granite train).
+    # groups = DP degree keeps every dispatch step local to a data shard;
+    # the only cross-shard movement left is the (G, E, cap, d) buffer
+    # resharding group-axis -> expert-axis, an all-to-all.
+    groups, grid = _dispatch_grid(b, t)
+    ntl = n_tok // groups
+    if grid is not None:
+        # group along the existing (batch-shards x sequence-shards) grid:
+        # x is stored (B over data, T over model), so this reshape/transpose
+        # is a pure LOCAL relabeling -- every group lives wholly on one
+        # device and the cumsum/scatter below never cross shards. (A
+        # with_sharding_constraint re-shard was tried first and made things
+        # 3x worse: SPMD implemented it as replicate-then-slice.)
+        gb, gt = grid
+        xg = x.reshape(gb, b // gb, gt, t // gt, d)
+        xg = xg.transpose(0, 2, 1, 3, 4).reshape(groups, ntl, d)
+    else:
+        xg = xf.reshape(groups, ntl, d)
+
+    # ---- routing ---------------------------------------------------------
+    logits = layers.project(engine, xg.astype(jnp.float32), p["router"])
+    if e_pad != n_experts:  # mask padded expert slots
+        pad_mask = jnp.arange(e_pad) >= n_experts
+        logits = jnp.where(pad_mask[None, None, :], -jnp.inf, logits)
+    gate_w, gate_idx = jax.lax.top_k(logits, top_k)          # (G, ntl, k)
+    if top_k == 1:
+        weights = jax.nn.sigmoid(gate_w)                     # llama4 style
+    else:
+        weights = jax.nn.softmax(gate_w, axis=-1)
+    weights = weights.astype(x.dtype)
+
+    # ---- capacity + position-in-expert (all per-group-local) --------------
+    capacity = ntl if dropless else \
+        max(1, int(capacity_factor * ntl * top_k / n_experts))
+    flat_idx = gate_idx.reshape(groups, ntl * top_k)
+    onehot = jax.nn.one_hot(flat_idx, e_pad, dtype=jnp.int32)  # (G,N*k,E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=1) - 1) * onehot
+    pos = jnp.sum(pos_in_expert, axis=-1)                    # (G, N*k)
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_idx * capacity + pos, e_pad * capacity)
+
+    # ---- dispatch: scatter tokens into (G, E*capacity, D) ------------------
+    tok_ids = jnp.repeat(jnp.arange(ntl), top_k)             # (ntl*k,)
+    xin = jnp.take(xg, tok_ids, axis=1)                      # (G, ntl*k, d)
+    if router_weights_before:
+        xin = xin * weights.reshape(groups, -1)[..., None].astype(x.dtype)
+    # sharding pins for the grouped path: every dispatch-side tensor stays
+    # group-local (G over the whole mesh) and every expert-side tensor
+    # stays expert-sharded (E over model). with_sharding_constraint
+    # transposes to itself, so these pin the BACKWARD cotangents too --
+    # without them the partitioner replicates the scatter/gather grads
+    # (measured 1.6 TB/device of all-gather in granite's backward).
+    if grid is not None:
+        import jax.sharding as js
+        _mesh = js.get_abstract_mesh()
+        _gaxes = tuple(a for a in ("pod", "data", "model")
+                       if a in _mesh.axis_names)
+
+        def pin_g(v):       # group-local layout
+            return jax.lax.with_sharding_constraint(
+                v, js.PartitionSpec(_gaxes, *([None] * (v.ndim - 1))))
+    else:
+        pin_g = lambda v: v
+
+    buf = pin_g(jnp.zeros((groups, e_pad * capacity + 1, d), x.dtype))
+    buf = jax.vmap(lambda bb, ss, xx: bb.at[ss].add(xx, mode="drop"))(
+        buf, slot, pin_g(xin.astype(x.dtype)))
+    expert_in = buf[:, :-1].reshape(groups, e_pad, capacity, d)
+    expert_in = jnp.swapaxes(expert_in, 0, 1)                # (E,G,cap,d)
+    expert_in = expert_in.reshape(e_pad, groups * capacity, d)
+
+    # ---- expert FFNs: batched GEMMs on the engine schedule -----------------
+    act = {"silu": jax.nn.silu,
+           "gelu": lambda v: jax.nn.gelu(v, approximate=True)}[activation]
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"],
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"],
+                   preferred_element_type=jnp.float32)
+    h = (act(g) * h).astype(x.dtype)
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # ---- combine: gather back + weighted sum -------------------------------
+    out = out.reshape(e_pad, groups, capacity, d)
+    out = jnp.swapaxes(out, 0, 1).reshape(groups, e_pad * capacity, d)
+    safe = jnp.minimum(slot, e_pad * capacity - 1)
+    gathered = jax.vmap(lambda oo, ss: oo[ss])(out, safe)    # (G, ntl*k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    if not router_weights_before:
+        gathered = gathered * weights.reshape(groups, -1)[..., None]
+    y = jax.vmap(lambda acc, tid, g: acc.at[tid].add(g))(
+        pin_g(jnp.zeros((groups, ntl, d), x.dtype)),
+        jnp.broadcast_to(tok_ids, (groups, ntl * top_k)),
+        gathered.astype(x.dtype))
+    if grid is not None:            # invert the shard-grid relabeling
+        gb, gt = grid
+        y = y.reshape(gb, gt, b // gb, t // gt, d)
+        y = y.transpose(0, 2, 1, 3, 4).reshape(b, t, d)
+    else:
+        y = y.reshape(b, t, d)
+
+    # ---- shared expert (llama4) --------------------------------------------
+    if "shared" in p:
+        y = y + layers.mlp_apply(engine, p["shared"], x,
+                                 activation=activation)
+    return y
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, gate_idx: jnp.ndarray,
+                          n_experts: int, top_k: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum(f_e * p_e)."""
+    probs = jax.nn.softmax(logits, axis=-1)[..., :n_experts]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[
+        gate_idx.reshape(-1)].add(1.0)
+    f = counts / counts.sum()
+    pm = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * pm)

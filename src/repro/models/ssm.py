@@ -1,0 +1,213 @@
+"""Mamba-2 SSD (state-space duality) mixer + Hymba building blocks.
+
+The chunked SSD algorithm decomposes the linear recurrence into
+*intra-chunk GEMMs* (which run on the Gemmini engine schedule -- the paper's
+technique applies to them) plus a short *inter-chunk scan* (attention-free,
+outside the technique's domain; see DESIGN.md section 5). The XLA
+implementation here is also the oracle structure for kernels/mamba2.py.
+
+Shapes follow the Mamba-2 paper: heads H with head-dim P, state size N,
+``G`` B/C groups (grouped like GQA).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generator import GemminiInstance
+from repro.models import layers
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+def ssd_chunked_xla(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256):
+    """x:(B,T,H,P) dt:(B,T,H) a_log:(H,) b,c:(B,T,G,N) -> y:(B,T,H,P).
+
+    Returns the same result as kernels.ref.ssd_ref (naive recurrence).
+    """
+    bsz, t, h, p = x.shape
+    _, _, g, n = b.shape
+    hpg = h // g
+    q = min(chunk, t)
+    pad = (-t) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                      # (H,)
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, q, g, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, q, g, n)
+    bf = jnp.repeat(bf, hpg, axis=3)                             # (B,nc,Q,H,N)
+    cf = jnp.repeat(cf, hpg, axis=3)
+
+    dta = dtf * a[None, None, None, :]                           # (B,nc,Q,H)
+    seg = jnp.cumsum(dta, axis=2)                                # inclusive
+    # intra-chunk decay matrix L[i,j] = exp(seg_i - seg_j), i >= j.
+    # Double-where: mask BEFORE exp so the i<j branch (positive exponent,
+    # overflows) never produces inf -- inf*0 in the backward pass is NaN.
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]           # (B,nc,Qi,Qj,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    ldec = jnp.where(tri, jnp.exp(jnp.where(tri, li, 0.0)), 0.0)
+
+    # scores_ij = C_i . B_j  (per head) -- a GEMM per chunk
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cf, bf)
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp",
+                        scores * ldec, dtf, xf)
+
+    # chunk-final states and decays
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)              # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjh,bcjhn,bcjhp->bchnp",
+                         decay_to_end, dtf, bf, xf)              # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                      # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        s_c, dec_c, c_c, seg_c = inp
+        # contribution of carried-in state to every step of this chunk
+        y_off = jnp.einsum("bihn,bhnp,bih->bihp",
+                           c_c, h_prev, jnp.exp(seg_c))
+        h_next = h_prev * dec_c[:, :, None, None] + s_c
+        return h_next, y_off
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    inp = (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+           jnp.moveaxis(cf, 1, 0), jnp.moveaxis(seg, 1, 0))
+    _, y_off = jax.lax.scan(scan_fn, h0, inp)
+    y = y_diag + jnp.moveaxis(y_off, 0, 1)                       # (B,nc,Q,H,P)
+    y = y.reshape(bsz, tt, h, p)[:, :t]
+    if d_skip is not None:
+        y = y + d_skip[None, None, :, None] * \
+            x.reshape(bsz, tt, h, p)[:, :t].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t, *, d_skip=None):
+    """One-token recurrence. state:(B,H,N,P) x_t:(B,H,P) dt_t:(B,H)
+    b_t,c_t:(B,G,N). Returns (y_t, new_state)."""
+    bsz, h, n, p = state.shape
+    g = b_t.shape[1]
+    hpg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bh = jnp.repeat(b_t.astype(jnp.float32), hpg, axis=1)        # (B,H,N)
+    ch = jnp.repeat(c_t.astype(jnp.float32), hpg, axis=1)
+    da = jnp.exp(dt_t.astype(jnp.float32) * a[None, :])          # (B,H)
+    state = state * da[..., None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhnp", dt_t.astype(jnp.float32), bh,
+                   x_t.astype(jnp.float32))
+    y = jnp.einsum("bhnp,bhn->bhp", state, ch)
+    if d_skip is not None:
+        y = y + d_skip[None, :, None] * x_t.astype(jnp.float32)
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba-2 mixer (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray     # (B, K-1, conv_dim)
+    state: jnp.ndarray    # (B, H, N, P)
+
+
+def mamba2_init(key, d_model: int, *, d_inner: int, n_heads: int,
+                d_state: int, n_groups: int = 1, d_conv: int = 4,
+                dtype=jnp.bfloat16) -> Params:
+    p_dim = d_inner // n_heads
+    conv_dim = d_inner + 2 * n_groups * d_state
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * d_inner + 2 * n_groups * d_state + n_heads  # z,x,B,C,dt
+    return {
+        "in_proj": layers.dense_init(ks[0], d_model, in_dim, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, conv_dim), jnp.float32)
+                   / math.sqrt(d_conv)).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": layers.rmsnorm_init(d_inner),
+        "out_proj": layers.dense_init(ks[2], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _split_in_proj(zxbcdt, d_inner, n_groups, d_state, n_heads):
+    splits = [d_inner, 2 * d_inner, 2 * d_inner + n_groups * d_state,
+              2 * d_inner + 2 * n_groups * d_state]
+    z = zxbcdt[..., :splits[0]]
+    x = zxbcdt[..., splits[0]:splits[1]]
+    b = zxbcdt[..., splits[1]:splits[2]]
+    c = zxbcdt[..., splits[2]:splits[3]]
+    dt = zxbcdt[..., splits[3]:]
+    return z, x, b, c, dt
+
+
+def mamba2_apply(engine: GemminiInstance, p: Params, u: jnp.ndarray, *,
+                 d_inner: int, n_heads: int, d_state: int, n_groups: int = 1,
+                 chunk: int = 256, cache: Optional[SSMCache] = None,
+                 ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """u: (B, T, d_model) -> (y, new_cache). T==1 with cache => decode."""
+    bsz, t, _ = u.shape
+    p_dim = d_inner // n_heads
+    zxbcdt = layers.project(engine, u, p["in_proj"])
+    z, xin, b, c, dt = _split_in_proj(zxbcdt, d_inner, n_groups, d_state,
+                                      n_heads)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])            # (B,T,H)
+
+    xbc = jnp.concatenate([xin, b, c], axis=-1)
+    conv_state = cache.conv if cache is not None else None
+    xbc, new_conv = layers.causal_conv1d(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + n_groups * d_state]
+    c = xbc[..., d_inner + n_groups * d_state:]
+
+    xh = xin.reshape(bsz, t, n_heads, p_dim)
+    bh = b.reshape(bsz, t, n_groups, d_state)
+    ch = c.reshape(bsz, t, n_groups, d_state)
+
+    if cache is not None and t == 1:
+        y, new_state = ssd_decode_step(
+            cache.state, xh[:, 0], dt[:, 0], p["a_log"], bh[:, 0], ch[:, 0],
+            d_skip=p["d_skip"])
+        y = y[:, None]                                           # (B,1,H,P)
+        new_cache = SSMCache(new_conv, new_state)
+    else:
+        y = ssd_chunked_xla(xh, dt, p["a_log"], bh, ch,
+                            d_skip=p["d_skip"], chunk=chunk)
+        if cache is not None:
+            # prefill: recompute final state for subsequent decode
+            _, final_state = _final_state(xh, dt, p["a_log"], bh, ch)
+            new_cache = SSMCache(new_conv, final_state)
+        else:
+            new_cache = None
+
+    y = y.reshape(bsz, t, d_inner)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["norm"])
+    return layers.project(engine, y, p["out_proj"]), new_cache
+
+
+def _final_state(x, dt, a_log, b, c):
+    """Final SSM state after a full sequence (for prefill->decode handoff)."""
+    bsz, t, h, p = x.shape
+    g = b.shape[2]
+    hpg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dta = dt.astype(jnp.float32) * a[None, None, :]              # (B,T,H)
+    seg = jnp.cumsum(dta, axis=1)
+    decay_to_end = jnp.exp(seg[:, -1:, :] - seg)                 # (B,T,H)
+    bh = jnp.repeat(b.astype(jnp.float32), hpg, axis=2)
+    state = jnp.einsum("bth,bth,bthn,bthp->bhnp",
+                       decay_to_end, dt.astype(jnp.float32), bh,
+                       x.astype(jnp.float32))
+    return None, state

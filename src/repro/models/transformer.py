@@ -1,0 +1,596 @@
+"""Decoder stack covering all 10 assigned architectures.
+
+One *homogeneous* block definition per family (dense / moe / ssm / hybrid),
+scanned over layers with stacked parameters so 60-layer models lower to a
+single compiled block body (compile-time tractability for the 512-device
+dry-run). Per-layer heterogeneity (gemma local:global interleave, per-layer
+rope bases) is expressed as *scanned data* (traced per-layer window size /
+rope base arrays), not as distinct block bodies.
+
+Multimodal frontends are stubs per the assignment: ``extra_embeds`` carries
+precomputed patch (VLM) or frame (audio) embeddings, concatenated before the
+first block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generator import GemminiInstance
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# model configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    activation: str = "silu"
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    local_window: Optional[int] = None   # sliding window for "local" layers
+    global_period: int = 0               # every Nth layer is global (0 = all global)
+    rope_base: float = 10000.0
+    rope_base_local: Optional[float] = None
+    post_norms: bool = False             # gemma2/3 post-block norms
+    qk_norm: bool = False                # gemma3
+    embed_scale: bool = False            # gemma: embeddings * sqrt(d)
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    router_weights_before: bool = False  # llama4 style
+    capacity_factor: float = 1.25
+    expert_padding: int = 16             # pad experts to the EP degree
+    # SSM
+    d_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    d_conv: int = 4
+    ssm_chunk: int = 256
+    # multimodal stubs
+    modality: str = "none"               # none | vlm | audio
+    n_codebooks: int = 1                 # musicgen
+    n_meta_tokens: int = 0               # hymba
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def has_attn(self) -> bool:
+        return self.family in ("dense", "moe", "hybrid")
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS roofline terms)."""
+        d, l = self.d_model, self.n_layers
+        n = self.vocab * d * self.n_codebooks          # embed
+        if not self.tie_embeddings or self.n_codebooks > 1:
+            n += self.vocab * d * self.n_codebooks     # unembed heads
+        per_layer = 0
+        if self.has_attn:
+            per_layer += d * (self.n_heads + 2 * self.n_kv_heads) * \
+                self.head_dim + self.n_heads * self.head_dim * d
+        if self.has_ssm:
+            in_dim = 2 * self.d_inner + 2 * self.ssm_groups * self.d_state \
+                + self.n_ssm_heads
+            per_layer += d * in_dim + self.d_inner * d
+        if self.family == "moe":
+            e = self.n_experts
+            per_layer += d * e                                   # router
+            per_layer += 3 * d * self.moe_d_ff * e               # experts
+            if self.n_shared_experts:
+                per_layer += 3 * d * self.moe_d_ff * self.n_shared_experts
+        elif self.family in ("dense", "hybrid") and self.d_ff:
+            per_layer += 3 * d * self.d_ff
+        return n + l * per_layer
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, l, e = self.d_model, self.n_layers, self.n_experts
+        full = self.param_count()
+        inactive = l * 3 * d * self.moe_d_ff * (e - self.top_k)
+        return full - inactive
+
+
+def layer_windows(cfg: ModelConfig, seq_hint: int) -> np.ndarray:
+    """Per-layer sliding-window sizes; 0 encodes 'global' (full attention)."""
+    win = np.zeros((cfg.n_layers,), np.int32)
+    if cfg.local_window:
+        for i in range(cfg.n_layers):
+            is_global = (cfg.global_period > 0 and
+                         (i + 1) % cfg.global_period == 0)
+            win[i] = 0 if is_global else cfg.local_window
+    return win
+
+
+def layer_rope_bases(cfg: ModelConfig) -> np.ndarray:
+    base = np.full((cfg.n_layers,), cfg.rope_base, np.float32)
+    if cfg.rope_base_local is not None and cfg.local_window:
+        for i in range(cfg.n_layers):
+            is_global = (cfg.global_period > 0 and
+                         (i + 1) % cfg.global_period == 0)
+            if not is_global:
+                base[i] = cfg.rope_base_local
+    return base
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def _block_init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": layers.rmsnorm_init(cfg.d_model)}
+    if cfg.has_attn:
+        p["attn"] = attn.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim,
+                                   qkv_bias=cfg.qkv_bias, dtype=cfg.dtype)
+        if cfg.qk_norm:
+            p["qnorm"] = layers.rmsnorm_init(cfg.head_dim)
+            p["knorm"] = layers.rmsnorm_init(cfg.head_dim)
+    if cfg.has_ssm:
+        p["mamba"] = ssm.mamba2_init(
+            ks[1], cfg.d_model, d_inner=cfg.d_inner,
+            n_heads=cfg.n_ssm_heads, d_state=cfg.d_state,
+            n_groups=cfg.ssm_groups, d_conv=cfg.d_conv, dtype=cfg.dtype)
+    if cfg.family == "moe":
+        p["ln2"] = layers.rmsnorm_init(cfg.d_model)
+        p["moe"] = moe.moe_init(ks[2], cfg.d_model, cfg.moe_d_ff,
+                                cfg.n_experts, ep=cfg.expert_padding,
+                                n_shared=cfg.n_shared_experts,
+                                dtype=cfg.dtype)
+    elif cfg.d_ff and cfg.family != "ssm":
+        p["ln2"] = layers.rmsnorm_init(cfg.d_model)
+        p["mlp"] = layers.mlp_init(ks[3], cfg.d_model, cfg.d_ff,
+                                   dtype=cfg.dtype)
+    if cfg.post_norms:
+        p["post_ln1"] = layers.rmsnorm_init(cfg.d_model)
+        if "ln2" in p:
+            p["post_ln2"] = layers.rmsnorm_init(cfg.d_model)
+    if cfg.family == "hybrid":
+        # per-branch output norms before averaging (hymba)
+        p["attn_out_norm"] = layers.rmsnorm_init(cfg.d_model)
+        p["ssm_out_norm"] = layers.rmsnorm_init(cfg.d_model)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    if cfg.n_codebooks > 1:
+        embed = jnp.stack([layers.embed_init(k, cfg.vocab, cfg.d_model,
+                                             dtype=cfg.dtype)
+                           for k in jax.random.split(ks[0], cfg.n_codebooks)])
+    else:
+        embed = layers.embed_init(ks[0], cfg.vocab, cfg.d_model,
+                                  dtype=cfg.dtype)
+    # stacked per-layer params: tree_map over per-layer inits
+    per_layer = [_block_init(ks[4 + i], cfg) for i in range(cfg.n_layers)]
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    p: Params = {"embed": embed, "blocks": blocks,
+                 "final_norm": layers.rmsnorm_init(cfg.d_model)}
+    if cfg.n_codebooks > 1:
+        p["heads"] = jnp.stack([layers.dense_init(k, cfg.d_model, cfg.vocab,
+                                                  dtype=cfg.dtype)
+                                for k in jax.random.split(ks[1],
+                                                          cfg.n_codebooks)])
+    elif not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(ks[1], cfg.d_model, cfg.vocab,
+                                         dtype=cfg.dtype)
+    if cfg.n_meta_tokens:
+        p["meta_tokens"] = (jax.random.normal(
+            ks[2], (cfg.n_meta_tokens, cfg.d_model), jnp.float32) * 0.02
+        ).astype(cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block forward (shared by train/prefill and decode)
+# ---------------------------------------------------------------------------
+def _maybe_qknorm(cfg, bp, q, k):
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, bp["qnorm"])
+        k = layers.rmsnorm(k, bp["knorm"])
+    return q, k
+
+
+def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
+                 cache=None, cache_pos=None):
+    """window: traced scalar, 0 = global. Returns (out, new_cache)."""
+    b, t, _ = h.shape
+    p = bp["attn"]
+    q = layers.project(engine, h, p["wq"], p.get("bq")).reshape(
+        b, t, cfg.n_heads, cfg.head_dim)
+    k = layers.project(engine, h, p["wk"], p.get("bk")).reshape(
+        b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.project(engine, h, p["wv"], p.get("bv")).reshape(
+        b, t, cfg.n_kv_heads, cfg.head_dim)
+    q, k = _maybe_qknorm(cfg, bp, q, k)
+    q = layers.rope(q, positions, base=rope_base)
+    k = layers.rope(k, positions, base=rope_base)
+
+    # encode "global" as window > any position: mask kpos > qpos - window
+    eff_window = jnp.where(window > 0, window, jnp.int32(2 ** 30))
+    if cache is not None:
+        cache = attn.update_cache(cache, k, v, cache_pos)
+        if t == 1:
+            o = attn.decode_attention(q, cache, cache_pos,
+                                      window=eff_window,
+                                      softcap=cfg.attn_softcap)
+        else:
+            # prefill from position 0: attend only the t written positions
+            # (the cache tail beyond t is unwritten zeros, and blockwise
+            # attention right-aligns queries against the key length).
+            o = attn.blockwise_attention_xla(q, cache.k[:, :t],
+                                             cache.v[:, :t], causal=True,
+                                             window=eff_window,
+                                             softcap=cfg.attn_softcap)
+    else:
+        o = attn.blockwise_attention_xla(q, k, v, causal=True,
+                                         window=eff_window,
+                                         softcap=cfg.attn_softcap)
+    o = o.reshape(b, t, cfg.n_heads * cfg.head_dim)
+    return layers.project(engine, o, p["wo"]), cache
+
+
+def _block_apply(engine, cfg: ModelConfig, bp: Params, h: jnp.ndarray,
+                 positions, window, rope_base,
+                 kv_cache=None, ssm_cache=None, cache_pos=None):
+    """One decoder block. Returns (h, kv_cache, ssm_cache)."""
+    x = layers.rmsnorm(h, bp["ln1"])
+    outs = []
+    if cfg.has_attn:
+        a_out, kv_cache = _attn_branch(engine, cfg, bp, x, positions, window,
+                                       rope_base, kv_cache, cache_pos)
+        outs.append(("attn", a_out))
+    if cfg.has_ssm:
+        s_out, ssm_cache = ssm.mamba2_apply(
+            engine, bp["mamba"], x, d_inner=cfg.d_inner,
+            n_heads=cfg.n_ssm_heads, d_state=cfg.d_state,
+            n_groups=cfg.ssm_groups, chunk=cfg.ssm_chunk, cache=ssm_cache)
+        outs.append(("ssm", s_out))
+    if cfg.family == "hybrid":
+        a = layers.rmsnorm(outs[0][1], bp["attn_out_norm"])
+        s = layers.rmsnorm(outs[1][1], bp["ssm_out_norm"])
+        mixed = 0.5 * (a.astype(jnp.float32) + s.astype(jnp.float32))
+        mixed = mixed.astype(h.dtype)
+    else:
+        mixed = outs[0][1]
+    if cfg.post_norms:
+        mixed = layers.rmsnorm(mixed, bp["post_ln1"])
+    h = h + mixed
+
+    if "moe" in bp:
+        x2 = layers.rmsnorm(h, bp["ln2"])
+        serving = kv_cache is not None or ssm_cache is not None
+        f = moe.moe_apply(engine, bp["moe"], x2, n_experts=cfg.n_experts,
+                          top_k=cfg.top_k,
+                          capacity_factor=cfg.capacity_factor,
+                          activation=cfg.activation,
+                          router_weights_before=cfg.router_weights_before,
+                          dropless=serving)
+        if cfg.post_norms:
+            f = layers.rmsnorm(f, bp["post_ln2"])
+        h = h + f
+    elif "mlp" in bp:
+        x2 = layers.rmsnorm(h, bp["ln2"])
+        f = layers.mlp_apply(engine, bp["mlp"], x2, activation=cfg.activation)
+        if cfg.post_norms:
+            f = layers.rmsnorm(f, bp["post_ln2"])
+        h = h + f
+    return h, kv_cache, ssm_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding frontends (incl. multimodal stubs)
+# ---------------------------------------------------------------------------
+def embed_inputs(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                 extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens: (B, T) or (B, T, n_q) for audio. extra_embeds: (B, Ti, D)
+    precomputed frontend embeddings (VLM patches / audio conditioning),
+    prepended to the token embeddings."""
+    if cfg.n_codebooks > 1:
+        # musicgen: sum the per-codebook embeddings
+        h = sum(layers.embed_apply(params["embed"][i], tokens[..., i])
+                for i in range(cfg.n_codebooks))
+    else:
+        h = layers.embed_apply(params["embed"], tokens,
+                               scale_by_sqrt_dim=cfg.embed_scale)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    if cfg.n_meta_tokens:
+        b = h.shape[0]
+        meta = jnp.broadcast_to(params["meta_tokens"][None],
+                                (b, cfg.n_meta_tokens, cfg.d_model))
+        h = jnp.concatenate([meta.astype(h.dtype), h], axis=1)
+    return h
+
+
+def unembed(engine, cfg: ModelConfig, params: Params,
+            h: jnp.ndarray) -> jnp.ndarray:
+    h = layers.rmsnorm(h, params["final_norm"])
+    if cfg.n_codebooks > 1:
+        logits = jnp.stack(
+            [layers.project(engine, h, params["heads"][i])
+             for i in range(cfg.n_codebooks)], axis=-2)  # (B,T,n_q,V)
+        return logits.astype(jnp.float32)
+    table = params["embed"] if cfg.tie_embeddings else None
+    if table is not None:
+        return layers.unembed_apply(engine, table, h,
+                                    softcap=cfg.final_softcap)
+    logits = layers.project(engine, h, params["unembed"]).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _constrain(x, sharding):
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def forward(engine: GemminiInstance, params: Params, cfg: ModelConfig,
+            tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None, *,
+            remat: bool = False,
+            residual_sharding=None,
+            logits_sharding=None) -> jnp.ndarray:
+    """remat: rematerialize each block in backward (train memory policy).
+    residual_sharding: NamedSharding for the (B, T, D) layer-scan carry
+    (sequence-parallel storage); logits_sharding: vocab-sharded logits."""
+    h = embed_inputs(cfg, params, tokens, extra_embeds)
+    b, t, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    windows = jnp.asarray(layer_windows(cfg, t))
+    bases = jnp.asarray(layer_rope_bases(cfg))
+    h = _constrain(h, residual_sharding)
+
+    def body(h, xs):
+        bp, win, base = xs
+        h, _, _ = _block_apply(engine, cfg, bp, h, positions, win, base)
+        return _constrain(h, residual_sharding), None
+
+    if remat:
+        from repro.core import flags
+        pol = flags.get("remat_policy")
+        if pol == "dots":
+            # save MXU outputs, recompute elementwise: spends VMEM/HBM
+            # residency to avoid re-running every projection (and its TP
+            # collectives) in the backward pass
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.
+                dots_with_no_batch_dims_saveable)
+        elif pol == "none":
+            pass                     # save everything (no recompute)
+        else:                        # "full": the minimal-residency baseline
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, (params["blocks"], windows, bases))
+    logits = unembed(engine, cfg, params, h)
+    return _constrain(logits, logits_sharding)
+
+
+def loss_fn(engine, params, cfg: ModelConfig, tokens, labels,
+            extra_embeds=None, **fwd_kw) -> jnp.ndarray:
+    """Next-token cross-entropy; labels == -100 are masked."""
+    logits = forward(engine, params, cfg, tokens, extra_embeds, **fwd_kw)
+    if extra_embeds is not None:       # prefix positions carry no loss
+        logits = logits[:, extra_embeds.shape[1]:]
+    if cfg.n_meta_tokens:
+        logits = logits[:, cfg.n_meta_tokens:]
+    if cfg.n_codebooks > 1:
+        logits = logits[:, :-1]                       # (B,T-1,n_q,V)
+        tgt = labels[:, 1:]                           # (B,T-1,n_q)
+    else:
+        logits = logits[:, :-1]
+        tgt = labels[:, 1:]
+    mask = (tgt >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(tgt, 0)[..., None],
+                             axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    kv_k: Optional[jnp.ndarray]       # (L, B, S, KVH, D) or None
+    kv_v: Optional[jnp.ndarray]
+    conv: Optional[jnp.ndarray]       # (L, B, K-1, conv_dim) or None
+    ssm: Optional[jnp.ndarray]        # (L, B, H, N, P) or None
+    pos: jnp.ndarray                  # scalar int32: next write position
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    kv_k = kv_v = conv = st = None
+    if cfg.has_attn:
+        shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        kv_k = jnp.zeros(shape, dtype)
+        kv_v = jnp.zeros(shape, dtype)
+    if cfg.has_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.d_state
+        conv = jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, conv_dim),
+                         dtype)
+        st = jnp.zeros((cfg.n_layers, batch, cfg.n_ssm_heads, cfg.d_state,
+                        cfg.ssm_head_dim), jnp.float32)
+    return DecodeState(kv_k, kv_v, conv, st,
+                       jnp.zeros((), jnp.int32) + (max_seq - 1))
+
+
+def prefill_into_cache(engine: GemminiInstance, params: Params,
+                       cfg: ModelConfig, tokens: jnp.ndarray,
+                       state: DecodeState,
+                       extra_embeds: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, DecodeState]:
+    """Forward over the prompt writing KV/SSM caches at positions [0, P).
+
+    tokens: (B, P) [or (B, P, n_q)]. Returns (logits (B, P', V), state with
+    ``pos`` = number of cached positions = the next write position).
+    """
+    h = embed_inputs(cfg, params, tokens, extra_embeds)
+    b, t, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    windows = jnp.asarray(layer_windows(cfg, t))
+    bases = jnp.asarray(layer_rope_bases(cfg))
+    write_pos = jnp.zeros((), jnp.int32)
+
+    def body(h, xs):
+        bp, win, base, kv_k, kv_v, conv, st = xs
+        kvc = attn.KVCache(kv_k, kv_v) if kv_k is not None else None
+        ssc = ssm.SSMCache(conv, st) if conv is not None else None
+        h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
+                                   kv_cache=kvc, ssm_cache=ssc,
+                                   cache_pos=write_pos)
+        new = (kvc.k if kvc else None, kvc.v if kvc else None,
+               ssc.conv if ssc else None, ssc.state if ssc else None)
+        return h, new
+
+    xs = (params["blocks"], windows, bases, state.kv_k, state.kv_v,
+          state.conv, state.ssm)
+    h, caches = jax.lax.scan(body, h, xs)
+    kv_k, kv_v, conv, st = caches
+    logits = unembed(engine, cfg, params, h)
+    return logits, DecodeState(kv_k, kv_v, conv, st,
+                               jnp.asarray(t, jnp.int32))
+
+
+def decode_step(engine: GemminiInstance, params: Params, cfg: ModelConfig,
+                tokens: jnp.ndarray, state: DecodeState
+                ) -> Tuple[jnp.ndarray, DecodeState]:
+    """One serving step: tokens (B, 1) [or (B, 1, n_q)] with a KV/SSM cache
+    of ``max_seq``; returns logits for the new token and the updated state."""
+    if cfg.n_codebooks > 1:
+        h = sum(layers.embed_apply(params["embed"][i], tokens[..., i])
+                for i in range(cfg.n_codebooks))
+    else:
+        h = layers.embed_apply(params["embed"], tokens,
+                               scale_by_sqrt_dim=cfg.embed_scale)
+    b = h.shape[0]
+    pos = state.pos
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    windows = jnp.asarray(layer_windows(cfg, 0))
+    bases = jnp.asarray(layer_rope_bases(cfg))
+
+    from repro.core import flags
+    if flags.get("decode_unroll"):
+        win_np = layer_windows(cfg, 0)
+        base_np = layer_rope_bases(cfg)
+        kv_k, kv_v = state.kv_k, state.kv_v
+        conv, st = state.conv, state.ssm
+        for i in range(cfg.n_layers):
+            bp = jax.tree.map(lambda p: p[i], params["blocks"])
+            kvc = attn.KVCache(kv_k[i], kv_v[i]) \
+                if kv_k is not None else None
+            ssc = ssm.SSMCache(conv[i], st[i]) if conv is not None else None
+            h, kvc, ssc = _block_apply(
+                engine, cfg, bp, h, positions,
+                jnp.int32(int(win_np[i])), float(base_np[i]),
+                kv_cache=kvc, ssm_cache=ssc, cache_pos=pos)
+            if kvc is not None:
+                kv_k = kv_k.at[i].set(kvc.k.astype(kv_k.dtype))
+                kv_v = kv_v.at[i].set(kvc.v.astype(kv_v.dtype))
+            if ssc is not None:
+                conv = conv.at[i].set(ssc.conv.astype(conv.dtype))
+                st = st.at[i].set(ssc.state.astype(st.dtype))
+        logits = unembed(engine, cfg, params, h)
+        return logits, DecodeState(kv_k, kv_v, conv, st, pos + 1)
+
+    if flags.get("cache_as_carry"):
+        # carry the stacked caches; slice layer li in, DUS the update back
+        # in place. XLA's in-place dynamic-update-slice fusion keeps the
+        # carry aliased, so per layer only the layer's slice moves.
+        def body_c(carry, xs):
+            h, kv_k, kv_v, conv, st = carry
+            bp, win, base, li = xs
+
+            def sl(stack):
+                if stack is None:
+                    return None
+                s = jax.lax.dynamic_index_in_dim(stack, li, 0,
+                                                 keepdims=False)
+                return s
+
+            def up(stack, new):
+                if stack is None:
+                    return None
+                return jax.lax.dynamic_update_index_in_dim(
+                    stack, new.astype(stack.dtype), li, 0)
+
+            kvc = attn.KVCache(sl(kv_k), sl(kv_v)) \
+                if kv_k is not None else None
+            ssc = ssm.SSMCache(sl(conv), sl(st)) \
+                if conv is not None else None
+            h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win,
+                                       base, kv_cache=kvc, ssm_cache=ssc,
+                                       cache_pos=pos)
+            carry = (h,
+                     up(kv_k, kvc.k) if kvc else None,
+                     up(kv_v, kvc.v) if kvc else None,
+                     up(conv, ssc.conv) if ssc else None,
+                     up(st, ssc.state) if ssc else None)
+            return carry, None
+
+        xs = (params["blocks"], windows, bases,
+              jnp.arange(cfg.n_layers, dtype=jnp.int32))
+        (h, kv_k, kv_v, conv, st), _ = jax.lax.scan(
+            body_c, (h, state.kv_k, state.kv_v, state.conv, state.ssm), xs)
+        logits = unembed(engine, cfg, params, h)
+        return logits, DecodeState(kv_k, kv_v, conv, st, pos + 1)
+
+    def body(h, xs):
+        bp, win, base, kv_k, kv_v, conv, st = xs
+        kvc = attn.KVCache(kv_k, kv_v) if kv_k is not None else None
+        ssc = ssm.SSMCache(conv, st) if conv is not None else None
+        h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
+                                   kv_cache=kvc, ssm_cache=ssc,
+                                   cache_pos=pos)
+        new = (kvc.k if kvc else None, kvc.v if kvc else None,
+               ssc.conv if ssc else None, ssc.state if ssc else None)
+        return h, new
+
+    xs = (params["blocks"], windows, bases, state.kv_k, state.kv_v,
+          state.conv, state.ssm)
+    h, caches = jax.lax.scan(body, h, xs)
+    kv_k, kv_v, conv, st = caches
+    logits = unembed(engine, cfg, params, h)
+    return logits, DecodeState(kv_k, kv_v, conv, st, pos + 1)

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa

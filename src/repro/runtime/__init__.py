@@ -1,0 +1,13 @@
+from repro.runtime.ft import (HeartbeatMonitor, StragglerDetector,
+                              RestartPolicy, run_with_restarts)
+from repro.runtime.compression import (topk_compress, topk_decompress,
+                                       ErrorFeedbackState,
+                                       compress_grads_with_feedback,
+                                       int8_compress, int8_decompress)
+
+__all__ = [
+    "HeartbeatMonitor", "StragglerDetector", "RestartPolicy",
+    "run_with_restarts", "topk_compress", "topk_decompress",
+    "ErrorFeedbackState", "compress_grads_with_feedback",
+    "int8_compress", "int8_decompress",
+]

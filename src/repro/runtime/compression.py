@@ -1,0 +1,103 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization).
+
+Two compressors, both jit-compatible and used ahead of the data-parallel
+gradient reduction:
+
+* **Top-k sparsification with error feedback** -- Deep Gradient Compression
+  (Lin, Han, Mao et al.; the paper's own reference [21]). Only the largest-k
+  magnitude entries are exchanged; the residual is carried in an error-
+  feedback buffer added back before the next selection, which keeps
+  convergence close to dense SGD/Adam.
+* **int8 stochastic-free linear quantization** -- per-tensor symmetric scale,
+  the same rounding-shift numerics as the Gemmini datapath, cutting the DP
+  all-reduce payload 4x vs fp32 (2x vs bf16).
+
+Both express the *payload reduction* in pure JAX so XLA shards/overlaps the
+reduced tensors like any other; the roofline collective term of a
+compressed step drops proportionally (verified in the tests by byte count).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# top-k + error feedback
+# ---------------------------------------------------------------------------
+def topk_compress(g: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep the k largest-|.| entries. Returns (values, flat_indices)."""
+    flat = g.reshape(-1)
+    k = min(k, flat.shape[0])
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(values: jnp.ndarray, idx: jnp.ndarray,
+                    shape, dtype) -> jnp.ndarray:
+    n = 1
+    for d in shape:
+        n *= d
+    flat = jnp.zeros((n,), dtype).at[idx].set(values.astype(dtype))
+    return flat.reshape(shape)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any          # pytree mirroring grads
+
+
+def init_error_feedback(grads: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def compress_grads_with_feedback(grads: Any, state: ErrorFeedbackState,
+                                 density: float = 0.01
+                                 ) -> Tuple[Any, ErrorFeedbackState]:
+    """DGC step: g + residual -> top-k kept (exchanged) -> residual update.
+
+    Returns (sparse grads to feed the optimizer/all-reduce, new state).
+    """
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        k = max(1, int(density * acc.size))
+        vals, idx = topk_compress(acc, k)
+        kept = topk_decompress(vals, idx, acc.shape, jnp.float32)
+        return kept.astype(g.dtype), acc - kept
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    kept = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    resid = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return kept, ErrorFeedbackState(resid)
+
+
+# ---------------------------------------------------------------------------
+# int8 linear quantization (per-tensor symmetric)
+# ---------------------------------------------------------------------------
+def int8_compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_tree(grads: Any) -> Any:
+    return jax.tree.map(int8_compress, grads)
+
+
+def int8_roundtrip_tree(grads: Any) -> Any:
+    """Quantize-dequantize every leaf (models the compressed all-reduce)."""
+    def one(g):
+        q, s = int8_compress(g)
+        return int8_decompress(q, s).astype(g.dtype)
+    return jax.tree.map(one, grads)

@@ -1,0 +1,123 @@
+"""Fault tolerance: heartbeats, straggler detection, restart/elastic loop.
+
+The paper's evaluation point is that *system-level* behaviour (not the
+kernel) decides delivered performance; at 1000+-node scale the dominant
+system-level events are node failure and stragglers. This module provides
+the control-plane pieces the launcher composes:
+
+* :class:`HeartbeatMonitor` -- tracks per-host liveness marks; ``dead()``
+  after a timeout names the lost hosts (in a real deployment the marks come
+  from the cluster agent; tests drive it with a fake clock).
+* :class:`StragglerDetector` -- EWMA + variance of step times; a step whose
+  z-score exceeds the threshold flags a straggler so the launcher can log,
+  exclude, or re-shard around the slow host.
+* :func:`run_with_restarts` -- the restart loop: run the training callable;
+  on failure restore the latest committed checkpoint and re-enter, possibly
+  on a *shrunk* mesh (elastic scaling: lose a pod -> continue on the
+  remaining pod; the checkpoint layer reshards transparently).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        now = clock()
+        self.last: Dict[str, float] = {h: now for h in hosts}
+
+    def beat(self, host: str):
+        self.last[host] = self.clock()
+
+    def dead(self) -> List[str]:
+        now = self.clock()
+        return [h for h, t in self.last.items() if now - t > self.timeout]
+
+    def alive(self) -> List[str]:
+        d = set(self.dead())
+        return [h for h in self.last if h not in d]
+
+
+class StragglerDetector:
+    """EWMA mean/variance of step times; flags z-score outliers.
+
+    Warmup samples prime the statistics (no flags); afterwards mean/var
+    follow an EWMA, with straggler steps weighted down 4x so one hiccup
+    does not poison the baseline.
+    """
+
+    def __init__(self, alpha: float = 0.1, z_threshold: float = 3.0,
+                 warmup: int = 5, min_rel_std: float = 0.02):
+        self.alpha = alpha
+        self.z = z_threshold
+        self.warmup = warmup
+        self.min_rel_std = min_rel_std   # jitter floor: ignore sub-2% noise
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self._warm: list = []
+
+    def observe(self, dt: float) -> bool:
+        """Record one step time; True if it is a straggler step."""
+        self.n += 1
+        if self.n <= self.warmup:
+            self._warm.append(dt)
+            if self.n == self.warmup:
+                m = sum(self._warm) / len(self._warm)
+                self.mean = m
+                self.var = sum((x - m) ** 2 for x in self._warm) / \
+                    len(self._warm)
+            return False
+        std = math.sqrt(max(self.var, 0.0))
+        std = max(std, self.min_rel_std * self.mean)
+        is_straggler = dt > self.mean + self.z * std
+        a = self.alpha * (0.25 if is_straggler else 1.0)
+        self.mean = (1 - a) * self.mean + a * dt
+        self.var = (1 - a) * self.var + a * (dt - self.mean) ** 2
+        return is_straggler
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_failures: int = 3
+    backoff_s: float = 0.0          # tests use 0
+    allow_shrink: bool = True       # elastic: retry on a smaller mesh
+
+
+def run_with_restarts(
+    make_runner: Callable[[int, int], Callable[[], Any]],
+    policy: RestartPolicy,
+    *,
+    n_pods: int = 2,
+    on_failure: Optional[Callable[[int, BaseException], None]] = None,
+) -> Tuple[Any, int, int]:
+    """Run ``make_runner(attempt, pods)()`` with restart-on-failure.
+
+    ``make_runner`` builds a fresh runner (re-mesh, restore checkpoint,
+    re-jit) for each attempt; ``pods`` shrinks after a failure when the
+    policy allows (elastic scaling). Returns (result, attempts, pods_used).
+    """
+    pods = n_pods
+    for attempt in range(policy.max_failures + 1):
+        try:
+            runner = make_runner(attempt, pods)
+            return runner(), attempt + 1, pods
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as e:  # noqa: B036 - restart loop by design
+            if on_failure is not None:
+                on_failure(attempt, e)
+            if attempt == policy.max_failures:
+                raise
+            if policy.allow_shrink and pods > 1:
+                pods -= 1            # drop the lost pod, keep training
+            if policy.backoff_s:
+                time.sleep(policy.backoff_s * (2 ** attempt))
+    raise RuntimeError("unreachable")

@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _run_subprocess(code: str, n_devices: int = 8, timeout: int = 480):
+    """Run ``code`` in a fresh python with a forced multi-device CPU.
+
+    Multi-device tests must not set xla_force_host_platform_device_count in
+    this process (smoke tests see 1 device), so they run isolated.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    p = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+@pytest.fixture
+def run_subprocess():
+    return _run_subprocess

@@ -1,0 +1,112 @@
+"""Flash-attention Pallas kernel + XLA blockwise path vs the MHA oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import attention as ak
+from repro.kernels import ref
+from repro.models import attention as mattn
+
+
+def _t(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+CASES = [
+    # (b, tq, tk, h, kvh, d, causal, window, softcap)
+    (2, 128, 128, 4, 2, 64, True, None, None),
+    (1, 100, 100, 4, 1, 32, True, 37, None),       # MQA + window
+    (1, 64, 192, 8, 4, 64, True, None, 50.0),      # Tq != Tk + softcap
+    (2, 96, 96, 2, 2, 128, False, None, None),     # bidirectional
+    (1, 130, 130, 4, 4, 64, True, 64, 30.0),       # window + softcap
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_kernel_vs_oracle(rng, case):
+    b, tq, tk, h, kvh, d, causal, window, softcap = case
+    q, k, v = (_t(rng, (b, tq, h, d)), _t(rng, (b, tk, kvh, d)),
+               _t(rng, (b, tk, kvh, d)))
+    y = ak.flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, block_q=64, block_k=64,
+                           interpret=True)
+    yr = ref.mha_ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block", [32, 128])
+def test_flash_kernel_block_size_invariant(rng, block):
+    q = _t(rng, (1, 96, 4, 64))
+    k = _t(rng, (1, 96, 2, 64))
+    v = _t(rng, (1, 96, 2, 64))
+    y = ak.flash_attention(q, k, v, block_q=block, block_k=block,
+                           interpret=True)
+    yr = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,kvh,s,win", [(8, 2, 300, None), (4, 1, 257, 64),
+                                         (16, 16, 128, None)])
+def test_decode_kernel_vs_oracle(rng, h, kvh, s, win):
+    q = _t(rng, (2, 1, h, 64))
+    k = _t(rng, (2, s, kvh, 64))
+    v = _t(rng, (2, s, kvh, 64))
+    pos = jnp.int32(s - 5)
+    y = ak.decode_attention(q, k, v, pos, window=win, block_k=128,
+                            interpret=True)
+    yr = ref.mha_ref(q, k[:, :int(pos) + 1], v[:, :int(pos) + 1],
+                     causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_xla_vs_oracle(rng):
+    """The dry-run (XLA) attention path matches the oracle too."""
+    q = _t(rng, (2, 120, 4, 32))
+    k = _t(rng, (2, 120, 2, 32))
+    v = _t(rng, (2, 120, 2, 32))
+    for win, cap in [(None, None), (48, None), (None, 25.0)]:
+        y = mattn.blockwise_attention_xla(q, k, v, causal=True, window=win,
+                                          softcap=cap, block_k=32)
+        yr = ref.mha_ref(q, k, v, causal=True, window=win, softcap=cap)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_models_decode_attention_vs_oracle(rng):
+    q = _t(rng, (2, 1, 8, 32))
+    k = _t(rng, (2, 64, 2, 32))
+    v = _t(rng, (2, 64, 2, 32))
+    pos = jnp.int32(40)
+    y = mattn.decode_attention(q, mattn.KVCache(k, v), pos, window=16)
+    yr = ref.mha_ref(q, k[:, :41], v[:, :41], causal=True, window=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_window_blocks_are_skipped(rng):
+    """Sliding window + causal on a long stripe: identical numerics while
+    most blocks are skippable (correctness of the skip predicate)."""
+    q = _t(rng, (1, 256, 2, 32))
+    k = _t(rng, (1, 256, 2, 32))
+    v = _t(rng, (1, 256, 2, 32))
+    y = ak.flash_attention(q, k, v, causal=True, window=32,
+                           block_q=32, block_k=32, interpret=True)
+    yr = ref.mha_ref(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16_inputs(rng):
+    q = _t(rng, (1, 64, 4, 64), jnp.bfloat16)
+    k = _t(rng, (1, 64, 2, 64), jnp.bfloat16)
+    v = _t(rng, (1, 64, 2, 64), jnp.bfloat16)
+    y = ak.flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    yr = ref.mha_ref(q, k, v)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,82 @@
+"""Data pipeline: determinism, topology independence, sharded assembly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLM, SyntheticLMConfig, make_global_batch
+
+
+def _cfg(**kw):
+    base = dict(vocab=1000, seq=32, global_batch=8, seed=3)
+    base.update(kw)
+    return SyntheticLMConfig(**base)
+
+
+def test_rows_deterministic():
+    g1 = SyntheticLM(_cfg())
+    g2 = SyntheticLM(_cfg())
+    np.testing.assert_array_equal(g1.row(5, 3), g2.row(5, 3))
+    # different steps / rows differ
+    assert not np.array_equal(g1.row(5, 3), g1.row(6, 3))
+    assert not np.array_equal(g1.row(5, 3), g1.row(5, 4))
+
+
+def test_rows_within_vocab():
+    gen = SyntheticLM(_cfg(vocab=50))
+    r = gen.row(0, 0)
+    assert r.min() >= 0 and r.max() < 50
+
+
+def test_topology_independence():
+    """The same global batch regardless of how hosts split the rows --
+    what makes elastic restarts data-transparent."""
+    gen = SyntheticLM(_cfg())
+    full = gen.host_batch(2, range(0, 8))["tokens"]
+    h0 = gen.host_batch(2, range(0, 4))["tokens"]
+    h1 = gen.host_batch(2, range(4, 8))["tokens"]
+    np.testing.assert_array_equal(np.concatenate([h0, h1]), full)
+
+
+def test_multi_codebook_rows():
+    gen = SyntheticLM(_cfg(n_codebooks=4))
+    r = gen.row(0, 0)
+    assert r.shape == (32, 4)
+
+
+def test_markov_structure_learnable():
+    """Successor entropy must be far below uniform (the pipeline produces
+    predictable structure, not noise)."""
+    gen = SyntheticLM(_cfg(vocab=64, seq=4096, branching=2))
+    r = gen.row(0, 0)
+    # count distinct successors per state
+    succ = {}
+    for a, b in zip(r[:-1], r[1:]):
+        succ.setdefault(int(a), set()).add(int(b))
+    avg_succ = np.mean([len(v) for v in succ.values()])
+    assert avg_succ <= 2 * 2 + 1   # ~branching (+ doc breaks), << vocab
+
+
+def test_make_global_batch_sharded():
+    gen = SyntheticLM(_cfg())
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None))
+    batch = make_global_batch(gen, 0, sh)
+    assert batch["tokens"].shape == (8, 32)
+    np.testing.assert_array_equal(
+        np.asarray(batch["tokens"]),
+        gen.host_batch(0, range(8))["tokens"])
+
+
+def test_extra_embeds_stub():
+    gen = SyntheticLM(_cfg())
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("data", None))
+    batch = make_global_batch(gen, 0, sh, extra_embed_dim=16,
+                              extra_tokens=5)
+    assert batch["extra_embeds"].shape == (8, 5, 16)
+    assert bool(jnp.all(jnp.isfinite(batch["extra_embeds"])))

@@ -1,0 +1,51 @@
+"""End-to-end launcher integration: train (with failure injection +
+checkpoint restart) and serve, run as real CLI subprocesses."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from tests.conftest import REPO, SRC
+
+
+def _run(args, timeout=480):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    p = subprocess.run([sys.executable, "-m"] + args, env=env,
+                       capture_output=True, text=True, timeout=timeout,
+                       cwd=REPO)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+def test_train_with_failure_and_restart(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "gemma3-1b", "--smoke",
+                "--steps", "10", "--batch", "4", "--seq", "64",
+                "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+                "--log-every", "5", "--fail-at", "6"])
+    assert "FAILURE (attempt 0): injected failure at step 6" in out
+    assert "restored checkpoint step=4" in out
+    assert "done: 10 steps" in out
+    assert "attempts=2" in out
+
+
+def test_train_moe_arch(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "granite-moe-3b-a800m",
+                "--smoke", "--steps", "4", "--batch", "4", "--seq", "32",
+                "--log-every", "2"])
+    assert "done: 4 steps" in out
+
+
+def test_serve_ssm(tmp_path):
+    out = _run(["repro.launch.serve", "--arch", "mamba2-1.3b", "--smoke",
+                "--batch", "2", "--prompt-len", "16", "--gen", "4"])
+    assert "out shape (2, 4)" in out
+
+
+def test_serve_multicodebook(tmp_path):
+    out = _run(["repro.launch.serve", "--arch", "musicgen-medium",
+                "--smoke", "--batch", "2", "--prompt-len", "8",
+                "--gen", "3"])
+    assert "out shape (2, 3, 4)" in out

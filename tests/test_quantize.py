@@ -1,0 +1,68 @@
+"""Gemmini quantized-datapath numerics: bit-exact round/saturate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as q
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.integers(min_value=-(2**30), max_value=2**30),
+       shift=st.integers(min_value=0, max_value=20))
+def test_rounding_shift_is_round_half_even(x, shift):
+    got = int(q.rounding_shift(jnp.int32(x), shift))
+    want = int(np.round(x / (2 ** shift)).astype(np.int64)) if shift else x
+    # np.round is round-half-even on .5 ties, same convention
+    assert got == want
+
+
+def test_rounding_shift_tie_cases():
+    # 2.5 -> 2, 3.5 -> 4 (ties to even), -2.5 -> -2
+    assert int(q.rounding_shift(jnp.int32(5), 1)) == 2
+    assert int(q.rounding_shift(jnp.int32(7), 1)) == 4
+    assert int(q.rounding_shift(jnp.int32(-5), 1)) == -2
+    assert int(q.rounding_shift(jnp.int32(-7), 1)) == -4
+
+
+def test_saturate():
+    x = jnp.asarray([300, -300, 127, -128, 0], jnp.int32)
+    y = q.saturate(x, jnp.int8)
+    assert y.dtype == jnp.int8
+    assert list(np.asarray(y)) == [127, -128, 127, -128, 0]
+
+
+@settings(max_examples=100, deadline=None)
+@given(scale=st.floats(min_value=1e-6, max_value=0.9999))
+def test_quantize_multiplier_roundtrip(scale):
+    mult, shift = q.quantize_multiplier(scale)
+    assert (1 << 30) <= mult <= (1 << 31)
+    approx = mult * 2.0 ** (-shift)
+    assert abs(approx - scale) / scale < 1e-6
+
+
+@settings(max_examples=100, deadline=None)
+@given(acc=st.integers(min_value=-(2**22), max_value=2**22),
+       scale=st.floats(min_value=1e-4, max_value=0.5))
+def test_fixed_point_rescale_matches_float(acc, scale):
+    mult, shift = q.quantize_multiplier(scale)
+    got = int(q.fixed_point_rescale(jnp.int32(acc), mult, shift))
+    want = acc * scale
+    assert abs(got - want) <= 1.0   # within one ulp of the float product
+
+
+def test_calibrate_quantize_dequantize(rng):
+    x = jnp.asarray(rng.standard_normal(1000) * 3, jnp.float32)
+    scale = q.calibrate_symmetric(x)
+    xq = q.quantize(x, scale)
+    xd = q.dequantize(xq, scale)
+    assert xq.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(xd - x))) <= scale * 0.5 + 1e-6
+
+
+def test_fake_quant_straight_through_grad(rng):
+    x = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(q.fake_quant(v, 0.1)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(64), rtol=0)

@@ -1,0 +1,134 @@
+"""Fault tolerance + gradient compression unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (ErrorFeedbackState, HeartbeatMonitor,
+                           RestartPolicy, StragglerDetector,
+                           compress_grads_with_feedback, int8_compress,
+                           int8_decompress, run_with_restarts,
+                           topk_compress, topk_decompress)
+from repro.runtime.compression import init_error_feedback, \
+    int8_roundtrip_tree
+
+
+# ---------------------------------------------------------------------------
+# heartbeats / stragglers / restart loop
+# ---------------------------------------------------------------------------
+def test_heartbeat_monitor_fake_clock():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1", "h2"], timeout_s=10.0,
+                           clock=lambda: t[0])
+    t[0] = 5.0
+    mon.beat("h0")
+    mon.beat("h1")
+    t[0] = 12.0
+    assert mon.dead() == ["h2"]
+    assert set(mon.alive()) == {"h0", "h1"}
+
+
+def test_straggler_detector():
+    det = StragglerDetector(warmup=5, z_threshold=3.0)
+    flagged = [det.observe(1.0 + 0.01 * (i % 3)) for i in range(20)]
+    assert not any(flagged)
+    assert det.observe(5.0)           # 5x step time -> straggler
+    assert not det.observe(1.0)       # recovery is not flagged
+
+
+def test_run_with_restarts_shrinks_pods():
+    attempts = []
+
+    def make_runner(attempt, pods):
+        attempts.append((attempt, pods))
+
+        def run():
+            if attempt < 2:
+                raise RuntimeError(f"fail {attempt}")
+            return "done"
+        return run
+
+    result, n, pods = run_with_restarts(
+        make_runner, RestartPolicy(max_failures=3), n_pods=2)
+    assert result == "done" and n == 3
+    assert attempts == [(0, 2), (1, 1), (2, 1)]   # elastic shrink 2 -> 1
+
+
+def test_run_with_restarts_exhausts():
+    def make_runner(attempt, pods):
+        def run():
+            raise RuntimeError("always")
+        return run
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(make_runner, RestartPolicy(max_failures=1),
+                          n_pods=1)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+def test_topk_roundtrip(rng):
+    g = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    vals, idx = topk_compress(g, 8)
+    out = topk_decompress(vals, idx, g.shape, g.dtype)
+    # kept entries exact, others zero; kept are the largest-|.|
+    kept = np.zeros(64, bool)
+    kept[np.asarray(idx)] = True
+    assert np.all(np.asarray(out)[kept] == np.asarray(g)[kept])
+    assert np.all(np.asarray(out)[~kept] == 0)
+    assert np.min(np.abs(np.asarray(g)[kept])) >= \
+        np.max(np.abs(np.asarray(g)[~kept])) - 1e-6
+
+
+def test_error_feedback_conserves_mass(rng):
+    grads = {"a": jnp.asarray(rng.standard_normal((100,)), jnp.float32)}
+    state = init_error_feedback(grads)
+    kept, state = compress_grads_with_feedback(grads, state, density=0.05)
+    # kept + residual == original (nothing lost)
+    total = kept["a"] + state.residual["a"]
+    np.testing.assert_allclose(np.asarray(total), np.asarray(grads["a"]),
+                               rtol=1e-6)
+    # second round: residual is added back before selection
+    kept2, state2 = compress_grads_with_feedback(grads, state, density=0.05)
+    assert float(jnp.sum(jnp.abs(kept2["a"]))) > 0
+
+
+def test_error_feedback_converges_to_dense(rng):
+    """Accumulated sparse updates approach the dense gradient sum (DGC's
+    convergence argument); without error feedback they cannot."""
+    g = jnp.asarray(rng.standard_normal((50,)), jnp.float32)
+    grads = {"g": g}
+    state = init_error_feedback(grads)
+    acc = jnp.zeros_like(g)
+    for _ in range(60):
+        kept, state = compress_grads_with_feedback(grads, state,
+                                                   density=0.1)
+        acc = acc + kept["g"]
+    dense_sum = 60 * g
+    rel = float(jnp.linalg.norm(acc - dense_sum) /
+                jnp.linalg.norm(dense_sum))
+    # plain top-k (no feedback) would transmit the same 5 coords forever:
+    vals, idx = topk_compress(g, 5)
+    plain = 60 * topk_decompress(vals, idx, g.shape, g.dtype)
+    rel_plain = float(jnp.linalg.norm(plain - dense_sum) /
+                      jnp.linalg.norm(dense_sum))
+    assert rel < 0.2, rel
+    assert rel < 0.25 * rel_plain, (rel, rel_plain)
+
+
+def test_int8_compression_error_bound(rng):
+    g = jnp.asarray(rng.standard_normal((1000,)) * 3, jnp.float32)
+    q, scale = int8_compress(g)
+    out = int8_decompress(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(out - g))) <= float(scale) * 0.51
+    # payload shrank 4x
+    assert q.nbytes * 4 == g.nbytes
+
+
+def test_int8_roundtrip_tree_preserves_dtype(rng):
+    grads = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.bfloat16)}
+    out = int8_roundtrip_tree(grads)
+    assert out["w"].dtype == jnp.bfloat16

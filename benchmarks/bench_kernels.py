@@ -1,15 +1,19 @@
 """Kernel micro-benchmarks: wall time of the XLA paths on this host +
 static schedule quality (VMEM footprint / arithmetic intensity) of the
-Pallas plans for the TPU target.
+Pallas plans for the TPU target, plus the tuned-vs-greedy schedule
+comparison on the skewed serving GEMM.
 
 On this CPU-only container the wall times are indicative (XLA:CPU), but
 the derived columns -- tile shapes, VMEM working set, arithmetic intensity
 -- are the TPU-relevant outputs of the generator, independent of host.
+
+Timing discipline: ``repro.tune.measure.time_callable`` syncs every
+iteration (the old local ``_time`` only synced the last dispatch, so it
+measured enqueue rate, not execution) and reports min-of-iters alongside
+the mean.
 """
 
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
@@ -18,21 +22,23 @@ import numpy as np
 from repro.core.config import Dataflow, GemminiConfig
 from repro.core.tiling import plan_gemm
 from repro.kernels import ops
+from repro.tune import measure as tmeasure
+
+# The serving-shaped GEMM the tuner targets: skinny M, wide N (a 128-token
+# decode batch against a 4096-wide projection) -- where greedy analytic
+# tiling is furthest from optimal.
+SERVING_SHAPE = (128, 4096, 1024)
 
 
 def _time(fn, *args, iters=5):
-    fn(*args).block_until_ready()            # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6   # us
+    """min/mean microseconds with per-iteration sync."""
+    return tmeasure.time_callable(fn, *args, iters=iters)
 
 
 def gemm_rows():
     rng = np.random.default_rng(0)
     rows = []
-    for (m, n, k) in [(512, 512, 512), (1024, 1024, 1024), (128, 4096, 1024)]:
+    for (m, n, k) in [(512, 512, 512), (1024, 1024, 1024), SERVING_SHAPE]:
         for df in (Dataflow.OS, Dataflow.WS):
             cfg = GemminiConfig(dataflow=df)
             plan = plan_gemm(cfg, m, n, k)
@@ -41,13 +47,75 @@ def gemm_rows():
             f = jax.jit(lambda a, b, cfg=cfg: ops.gemm(a, b, None, cfg=cfg,
                                                        shift=8,
                                                        backend="xla"))
-            us = _time(f, a, b)
+            t = _time(f, a, b)
             rows.append(dict(
-                name=f"gemm_{df.value}_{m}x{n}x{k}", us=us,
+                name=f"gemm_{df.value}_{m}x{n}x{k}", us=t["mean_us"],
+                us_min=t["min_us"],
                 tile=(plan.tile_m, plan.tile_n, plan.tile_k),
                 vmem_kib=(plan.vmem_streamed_bytes +
                           plan.vmem_resident_bytes) // 1024,
                 ai=plan.arithmetic_intensity))
+    return rows
+
+
+def tuned_rows(shape=SERVING_SHAPE, iters: int = 3):
+    """Greedy-vs-tuned schedule on the skewed serving shape.
+
+    Runs the full tuner (measure + analytic tiebreak), persists the winner,
+    then resolves the same shape again to demonstrate the cache hit -- the
+    second resolution must not re-measure.
+    """
+    import os
+    import tempfile
+
+    from repro.core import flags
+    from repro.tune import cache as tcache
+    from repro.tune import tuner
+
+    # Never mutate the user's real plan cache from a benchmark: unless a
+    # cache was explicitly configured, tune into a bench-local temp file.
+    prev_cache_flag = flags.get("tune_cache")
+    scoped = not prev_cache_flag and not os.environ.get("GEMMINI_TUNE_CACHE")
+    if scoped:
+        flags.set_flag("tune_cache", os.path.join(
+            tempfile.mkdtemp(prefix="gemmini-bench-"), "tile_plans.json"))
+        tcache.reset_cache()
+
+    m, n, k = shape
+    rows = []
+    try:
+        for df in (Dataflow.OS, Dataflow.WS):
+            cfg = GemminiConfig(dataflow=df)
+            report = tuner.tune_gemm(cfg, m, n, k, iters=iters)
+            pc = tcache.get_cache()
+            hits0 = pc.hits
+            prev = flags.get("tune_mode")
+            flags.set_flag("tune_mode", "cached")
+            try:
+                again = tuner.resolve_plan(cfg, m, n, k)
+            finally:
+                flags.set_flag("tune_mode", prev)
+            cache_hit = pc.hits == hits0 + 1 and \
+                (again.tile_m, again.tile_n, again.tile_k) == \
+                (report.plan.tile_m, report.plan.tile_n, report.plan.tile_k)
+            g, w = report.greedy, report.plan
+            rows.append(dict(
+                name=f"tune_{df.value}_{m}x{n}x{k}",
+                greedy_tile=(g.plan.tile_m, g.plan.tile_n, g.plan.tile_k),
+                tuned_tile=(w.tile_m, w.tile_n, w.tile_k),
+                greedy_us=g.min_us,
+                tuned_us=min(c.min_us for c in report.candidates),
+                speedup=report.speedup_vs_greedy,
+                n_candidates=len(report.candidates),
+                backend=report.backend,
+                cache_hit=bool(cache_hit)))
+    finally:
+        if scoped:
+            import shutil
+            shutil.rmtree(os.path.dirname(flags.get("tune_cache")),
+                          ignore_errors=True)
+            flags.set_flag("tune_cache", prev_cache_flag)
+            tcache.reset_cache()
     return rows
 
 
@@ -62,9 +130,9 @@ def attention_rows():
         v = jnp.asarray(rng.standard_normal((b, t, kvh, d)), jnp.bfloat16)
         f = jax.jit(lambda q, k, v, win=win: blockwise_attention_xla(
             q, k, v, causal=True, window=win))
-        us = _time(f, q, k, v, iters=3)
-        rows.append(dict(name=f"attn_b{b}_t{t}_w{win}", us=us,
-                         tile=None, vmem_kib=0, ai=0))
+        t_ = _time(f, q, k, v, iters=3)
+        rows.append(dict(name=f"attn_b{b}_t{t}_w{win}", us=t_["mean_us"],
+                         us_min=t_["min_us"], tile=None, vmem_kib=0, ai=0))
     return rows
 
 
@@ -81,22 +149,33 @@ def ssd_rows():
         cc = jnp.asarray(rng.standard_normal((b, t, g, n)) * .3, jnp.float32)
         f = jax.jit(lambda x, dt, bb, cc: ssd_chunked_xla(x, dt, al, bb, cc,
                                                           chunk=256))
-        us = _time(f, x, dt, bb, cc, iters=3)
-        rows.append(dict(name=f"ssd_t{t}_h{h}", us=us, tile=None,
-                         vmem_kib=0, ai=0))
+        t_ = _time(f, x, dt, bb, cc, iters=3)
+        rows.append(dict(name=f"ssd_t{t}_h{h}", us=t_["mean_us"],
+                         us_min=t_["min_us"], tile=None, vmem_kib=0, ai=0))
     return rows
 
 
-def main(csv=True):
+def main(csv=True, with_tuner: bool = True):
     rows = gemm_rows() + attention_rows() + ssd_rows()
+    trows = tuned_rows() if with_tuner else []
     if csv:
         print("# bench_kernels: XLA-path wall time (this host) + TPU plan "
               "quality")
-        print("name,us_per_call,tile,vmem_kib,arith_intensity")
+        print("name,us_per_call,us_min,tile,vmem_kib,arith_intensity")
         for r in rows:
-            print(f"{r['name']},{r['us']:.0f},\"{r['tile']}\","
-                  f"{r['vmem_kib']},{r['ai']:.1f}")
-    return rows
+            print(f"{r['name']},{r['us']:.0f},{r['us_min']:.0f},"
+                  f"\"{r['tile']}\",{r['vmem_kib']},{r['ai']:.1f}")
+        if trows:
+            print("# tuner: greedy vs tuned plan on the serving shape "
+                  "(backend-aware measurement, analytic tiebreak)")
+            print("name,greedy_tile,tuned_tile,greedy_us,tuned_us,speedup,"
+                  "candidates,backend,cache_hit")
+            for r in trows:
+                print(f"{r['name']},\"{r['greedy_tile']}\","
+                      f"\"{r['tuned_tile']}\",{r['greedy_us']:.0f},"
+                      f"{r['tuned_us']:.0f},{r['speedup']:.3f},"
+                      f"{r['n_candidates']},{r['backend']},{r['cache_hit']}")
+    return rows + trows
 
 
 if __name__ == "__main__":

@@ -1,18 +1,51 @@
 """Benchmark driver: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: kernels only,
+                                                     # emits BENCH_kernels.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import sys
 import time
 
 
-def main() -> None:
+def _emit_json(rows, path: str) -> None:
+    payload = {
+        "schema": 1,
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=str)
+    print(f"# wrote {path} ({len(rows)} rows)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="kernel section only; write BENCH_kernels.json")
+    ap.add_argument("--json-out", default="BENCH_kernels.json",
+                    help="where --smoke writes the kernel rows")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bench_dse, bench_kernels, bench_roofline,
                             bench_system_amdahl, bench_tiling)
     t0 = time.time()
+    if args.smoke:
+        print("\n===== Kernel micro-benchmarks (smoke) =====")
+        rows = bench_kernels.main()
+        _emit_json(rows, args.json_out)
+        print(f"\n# smoke benchmarks done in {time.time() - t0:.1f}s")
+        return
+
     sections = [
         ("DSE (Table 1 / Figs 6-8)", bench_dse.main),
         ("System Amdahl (section 8 finding)", bench_system_amdahl.main),
@@ -20,13 +53,18 @@ def main() -> None:
         ("Kernel micro-benchmarks", bench_kernels.main),
         ("Roofline table (dry-run artifacts)", bench_roofline.main),
     ]
+    rows = None
     for title, fn in sections:
         print(f"\n===== {title} =====")
         try:
-            fn()
+            out = fn()
         except Exception as e:  # noqa
             print(f"SECTION FAILED: {e!r}", file=sys.stderr)
             raise
+        if fn is bench_kernels.main:
+            rows = out
+    if rows is not None:
+        _emit_json(rows, args.json_out)
     print(f"\n# all benchmarks done in {time.time() - t0:.1f}s")
 
 

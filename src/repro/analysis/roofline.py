@@ -171,6 +171,8 @@ def analyze(compiled, lowered_text: Optional[str], *, arch: str, shape: str,
     text = lowered_text if lowered_text is not None else compiled.as_text()
     rep = hlo_lib.analyze_hlo(text)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):      # jax < 0.6 returns one dict per device
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hbm_peak = float(ma.argument_size_in_bytes + ma.output_size_in_bytes +
                      ma.temp_size_in_bytes) if ma else 0.0

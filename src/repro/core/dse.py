@@ -16,12 +16,15 @@ Because we target TPUs in software, the three evaluation axes map to:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import isa
 from repro.core.config import (DESIGN_POINTS, PAPER_DESIGN_POINTS, Dataflow,
                                GemminiConfig)
 from repro.core.tiling import TilePlan, plan_gemm
+
+# Signature of plan_gemm; the tuner provides a measured-schedule drop-in.
+PlanFn = Callable[..., TilePlan]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,7 +76,13 @@ _HOST_FLOPS_PER_CYCLE = {"rocket": 1.0, "boom": 3.0}
 
 def evaluate(cfg: GemminiConfig, wl: Workload, sys: isa.SystemParams,
              host: str = "rocket",
-             dataflow: Optional[Dataflow] = None) -> Dict[str, float]:
+             dataflow: Optional[Dataflow] = None,
+             plan_fn: Optional[PlanFn] = None) -> Dict[str, float]:
+    """``plan_fn`` swaps the schedule source: default is the greedy analytic
+    solver; pass ``repro.tune.tuned_plan_fn()`` to evaluate design points on
+    *measured* schedules -- the measured-cost backend that calibrates this
+    analytic model."""
+    plan_fn = plan_fn or plan_gemm
     engine_cycles = 0.0
     hbm = 0.0
     macs = 0.0
@@ -81,8 +90,8 @@ def evaluate(cfg: GemminiConfig, wl: Workload, sys: isa.SystemParams,
     useful = 0.0
     bottlenecks: Dict[str, float] = {}
     for g in wl.gemms:
-        plan = plan_gemm(cfg, g.m, g.n, g.k, dataflow=dataflow,
-                         has_bias=g.has_bias)
+        plan = plan_fn(cfg, g.m, g.n, g.k, dataflow=dataflow,
+                       has_bias=g.has_bias)
         t = isa.simulate(plan, cfg, sys, has_bias=g.has_bias)
         engine_cycles += t.total_cycles * g.repeats
         bottlenecks[t.bottleneck] = bottlenecks.get(t.bottleneck, 0.0) + \
@@ -104,7 +113,8 @@ def evaluate(cfg: GemminiConfig, wl: Workload, sys: isa.SystemParams,
 
 def run_design_points(wl: Workload,
                       points: Sequence[int] = tuple(range(1, 11)),
-                      design_points=None) -> List[DSEResult]:
+                      design_points=None,
+                      plan_fn: Optional[PlanFn] = None) -> List[DSEResult]:
     """Evaluate Table-1 design points 1-10 on a workload (paper-native
     scale by default; pass config.DESIGN_POINTS for the TPU-scaled set)."""
     out = []
@@ -115,7 +125,7 @@ def run_design_points(wl: Workload,
         host = "boom" if p == 10 else "rocket"
         df = Dataflow.WS if p == 2 else (None if cfg.dataflow is not
                                          Dataflow.BOTH else Dataflow.OS)
-        r = evaluate(cfg, wl, sys, host=host, dataflow=df)
+        r = evaluate(cfg, wl, sys, host=host, dataflow=df, plan_fn=plan_fn)
         out.append(DSEResult(point=p, workload=wl.name,
                              engine_cycles=r["engine_cycles"],
                              host_cycles=r["host_cycles"],

@@ -8,9 +8,21 @@ tree and compared cell-by-cell. The dry-run CLI sets them via
 
 from __future__ import annotations
 
+import os
 from typing import Any, Dict
 
+TUNE_MODES = ("off", "cached", "full")
+
 _DEFAULTS: Dict[str, Any] = {
+    # T: empirical tile-plan autotuner (src/repro/tune). "off" = greedy
+    # analytic plans only; "cached" = consult the persistent plan cache,
+    # greedy on a miss (never measures); "full" = measure candidate plans
+    # for unseen shapes and persist the winners. Seeded from $GEMMINI_TUNE
+    # so whole-model launchers pick it up without code changes.
+    "tune_mode": os.environ.get("GEMMINI_TUNE", "off"),
+    # Plan-cache file override; empty = $GEMMINI_TUNE_CACHE, else
+    # ~/.cache/gemmini-repro/tile_plans.json (see repro.tune.cache).
+    "tune_cache": os.environ.get("GEMMINI_TUNE_CACHE", ""),
     # A: update KV caches with a one-hot select instead of
     # dynamic-update-slice (DUS on a sequence-sharded cache forces the
     # partitioner to all-gather the whole cache; select is elementwise and
@@ -53,6 +65,8 @@ def get(name: str) -> Any:
 def set_flag(name: str, value: Any) -> None:
     if name not in _DEFAULTS:
         raise KeyError(f"unknown flag {name!r}; have {sorted(_DEFAULTS)}")
+    if name == "tune_mode" and value not in TUNE_MODES:
+        raise ValueError(f"tune_mode must be one of {TUNE_MODES}, got {value!r}")
     _values[name] = value
 
 

@@ -74,6 +74,14 @@ class GemminiInstance:
         return dataclasses.replace(self, backend=backend)
 
 
+def default_engine_backend() -> str:
+    """The engine backend for launchers on this host: the Pallas kernels
+    (where tile plans -- tuned or greedy -- govern execution) on a TPU,
+    the plan-free XLA SPMD path everywhere else."""
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
 @functools.lru_cache(maxsize=64)
 def elaborate(cfg: GemminiConfig, backend: str = "xla") -> GemminiInstance:
     """Run the generator: validate the parameterization and build an instance."""

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import repro.kernels as kernels_pkg
+
 _NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
@@ -152,7 +154,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((block_q,), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels_pkg.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -260,7 +262,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((rep,), jnp.float32),
             pltpu.VMEM((rep, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels_pkg.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qg, kt, vt, lens)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import repro.kernels as kernels_pkg
+
 from repro.core.config import Activation, GemminiConfig
 from repro.kernels import epilogue as epi
 
@@ -123,7 +125,7 @@ def conv2d_implicit(x: jnp.ndarray, w: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, nco * co_tile),
                                        cfg.output_jnp),
         scratch_shapes=[pltpu.VMEM((oh * ow, co_tile), cfg.acc_jnp)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels_pkg.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, wm, bias)

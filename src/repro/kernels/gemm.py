@@ -14,16 +14,17 @@ Dataflow mapping (DESIGN.md section 2):
   is applied *inside the kernel* on the last K step ("within PEs (for the
   output-stationary dataflow)").
 
-* **WS (weight-stationary)** -- grid (gn, gk, gm) with M innermost. The B
-  (weight) tile's block index is constant along the inner M axis, so the
-  weight block stays resident in VMEM while A tiles stream past it -- the
-  preloaded PE weight buffer. Partial sums are accumulated through an
-  aliased accumulator operand (read-modify-write), which is the paper's
-  accumulator-SRAM-with-input-adders. The epilogue runs as a separate pass
-  over the accumulator (``accumulator_epilogue``), matching "at the output of
-  the accumulator (for the weight-stationary dataflow)". A bias D is applied
-  by initializing the accumulator with it ("executing a mvin into the
-  accumulator").
+* **WS (weight-stationary)** -- weight-major grid (gn, gm, gk): all the work
+  under one weight column strip (fixed j) completes before the next weight
+  tiles are touched -- the preloaded PE weight buffer's schedule. Partial
+  sums accumulate in a VMEM accumulator scratch across the K stream (the
+  paper's accumulator-SRAM-with-input-adders), and the epilogue is fused on
+  the last K step "at the output of the accumulator (for the
+  weight-stationary dataflow)" -- a single pallas_call, so the int32
+  accumulator never round-trips HBM. A bias D is applied by initializing
+  the accumulator with it ("executing a mvin into the accumulator");
+  ``accumulator_epilogue`` remains as the explicit-mvout API for callers
+  that hold a raw accumulator.
 
 Both kernels double-buffer streamed operands through the Pallas grid pipeline
 (pipeline_depth=2 in the generator config); pipeline_depth=1 ("fully
@@ -39,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+import repro.kernels as kernels_pkg
 
 from repro.core.config import Activation, Dataflow, GemminiConfig
 from repro.core.tiling import TilePlan
@@ -110,7 +113,7 @@ def gemm_os(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
         out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), cfg.output_jnp),
         scratch_shapes=[pltpu.VMEM((tm, tn), cfg.acc_jnp)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=semantics),
+        compiler_params=kernels_pkg.tpu_compiler_params(dimension_semantics=semantics),
         interpret=interpret,
     )(a, b, d)
 
@@ -118,50 +121,81 @@ def gemm_os(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
 # ---------------------------------------------------------------------------
 # Weight-stationary kernel
 # ---------------------------------------------------------------------------
-def _ws_kernel(b_ref, a_ref, acc_in_ref, acc_out_ref, *, acc_dtype):
-    # B resident (index constant along inner m axis); A streams; partial sums
-    # accumulate through the aliased accumulator (read-modify-write adders).
-    acc_out_ref[...] = acc_in_ref[...] + jax.lax.dot_general(
+def _ws_kernel(b_ref, a_ref, d_ref, c_ref, acc_ref, *, nk: int,
+               acc_dtype, out_dtype, shift: int, activation: Activation,
+               has_bias: bool):
+    # Weight-major traversal: all work under one weight column strip (fixed
+    # j) completes before the next weight tiles are touched. Partial sums
+    # live in the VMEM accumulator scratch across the K stream -- the
+    # accumulator-SRAM-with-input-adders of the paper. (The seed's
+    # accumulate-through-aliased-HBM-io pattern was unsound for k_steps > 1:
+    # Pallas does not guarantee read-after-write through an input/output
+    # alias across separated grid revisits.)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _preload():
+        if has_bias:
+            # "executing a mvin into the accumulator" (paper: WS bias path).
+            acc_ref[...] = d_ref[...].astype(acc_dtype)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
         a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=acc_dtype)
+
+    @pl.when(kk == nk - 1)
+    def _flush():
+        # Epilogue "at the output of the accumulator" (paper: WS scaling
+        # location), fused on the last K step so the accumulator never takes
+        # an HBM round-trip through a separate epilogue pass.
+        c_ref[...] = epi.apply(acc_ref[...], shift=shift,
+                               activation=activation, out_dtype=out_dtype)
 
 
 def gemm_ws(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
             plan: TilePlan, cfg: GemminiConfig, *, shift: int = 0,
             activation: Activation = Activation.NONE,
             interpret: bool = False) -> jnp.ndarray:
-    """Weight-stationary GEMM: resident weights, streamed A, aliased acc."""
+    """Weight-stationary GEMM, one pallas_call end to end.
+
+    Weight-major grid (gn outermost), VMEM-resident accumulator across the K
+    stream, and the rounding-shift/saturation/activation epilogue fused on
+    the final K step. The int32 accumulator never exists in HBM at all: the
+    only HBM write is the finished C at output precision (the seed lowered
+    WS as acc-write + acc-re-read + epilogue-write across two pallas_calls).
+    """
     m, n, k = plan.m, plan.n, plan.k
     tm, tn, tk = plan.tile_m, plan.tile_n, plan.tile_k
     gm, gn, gk = plan.grid
     assert a.shape == (m, k) and b.shape == (k, n)
+    has_bias = d is not None
+    if not has_bias:
+        d = jnp.zeros((1, n), cfg.acc_jnp)  # placeholder operand (never read)
 
-    # mvin D into the accumulator (or zeros) before the compute stream.
-    if d is not None:
-        acc0 = jnp.broadcast_to(d.astype(cfg.acc_jnp), (m, n))
-    else:
-        acc0 = jnp.zeros((m, n), cfg.acc_jnp)
+    kernel = functools.partial(
+        _ws_kernel, nk=gk, acc_dtype=cfg.acc_jnp, out_dtype=cfg.output_jnp,
+        shift=shift, activation=activation, has_bias=has_bias)
 
-    acc = pl.pallas_call(
-        functools.partial(_ws_kernel, acc_dtype=cfg.acc_jnp),
-        grid=(gn, gk, gm),  # m innermost: weight tile resident across m
+    return pl.pallas_call(
+        kernel,
+        grid=(gn, gm, gk),  # weight-major: finish a B column strip, move on
         in_specs=[
-            pl.BlockSpec((tk, tn), lambda j, kk, i: (kk, j)),   # B (resident)
-            pl.BlockSpec((tm, tk), lambda j, kk, i: (i, kk)),   # A (streams)
-            pl.BlockSpec((tm, tn), lambda j, kk, i: (i, j)),    # acc in
+            pl.BlockSpec((tk, tn), lambda j, i, kk: (kk, j)),   # B (weights)
+            pl.BlockSpec((tm, tk), lambda j, i, kk: (i, kk)),   # A (streams)
+            pl.BlockSpec((tm if has_bias else 1, tn),
+                         (lambda j, i, kk: (i, j)) if has_bias
+                         else (lambda j, i, kk: (0, j))),       # D (bias)
         ],
-        out_specs=pl.BlockSpec((tm, tn), lambda j, kk, i: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), cfg.acc_jnp),
-        input_output_aliases={2: 0},
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        out_specs=pl.BlockSpec((tm, tn), lambda j, i, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), cfg.output_jnp),
+        scratch_shapes=[pltpu.VMEM((tm, tn), cfg.acc_jnp)],
+        compiler_params=kernels_pkg.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
             if cfg.pipeline_depth > 1 else ("arbitrary",) * 3),
         interpret=interpret,
-    )(b, a, acc0)
-
-    # Epilogue at the output of the accumulator (paper: WS scaling location).
-    return accumulator_epilogue(acc, plan, cfg, shift=shift,
-                                activation=activation, interpret=interpret)
+    )(b, a, d)
 
 
 def _epilogue_kernel(acc_ref, c_ref, *, shift, activation, out_dtype):

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import repro.kernels as kernels_pkg
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
                 nc: int, chunk: int):
@@ -124,7 +126,7 @@ def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
                                lambda bb, hh, cc: (bb, hh, cc, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, nc, q, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=kernels_pkg.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xt, dtt, a, bt, ct)

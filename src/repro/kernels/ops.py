@@ -32,9 +32,28 @@ Backend = str  # "pallas" | "interpret" | "xla"
 
 def _pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
     pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr < 0 or pc < 0:
+        raise ValueError(f"operand {x.shape} exceeds its plan dims "
+                         f"({rows}, {cols}); plan solved for a smaller GEMM?")
     if pr == 0 and pc == 0:
         return x
     return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _resolve_plan(cfg: GemminiConfig, m: int, n: int, k: int, *,
+                  dataflow: Optional[Dataflow], has_bias: bool) -> TilePlan:
+    """Plan for this GEMM, honoring the GEMMINI_TUNE flag.
+
+    ``tune_mode=off`` keeps the greedy analytic solver on the hot path with
+    no tuner import at all; otherwise the tuner consults (and under ``full``
+    populates) the persistent plan cache.
+    """
+    from repro.core import flags
+    if flags.get("tune_mode") == "off":
+        return plan_gemm(cfg, m, n, k, dataflow=dataflow, has_bias=has_bias)
+    from repro.tune import tuner
+    return tuner.resolve_plan(cfg, m, n, k, dataflow=dataflow,
+                              has_bias=has_bias)
 
 
 def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
@@ -54,8 +73,8 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
         return ref_ops.gemm_ref(a, b, d, acc_dtype=cfg.acc_jnp,
                                 out_dtype=cfg.output_jnp, shift=shift,
                                 activation=activation)
-    plan = plan or plan_gemm(cfg, m, n, k, dataflow=dataflow,
-                             has_bias=d is not None)
+    plan = plan or _resolve_plan(cfg, m, n, k, dataflow=dataflow,
+                                 has_bias=d is not None)
     ap = _pad2(a, plan.m, plan.k)
     bp = _pad2(b, plan.k, plan.n)
     dp = None

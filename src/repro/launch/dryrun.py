@@ -28,7 +28,7 @@ from repro.analysis import roofline
 from repro.core.config import GemminiConfig
 from repro.core.generator import elaborate
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import activate_mesh, make_production_mesh
 from repro.optim import adamw
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -50,7 +50,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *, verbose: bool = True,
     spec = steps_lib.input_specs(cfg, shape, mesh)
     kind = spec["kind"]
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         if kind == "train":
             fn = steps_lib.make_train_step(
                 engine, cfg, adamw.AdamWConfig(), mesh,

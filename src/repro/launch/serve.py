@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import flags
 from repro.core.config import GemminiConfig
-from repro.core.generator import elaborate
+from repro.core.generator import default_engine_backend, elaborate
 from repro.models import transformer as tf
 
 
@@ -35,8 +36,19 @@ def sample(logits: jnp.ndarray, key, temperature: float = 1.0) -> jnp.ndarray:
 def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
           temperature: float = 1.0, seed: int = 0, eos_id: int = -1):
     engine = elaborate(GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
-                                     output_dtype="bf16"), "xla")
+                                     output_dtype="bf16"),
+                       default_engine_backend())
     max_seq = prompt_len + gen_len
+    if flags.get("tune_mode") != "off":
+        # Pre-resolve (and under tune_mode=full, tune + persist) a plan for
+        # every projection GEMM before the first request hits the engine.
+        from repro import tune
+        stats = tune.warm_model_plans(engine.cfg, model_cfg, batch,
+                                      prompt_len)
+        print(f"[serve] plan warmup ({flags.get('tune_mode')}): "
+              f"{stats['shapes']} shapes, {stats['cache_hits']} cache hits, "
+              f"{stats['cache_misses']} misses "
+              f"(cache: {tune.default_cache_path()})")
     key = jax.random.PRNGKey(seed)
     key, pk, sk = jax.random.split(key, 3)
 
@@ -90,7 +102,13 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--tune", choices=flags.TUNE_MODES, default=None,
+                    help="tile-plan autotuning mode (default: $GEMMINI_TUNE)")
     args = ap.parse_args(argv)
+    # Always re-set: set_flag validates, so a typo'd $GEMMINI_TUNE fails at
+    # startup instead of (maybe never) at the first plan resolution.
+    flags.set_flag("tune_mode", args.tune if args.tune is not None
+                   else flags.get("tune_mode"))
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen, temperature=args.temperature)

@@ -48,11 +48,14 @@ import numpy as np                                              # noqa: E402
 
 from repro import configs                                       # noqa: E402
 from repro.checkpoint import CheckpointManager                  # noqa: E402
+from repro.core import flags                                    # noqa: E402
 from repro.core.config import GemminiConfig                     # noqa: E402
-from repro.core.generator import elaborate                      # noqa: E402
+from repro.core.generator import (default_engine_backend,      # noqa: E402
+                                  elaborate)
 from repro.data import SyntheticLM, SyntheticLMConfig, \
     make_global_batch                                           # noqa: E402
 from repro.launch import sharding as shd                        # noqa: E402
+from repro.launch.mesh import activate_mesh, make_mesh          # noqa: E402
 from repro.launch import steps as steps_lib                     # noqa: E402
 from repro.models import transformer as tf                      # noqa: E402
 from repro.optim import adamw                                   # noqa: E402
@@ -66,9 +69,7 @@ def pick_mesh(tp_hint: int = 0):
     tp = tp_hint or max(1, min(16, n))
     while n % tp:
         tp //= 2
-    return jax.make_mesh(
-        (n // tp, tp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // tp, tp), ("data", "model"))
 
 
 @dataclasses.dataclass
@@ -82,7 +83,8 @@ class RunResult:
 def train_once(args, model_cfg, pods: int) -> RunResult:
     mesh = pick_mesh(args.tp)
     engine = elaborate(GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
-                                     output_dtype="bf16"), "xla")
+                                     output_dtype="bf16"),
+                       default_engine_backend())
     opt_cfg = adamw.AdamWConfig(lr=args.lr)
     batch, seq = args.batch, args.seq
 
@@ -94,7 +96,7 @@ def train_once(args, model_cfg, pods: int) -> RunResult:
     tok_sharding = jax.sharding.NamedSharding(
         mesh, shd.tokens_spec(mesh, batch, tok_nd))
 
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         pshapes = steps_lib.param_shapes(model_cfg)
         pspecs = shd.param_specs(pshapes, mesh)
         pshard = shd.to_named(pspecs, mesh)
@@ -189,7 +191,13 @@ def main(argv=None):
     ap.add_argument("--max-restarts", type=int, default=2)
     ap.add_argument("--xla-lhs", action="store_true",
                     help="enable latency-hiding-scheduler XLA flags")
+    ap.add_argument("--tune", choices=flags.TUNE_MODES, default=None,
+                    help="tile-plan autotuning mode (default: $GEMMINI_TUNE)")
     args = ap.parse_args(argv)
+    # Always re-set: set_flag validates, so a typo'd $GEMMINI_TUNE fails at
+    # startup instead of (maybe never) at the first plan resolution.
+    flags.set_flag("tune_mode", args.tune if args.tune is not None
+                   else flags.get("tune_mode"))
 
     model_cfg = configs.get_smoke(args.arch) if args.smoke \
         else configs.get(args.arch)

@@ -187,6 +187,54 @@ def _block_init(key, cfg: ModelConfig) -> Params:
     return p
 
 
+# Param names that are engine-backed (d_in, d_out) projection weights.
+# MoE expert stacks (4D: layers x experts x d x d_ff) are excluded: their
+# per-expert GEMMs run through einsum in models/moe.py, not through
+# ops.gemm, so they never resolve a tile plan. (The MoE router and shared
+# MLP do route through the engine and are covered.)
+_PROJ_KEYS = frozenset({"wq", "wk", "wv", "wo", "wi", "wg", "router",
+                        "in_proj", "out_proj", "unembed", "heads"})
+
+
+def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int, *,
+                      include_decode: bool = True) -> list:
+    """Every (M, N, K) GEMM shape the model's projections run.
+
+    Walked from the parameter tree under ``jax.eval_shape`` (no allocation):
+    each projection weight's trailing (d_in, d_out) becomes a
+    (batch*seq, d_out, d_in) prefill/train GEMM, plus the (batch, d_out,
+    d_in) single-token decode GEMM. Used by ``repro.tune.warm_model_plans``
+    to pre-tune a whole model's schedule before the first request arrives.
+    """
+    import functools
+    shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    ms = [batch * seq] + ([batch] if include_decode else [])
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    out, seen = [], set()
+    for path, leaf in leaves:
+        if len(leaf.shape) < 2:
+            continue
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, jax.tree_util.DictKey)), "")
+        in_moe = any(isinstance(p, jax.tree_util.DictKey) and p.key == "moe"
+                     for p in path)
+        if in_moe and name in ("wi", "wg", "wo"):
+            continue                      # einsum expert GEMMs, not engine
+        if name in _PROJ_KEYS:
+            k_in, n_out = leaf.shape[-2], leaf.shape[-1]
+        elif name == "embed" and cfg.tie_embeddings and cfg.n_codebooks == 1:
+            k_in, n_out = leaf.shape[-1], leaf.shape[-2]   # unembed: table.T
+        else:
+            continue
+        for m in ms:
+            t = (int(m), int(n_out), int(k_in))
+            if t not in seen:
+                seen.add(t)
+                out.append(t)
+    return out
+
+
 def init_params(key, cfg: ModelConfig) -> Params:
     ks = jax.random.split(key, 4 + cfg.n_layers)
     if cfg.n_codebooks > 1:

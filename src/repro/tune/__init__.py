@@ -1,0 +1,49 @@
+"""Empirical tile-plan autotuning (the measured "header file").
+
+The paper ships analytically-derived tiling parameters in a generated
+header; this subsystem replaces that static schedule with a measured one:
+
+* ``tiling.enumerate_plans``   -- the candidate lattice (core.tiling),
+* ``measure``                  -- the per-iteration-synced timing harness,
+* ``tuner.resolve_plan``       -- flag-gated plan resolution for the kernels,
+* ``cache``                    -- the persistent JSON plan cache.
+
+Controlled by ``GEMMINI_TUNE={off,cached,full}`` (see ``core.flags`` and
+docs/tuning.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.config import Dataflow, GemminiConfig
+from repro.tune.cache import (PlanCache, default_cache_path, fingerprint,
+                              get_cache, reset_cache)
+from repro.tune.measure import (measure_plan, measurement_backend,
+                                time_callable)
+from repro.tune.tuner import (TIE_BAND, TuneReport, analytic_cycles,
+                              resolve_plan, tune_gemm, tuned_plan_fn)
+
+__all__ = [
+    "PlanCache", "TIE_BAND", "TuneReport", "analytic_cycles",
+    "default_cache_path", "fingerprint", "get_cache", "measure_plan",
+    "measurement_backend", "reset_cache", "resolve_plan", "time_callable",
+    "tune_gemm", "tuned_plan_fn", "warm_model_plans",
+]
+
+
+def warm_model_plans(cfg: GemminiConfig, model_cfg, batch: int, seq: int, *,
+                     dataflow: Optional[Dataflow] = None,
+                     include_decode: bool = True) -> Dict[str, int]:
+    """Resolve (and, under ``tune_mode=full``, tune + persist) a plan for
+    every GEMM shape a model will run, so serving never tunes on the request
+    path. Returns {shapes, cache_hits, cache_misses} for the warm pass."""
+    from repro.models.transformer import model_gemm_shapes
+    cache = get_cache()
+    h0, m0 = cache.hits, cache.misses
+    shapes = model_gemm_shapes(model_cfg, batch, seq,
+                               include_decode=include_decode)
+    for (m, n, k) in shapes:
+        resolve_plan(cfg, m, n, k, dataflow=dataflow)
+    return {"shapes": len(shapes), "cache_hits": cache.hits - h0,
+            "cache_misses": cache.misses - m0}

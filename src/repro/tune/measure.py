@@ -1,0 +1,75 @@
+"""Wall-clock measurement harness for candidate schedules.
+
+The one non-negotiable rule of timing dispatched JAX computations: sync
+*inside* the loop. ``fn(*args)`` returns as soon as the work is enqueued, so
+a loop that only syncs the last result measures dispatch overhead, not
+execution (the original ``bench_kernels._time`` bug). ``time_callable`` calls
+``jax.block_until_ready`` on every iteration and reports min-of-iters (the
+noise-robust statistic schedulers should rank by) alongside the mean.
+
+Backend selection for plan measurement:
+
+* on a TPU host the candidate is lowered for real (``kernels.gemm`` with the
+  candidate plan) -- the measured ranking is the true Mosaic ranking;
+* on CPU hosts (CI) Mosaic cannot lower, so we time a *schedule proxy*: the
+  XLA reference GEMM on operands padded to the candidate plan's dims. That
+  captures the padding waste a bad snap costs, but candidates that differ
+  only in tile split time identically -- the tuner's analytic-cost tiebreak
+  (``tuner.analytic_cycles``) decides those, keeping CI deterministic.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import GemminiConfig
+from repro.core.tiling import TilePlan
+
+
+def time_callable(fn: Callable, *args, iters: int = 5,
+                  warmup: int = 1) -> Dict[str, float]:
+    """Time ``fn(*args)``: per-iteration sync, returns mean/min microseconds."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))     # compile + warm caches
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return {"mean_us": sum(times) / len(times), "min_us": min(times),
+            "iters": float(iters)}
+
+
+def measurement_backend() -> str:
+    """"pallas" when Mosaic can lower here, else the XLA schedule proxy."""
+    return "pallas" if jax.default_backend() == "tpu" else "proxy"
+
+
+def measure_plan(cfg: GemminiConfig, plan: TilePlan, *, has_bias: bool = False,
+                 backend: Optional[str] = None, iters: int = 3,
+                 warmup: int = 1) -> Dict[str, float]:
+    """Wall-time one candidate plan on this host (zeros operands: timing is
+    data-independent for dense GEMM)."""
+    backend = backend or measurement_backend()
+    a = jnp.zeros((plan.m, plan.k), cfg.input_jnp)
+    b = jnp.zeros((plan.k, plan.n), cfg.input_jnp)
+    d = jnp.zeros((plan.m, plan.n), cfg.acc_jnp) if has_bias else None
+
+    if backend == "pallas":
+        from repro.kernels import gemm as gemm_kernel
+
+        def run(a, b):
+            return gemm_kernel.gemm(a, b, d, plan, cfg,
+                                    dataflow=plan.dataflow)
+    else:
+        from repro.kernels import ref as ref_ops
+
+        def run(a, b):
+            return ref_ops.gemm_ref(a, b, d, acc_dtype=cfg.acc_jnp,
+                                    out_dtype=cfg.output_jnp)
+
+    return time_callable(jax.jit(run), a, b, iters=iters, warmup=warmup)

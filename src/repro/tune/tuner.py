@@ -1,0 +1,205 @@
+"""Empirical tile-plan autotuner.
+
+``resolve_plan`` is the single entry the kernels' dispatch layer
+(``kernels.ops.gemm``) consults on every un-planned GEMM:
+
+* ``tune_mode="off"``    -- greedy analytic plan (the paper's static header).
+* ``tune_mode="cached"`` -- persisted tuned plan if one exists, greedy
+                            otherwise; never measures.
+* ``tune_mode="full"``   -- cache hit, else measure ``enumerate_plans``
+                            candidates, pick the winner, persist it.
+
+Winner selection is measurement-led but deterministic: candidates whose
+min-of-iters time lands within ``TIE_BAND`` of the best are considered tied
+(CPU proxy timings, and even real TPU timings, are noisy at the few-percent
+level), and ties break by the analytic decoupled-queue cycle model
+(``core.isa``), then by tile shape. On CPU CI hosts every candidate times
+identically up to padding, so the analytic model effectively ranks them --
+same answer every run.
+
+The tuner doubles as the DSE's measured-cost backend: ``tuned_plan_fn``
+returns a drop-in replacement for ``tiling.plan_gemm`` that
+``core.dse.evaluate`` accepts, letting the analytic model be calibrated
+against measured schedules (ROADMAP follow-on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+from repro.core import flags, isa
+from repro.core import tiling
+from repro.core.config import Dataflow, GemminiConfig, bytes_of
+from repro.core.tiling import TilePlan, enumerate_plans, plan_gemm
+from repro.tune import measure
+from repro.tune.cache import PlanCache, get_cache
+
+# Measured times within 5% of the best are a tie -> analytic model decides.
+TIE_BAND = 0.05
+
+
+def analytic_cycles(plan: TilePlan, cfg: GemminiConfig, *,
+                    has_bias: bool = False,
+                    sys: Optional[isa.SystemParams] = None) -> float:
+    """Deterministic cost of the plan *as the TPU kernels lower it*.
+
+    Not ``isa.simulate``: that models the paper's ASIC dataflows (WS keeps B
+    resident across M), whereas both Pallas kernels run K-innermost and
+    re-fetch the B tile every K step of every output tile (see
+    kernels/gemm.py). Ranking candidates by the ASIC model would reward
+    B-reuse the lowered kernel does not realize, so the tiebreak uses the
+    kernel-faithful traffic:
+
+        A+B fetches = gm*gn*gk*(tm*tk + tk*tn), one C write per output.
+    """
+    sys = sys or isa.ROCKET
+    gm, gn, gk = plan.grid
+    tm, tn, tk = plan.tile_m, plan.tile_n, plan.tile_k
+    in_b = bytes_of(cfg.input_dtype)
+    load_bytes = gm * gn * gk * (tm * tk + tk * tn) * in_b
+    if has_bias:
+        load_bytes += gm * gn * tm * tn * bytes_of(cfg.acc_dtype)
+    store_bytes = plan.m * plan.n * bytes_of(cfg.output_dtype)
+    bw = sys.effective_bw(cfg.dim)
+    macs_per_cycle = cfg.dim * cfg.dim * (1.0 if cfg.pipeline_depth > 1
+                                          else 0.5)
+    return max(plan.macs / macs_per_cycle,
+               load_bytes / bw, store_bytes / bw)
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateResult:
+    plan: TilePlan
+    min_us: float
+    mean_us: float
+    cycles: float
+    is_greedy: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneReport:
+    plan: TilePlan                      # the winner
+    candidates: Tuple[CandidateResult, ...]
+    greedy: CandidateResult
+    backend: str
+    cache_key: str = ""
+
+    @property
+    def speedup_vs_greedy(self) -> float:
+        best = min(c.min_us for c in self.candidates)
+        return self.greedy.min_us / best if best else 1.0
+
+
+def tune_gemm(cfg: GemminiConfig, m: int, n: int, k: int, *,
+              dataflow: Optional[Dataflow] = None, has_bias: bool = False,
+              backend: Optional[str] = None, iters: int = 3,
+              max_candidates: int = 16,
+              cache: Optional[PlanCache] = None,
+              persist: bool = True) -> TuneReport:
+    """Measure the candidate lattice and persist the winner."""
+    backend = backend or measure.measurement_backend()
+    greedy_plan = plan_gemm(cfg, m, n, k, dataflow=dataflow,
+                            has_bias=has_bias)
+    candidates = enumerate_plans(cfg, m, n, k, dataflow=dataflow,
+                                 has_bias=has_bias,
+                                 max_candidates=max_candidates)
+
+    results: List[CandidateResult] = []
+    greedy_result: Optional[CandidateResult] = None
+    # The CPU proxy only observes padded problem dims, so candidates sharing
+    # them MUST time identically or host noise (not the analytic tiebreak)
+    # would pick the winner: memoize per padded-dims group. Real pallas
+    # measurement sees the actual schedule -- never memoized.
+    proxy_memo: dict = {}
+    for plan in candidates:
+        memo_key = (plan.m, plan.n, plan.k) if backend != "pallas" else None
+        if memo_key is not None and memo_key in proxy_memo:
+            t = proxy_memo[memo_key]
+        else:
+            t = measure.measure_plan(cfg, plan, has_bias=has_bias,
+                                     backend=backend, iters=iters)
+            if memo_key is not None:
+                proxy_memo[memo_key] = t
+        r = CandidateResult(
+            plan=plan, min_us=t["min_us"], mean_us=t["mean_us"],
+            cycles=analytic_cycles(plan, cfg, has_bias=has_bias),
+            is_greedy=(plan.tile_m, plan.tile_n, plan.tile_k) ==
+                      (greedy_plan.tile_m, greedy_plan.tile_n,
+                       greedy_plan.tile_k))
+        results.append(r)
+        if r.is_greedy:
+            greedy_result = r
+    if greedy_result is None:        # greedy always enumerated, but be safe
+        t = measure.measure_plan(cfg, greedy_plan, has_bias=has_bias,
+                                 backend=backend, iters=iters)
+        greedy_result = CandidateResult(
+            plan=greedy_plan, min_us=t["min_us"], mean_us=t["mean_us"],
+            cycles=analytic_cycles(greedy_plan, cfg, has_bias=has_bias),
+            is_greedy=True)
+        results.append(greedy_result)
+
+    best_us = min(r.min_us for r in results)
+    tied = [r for r in results if r.min_us <= best_us * (1.0 + TIE_BAND)]
+
+    def _tie_key(r: CandidateResult):
+        gm, gn, gk = r.plan.grid
+        # cycles, then fewest grid steps (fewest instructions), then the
+        # largest tiles -- a total, deterministic order.
+        return (r.cycles, gm * gn * gk,
+                -r.plan.tile_m, -r.plan.tile_n, -r.plan.tile_k)
+
+    winner = min(tied, key=_tie_key)
+
+    key = ""
+    cache = cache or get_cache()
+    df = winner.plan.dataflow
+    key = cache.store(cfg, df, m, n, k, has_bias, winner.plan,
+                      source="measured" if backend == "pallas"
+                      else "proxy+analytic",
+                      best_us=winner.min_us, greedy_us=greedy_result.min_us,
+                      n_candidates=len(results), persist=persist)
+    return TuneReport(plan=winner.plan, candidates=tuple(results),
+                      greedy=greedy_result, backend=backend, cache_key=key)
+
+
+def resolve_plan(cfg: GemminiConfig, m: int, n: int, k: int, *,
+                 dataflow: Optional[Dataflow] = None,
+                 has_bias: bool = False) -> TilePlan:
+    """The plan the engine should run now, honoring the ``tune_mode`` flag."""
+    mode = flags.get("tune_mode")
+    if mode not in flags.TUNE_MODES:
+        raise ValueError(f"GEMMINI_TUNE/tune_mode must be one of "
+                         f"{flags.TUNE_MODES}, got {mode!r}")
+    if mode == "off":
+        return plan_gemm(cfg, m, n, k, dataflow=dataflow, has_bias=has_bias)
+    # Resolve the dataflow exactly as plan_gemm would, so cache keys agree
+    # (no greedy solve needed on the hit path).
+    df = tiling._resolve_dataflow(cfg, dataflow)
+    cached = get_cache().lookup(cfg, df, m, n, k, has_bias)
+    if cached is not None:
+        return cached
+    if mode == "cached":
+        return plan_gemm(cfg, m, n, k, dataflow=df, has_bias=has_bias)
+    return tune_gemm(cfg, m, n, k, dataflow=df, has_bias=has_bias).plan
+
+
+def tuned_plan_fn(mode: Optional[str] = None
+                  ) -> Callable[..., TilePlan]:
+    """A ``plan_gemm``-compatible callable for ``core.dse.evaluate``: the
+    DSE's measured-cost backend. ``mode`` overrides the flag ("cached" to
+    evaluate with yesterday's tuning run, "full" to tune as it sweeps)."""
+    def fn(cfg: GemminiConfig, m: int, n: int, k: int, *,
+           dataflow: Optional[Dataflow] = None,
+           has_bias: bool = False) -> TilePlan:
+        if mode is None:
+            return resolve_plan(cfg, m, n, k, dataflow=dataflow,
+                                has_bias=has_bias)
+        prev = flags.get("tune_mode")
+        flags.set_flag("tune_mode", mode)
+        try:
+            return resolve_plan(cfg, m, n, k, dataflow=dataflow,
+                                has_bias=has_bias)
+        finally:
+            flags.set_flag("tune_mode", prev)
+    return fn

@@ -1,0 +1,87 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The container this repo tests in does not ship hypothesis and cannot pip
+install it, so the property tests fall back to this shim: each strategy can
+produce boundary examples plus seeded-pseudorandom draws, and ``@given``
+expands into a deterministic loop over ``max_examples`` drawn example sets.
+The API surface is exactly what this repo's tests use: ``given`` with keyword
+strategies, ``settings(max_examples=, deadline=)``, and
+``strategies.{integers,floats,booleans,sampled_from}``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = tuple(boundary)
+
+    def example(self, index: int, rnd: random.Random):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._draw(rnd)
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         boundary=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value),
+                         boundary=(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: bool(r.getrandbits(1)),
+                         boundary=(False, True))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq), boundary=seq[:2])
+
+
+st = strategies
+
+
+class settings:  # noqa: N801
+    def __init__(self, max_examples=20, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._hyp_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", 20)
+            # crc32, not hash(): builtin str hashing is salted per process,
+            # which would make "deterministic" draws differ across runs.
+            fn_seed = zlib.crc32(fn.__name__.encode())
+            for i in range(n):
+                rnd = random.Random(0xC0FFEE + 1013 * i + fn_seed)
+                drawn = {name: s.example(i, rnd)
+                         for name, s in strategy_kw.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-driven parameters from pytest's fixture resolution
+        # (real hypothesis does the same signature surgery).
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategy_kw]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco

@@ -71,12 +71,11 @@ def test_elastic_reshard_restore(tmp_path, run_subprocess):
     code = f"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.mesh import activate_mesh, make_mesh
 from repro.checkpoint import save_checkpoint, restore_checkpoint
 
-mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh1 = make_mesh((4, 2), ("data", "model"))
+mesh2 = make_mesh((2, 4), ("data", "model"))
 x = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
 s1 = NamedSharding(mesh1, P("data", "model"))
 s2 = NamedSharding(mesh2, P("model", "data"))

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import SyntheticLM, SyntheticLMConfig, make_global_batch
+from repro.launch.mesh import make_mesh
 
 
 def _cfg(**kw):
@@ -59,8 +60,7 @@ def test_markov_structure_learnable():
 
 def test_make_global_batch_sharded():
     gen = SyntheticLM(_cfg())
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data", None))
     batch = make_global_batch(gen, 0, sh)
@@ -72,8 +72,7 @@ def test_make_global_batch_sharded():
 
 def test_extra_embeds_stub():
     gen = SyntheticLM(_cfg())
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data", None))
     batch = make_global_batch(gen, 0, sh, extra_embed_dim=16,

@@ -7,7 +7,10 @@ the integer datapath, allclose for float paths.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hyp import given, settings, strategies as st
 
 from repro.core.config import Activation, Dataflow, GemminiConfig
 from repro.core.generator import elaborate

@@ -77,18 +77,18 @@ def test_moe_grouped_dispatch_equals_baseline_on_mesh(run_subprocess):
     code = """
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import flags
+from repro.launch.mesh import activate_mesh, make_mesh
 from repro.core.config import GemminiConfig
 from repro.core.generator import elaborate
 from repro.models import moe
 
 ENGINE = elaborate(GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
                                  output_dtype="bf16"), "xla")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 p = moe.moe_init(jax.random.PRNGKey(1), 16, 8, 4, ep=4, dtype=jnp.float32)
 x = jnp.asarray(rng.standard_normal((4, 16, 16)), jnp.float32)
-with jax.set_mesh(mesh):
+with activate_mesh(mesh):
     y0 = jax.jit(lambda p, x: moe.moe_apply(
         ENGINE, p, x, n_experts=4, top_k=2, capacity_factor=64.0))(p, x)
     flags.set_flag("moe_grouped_dispatch", 1)

@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hyp import given, settings, strategies as st
 
 from repro.core.config import Dataflow, GemminiConfig, bytes_of
 from repro.core.tiling import padded_shape, plan_gemm
@@ -98,3 +101,47 @@ def test_tile_caps_respected():
 def test_minimal_tile_must_fit():
     with pytest.raises(ValueError):
         GemminiConfig(dim=1024, scratchpad_bytes=1 << 20)
+
+
+@pytest.mark.parametrize("shape", [(100, 4000, 1000), (1068, 4000, 1000),
+                                   (1359, 4000, 1000), (1844, 300, 700)])
+@pytest.mark.parametrize("df", [Dataflow.OS, Dataflow.WS])
+def test_ragged_snap_never_overpads_past_dim_rounding(shape, df):
+    """Regression: snap() used to pick tiles not dividing the dim-rounded
+    problem, so the plan's padded dims exceeded padded_shape()'s (a wasted
+    full tile row and a plan/legalization disagreement). E.g. M=1068 padded
+    to 1280 instead of 1152."""
+    m, n, k = shape
+    cfg = GemminiConfig(dataflow=df)
+    plan = plan_gemm(cfg, m, n, k)
+    assert (plan.m, plan.n, plan.k) == padded_shape(cfg, m, n, k)
+    gm, gn, gk = plan.grid
+    assert gm * plan.tile_m == plan.m
+    assert gn * plan.tile_n == plan.n
+    assert gk * plan.tile_k == plan.k
+
+
+def test_ragged_ops_gemm_agrees_with_plan(rng):
+    """ops.gemm's padding legalization and the plan agree on ragged shapes
+    (the interpret kernel would shape-error on any mismatch)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    m, n, k = 100, 4000, 1000
+    for df in (Dataflow.OS, Dataflow.WS):
+        cfg = GemminiConfig(dataflow=df)
+        a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        y = ops.gemm(a, b, None, cfg=cfg, shift=8, backend="interpret")
+        yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.int32,
+                          out_dtype=jnp.int8, shift=8)
+        assert y.shape == (m, n)
+        assert bool(jnp.all(y == yr))
+
+
+def test_make_plan_rejects_illegal_tiles():
+    from repro.core.tiling import make_plan
+    cfg = GemminiConfig()
+    with pytest.raises(ValueError):
+        make_plan(cfg, 256, 256, 256, 100, 128, 128)       # not dim-aligned
+    with pytest.raises(ValueError):
+        make_plan(cfg, 8192, 8192, 8192, 8192, 8192, 8192)  # busts budgets

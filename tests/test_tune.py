@@ -1,0 +1,308 @@
+"""Empirical tile-plan autotuner: candidate lattice legality, cache
+round-trip + stable fingerprints, flag-gated plan resolution, and the fused
+WS epilogue (single pallas_call, bit-exact vs the ref oracle)."""
+
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flags
+from repro.core.config import Activation, Dataflow, GemminiConfig
+from repro.core.tiling import enumerate_plans, make_plan, plan_gemm
+from repro.kernels import gemm as gemm_kernel
+from repro.kernels import ops, ref
+from repro.tune import cache as tcache
+from repro.tune import measure, tuner
+
+
+@pytest.fixture
+def tmp_cache(tmp_path):
+    """Point the plan cache at a tmp file; restore the flag afterwards."""
+    path = str(tmp_path / "plans.json")
+    prev_cache = flags.get("tune_cache")
+    prev_mode = flags.get("tune_mode")
+    flags.set_flag("tune_cache", path)
+    tcache.reset_cache()
+    yield path
+    flags.set_flag("tune_cache", prev_cache)
+    flags.set_flag("tune_mode", prev_mode)
+    tcache.reset_cache()
+
+
+# ---------------------------------------------------------------------------
+# enumerate_plans
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("df", [Dataflow.OS, Dataflow.WS])
+@pytest.mark.parametrize("shape", [(128, 4096, 1024), (100, 4000, 1000),
+                                   (1068, 512, 300)])
+def test_enumerate_plans_all_legal(df, shape):
+    m, n, k = shape
+    cfg = GemminiConfig(dataflow=df)
+    plans = enumerate_plans(cfg, m, n, k, has_bias=True)
+    assert len(plans) >= 2
+    greedy = plan_gemm(cfg, m, n, k, has_bias=True)
+    tiles = {(p.tile_m, p.tile_n, p.tile_k) for p in plans}
+    assert (greedy.tile_m, greedy.tile_n, greedy.tile_k) in tiles
+    assert len(tiles) == len(plans)          # deduplicated
+    for p in plans:
+        # every candidate satisfies the scratchpad/accumulator contract
+        assert p.vmem_streamed_bytes <= cfg.scratchpad_bytes
+        assert p.vmem_resident_bytes <= cfg.accumulator_bytes
+        assert p.tile_m % cfg.dim == 0
+        assert p.tile_n % cfg.dim == 0
+        assert p.tile_k % cfg.dim == 0
+        gm, gn, gk = p.grid
+        assert gm * p.tile_m == p.m >= m
+        assert gn * p.tile_n == p.n >= n
+        assert gk * p.tile_k == p.k >= k
+
+
+def test_enumerate_respects_max_candidates():
+    cfg = GemminiConfig()
+    plans = enumerate_plans(cfg, 2048, 2048, 2048, max_candidates=5)
+    assert len(plans) <= 5
+    greedy = plan_gemm(cfg, 2048, 2048, 2048)
+    assert any((p.tile_m, p.tile_n, p.tile_k) ==
+               (greedy.tile_m, greedy.tile_n, greedy.tile_k) for p in plans)
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip + fingerprint stability
+# ---------------------------------------------------------------------------
+def test_cache_roundtrip(tmp_cache):
+    cfg = GemminiConfig(dataflow=Dataflow.WS)
+    plan = plan_gemm(cfg, 128, 4096, 1024)
+    pc = tcache.get_cache()
+    assert pc.lookup(cfg, Dataflow.WS, 128, 4096, 1024, False) is None
+    pc.store(cfg, Dataflow.WS, 128, 4096, 1024, False, plan,
+             source="measured", best_us=12.5)
+    # write -> reload in a FRESH cache object -> hit with identical tiles
+    tcache.reset_cache()
+    pc2 = tcache.get_cache()
+    assert pc2 is not pc
+    hit = pc2.lookup(cfg, Dataflow.WS, 128, 4096, 1024, False)
+    assert hit is not None
+    assert (hit.tile_m, hit.tile_n, hit.tile_k) == \
+        (plan.tile_m, plan.tile_n, plan.tile_k)
+    assert hit.grid == plan.grid             # full plan re-derived, not stored
+    # different shape still misses
+    assert pc2.lookup(cfg, Dataflow.WS, 128, 4096, 512, False) is None
+
+
+def test_cache_rejects_stale_illegal_entry(tmp_cache):
+    cfg = GemminiConfig()
+    plan = plan_gemm(cfg, 1024, 1024, 1024)
+    pc = tcache.get_cache()
+    pc.store(cfg, Dataflow.OS, 1024, 1024, 1024, False, plan)
+    # same fingerprint inputs but tiles made illegal by a smaller budget:
+    # the loader must miss, not return an illegal plan. (Budget change also
+    # changes the fingerprint, so force the mismatch through the entry.)
+    key = tcache.fingerprint(cfg, Dataflow.OS, 1024, 1024, 1024, False)
+    with open(tmp_cache) as f:
+        raw = json.load(f)
+    raw["plans"][key]["tile_m"] = 100        # not dim-aligned -> illegal
+    with open(tmp_cache, "w") as f:
+        json.dump(raw, f)
+    tcache.reset_cache()
+    assert tcache.get_cache().lookup(cfg, Dataflow.OS, 1024, 1024, 1024,
+                                     False) is None
+
+
+def test_fingerprint_stable_across_processes(tmp_cache):
+    cfg = GemminiConfig(dataflow=Dataflow.WS, scratchpad_bytes=16 << 20)
+    here = tcache.fingerprint(cfg, Dataflow.WS, 128, 4096, 1024, True)
+    code = (
+        "from repro.core.config import Dataflow, GemminiConfig\n"
+        "from repro.tune import cache as tcache\n"
+        "cfg = GemminiConfig(dataflow=Dataflow.WS, scratchpad_bytes=16 << 20)\n"
+        "print(tcache.fingerprint(cfg, Dataflow.WS, 128, 4096, 1024, True))\n")
+    import os
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, check=True).stdout.strip()
+    assert out == here
+    # and it is sensitive to the knobs that change the plan lattice
+    assert here != tcache.fingerprint(cfg, Dataflow.OS, 128, 4096, 1024, True)
+    assert here != tcache.fingerprint(cfg.replace(dim=256), Dataflow.WS,
+                                      128, 4096, 1024, True)
+
+
+# ---------------------------------------------------------------------------
+# resolve_plan modes
+# ---------------------------------------------------------------------------
+def test_resolve_off_is_greedy(tmp_cache):
+    flags.set_flag("tune_mode", "off")
+    cfg = GemminiConfig()
+    p = tuner.resolve_plan(cfg, 300, 300, 300)
+    g = plan_gemm(cfg, 300, 300, 300)
+    assert (p.tile_m, p.tile_n, p.tile_k) == (g.tile_m, g.tile_n, g.tile_k)
+    assert len(tcache.get_cache()) == 0      # never touched
+
+
+def test_resolve_cached_uses_cache_and_never_measures(tmp_cache, monkeypatch):
+    cfg = GemminiConfig(dataflow=Dataflow.WS)
+    # Seed the cache with a deliberately non-greedy (but legal) plan.
+    seeded = make_plan(cfg, 128, 4096, 1024, 128, 4096, 128,
+                       dataflow=Dataflow.WS)
+    tcache.get_cache().store(cfg, Dataflow.WS, 128, 4096, 1024, False, seeded)
+
+    def boom(*a, **kw):
+        raise AssertionError("cached mode must not measure")
+    monkeypatch.setattr(measure, "measure_plan", boom)
+
+    flags.set_flag("tune_mode", "cached")
+    hit = tuner.resolve_plan(cfg, 128, 4096, 1024)
+    assert (hit.tile_m, hit.tile_n, hit.tile_k) == (128, 4096, 128)
+    # miss falls back to greedy, still without measuring
+    miss = tuner.resolve_plan(cfg, 256, 256, 256)
+    g = plan_gemm(cfg, 256, 256, 256)
+    assert (miss.tile_m, miss.tile_n, miss.tile_k) == \
+        (g.tile_m, g.tile_n, g.tile_k)
+
+
+def test_resolve_full_tunes_once_then_hits(tmp_cache, monkeypatch):
+    cfg = GemminiConfig()
+    calls = {"n": 0}
+    real = measure.measure_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+    monkeypatch.setattr(measure, "measure_plan", counting)
+
+    flags.set_flag("tune_mode", "full")
+    p1 = tuner.resolve_plan(cfg, 384, 384, 384)
+    assert calls["n"] > 0                    # measured the lattice
+    first = calls["n"]
+    p2 = tuner.resolve_plan(cfg, 384, 384, 384)
+    assert calls["n"] == first               # second resolve: pure cache hit
+    assert (p1.tile_m, p1.tile_n, p1.tile_k) == \
+        (p2.tile_m, p2.tile_n, p2.tile_k)
+    # the winner is on disk for the next process
+    with open(tmp_cache) as f:
+        assert len(json.load(f)["plans"]) == 1
+
+
+def test_ops_gemm_consults_tuner(tmp_cache):
+    """ops.gemm (the model layers' entry) picks the cached tuned plan."""
+    cfg = GemminiConfig(dataflow=Dataflow.WS)
+    seeded = make_plan(cfg, 128, 512, 256, 128, 512, 128,
+                       dataflow=Dataflow.WS)
+    tcache.get_cache().store(cfg, Dataflow.WS, 128, 512, 256, False, seeded)
+    flags.set_flag("tune_mode", "cached")
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-128, 128, (128, 256)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (256, 512)), jnp.int8)
+    y = ops.gemm(a, b, None, cfg=cfg, shift=8, backend="interpret")
+    yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.int32, out_dtype=jnp.int8,
+                      shift=8)
+    assert bool(jnp.all(y == yr))
+
+
+def test_tune_gemm_winner_never_worse_analytically(tmp_cache):
+    """The tuned plan's analytic cost is <= greedy's (proxy measurements
+    tie on equal padding, so the analytic tiebreak decides in CI)."""
+    cfg = GemminiConfig(dataflow=Dataflow.WS)
+    report = tuner.tune_gemm(cfg, 128, 4096, 1024, iters=1)
+    win_cycles = tuner.analytic_cycles(report.plan, cfg)
+    greedy_cycles = tuner.analytic_cycles(report.greedy.plan, cfg)
+    assert win_cycles <= greedy_cycles
+    assert report.cache_key
+
+
+# ---------------------------------------------------------------------------
+# fused WS epilogue
+# ---------------------------------------------------------------------------
+def test_ws_is_single_pallas_call():
+    """Acceptance: gemm_ws lowers as ONE pallas_call -- the separate
+    accumulator epilogue pass is gone."""
+    cfg = GemminiConfig(dataflow=Dataflow.WS, max_tile_m=128,
+                        max_tile_n=128, max_tile_k=128)
+    plan = plan_gemm(cfg, 256, 256, 512)
+    assert plan.grid[2] > 1                  # real multi-step K stream
+    a = jnp.zeros((plan.m, plan.k), jnp.int8)
+    b = jnp.zeros((plan.k, plan.n), jnp.int8)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: gemm_kernel.gemm_ws(a, b, None, plan, cfg, shift=8))(a, b)
+    n_calls = sum(1 for e in jaxpr.eqns if "pallas_call" in str(e.primitive))
+    assert n_calls == 1
+
+
+@pytest.mark.parametrize("bias", [False, True])
+def test_fused_ws_multistep_k_bitexact(rng, bias):
+    """Quantized path: fused epilogue == ref oracle exactly, with a K grid
+    deep enough to exercise accumulate + flush (the seed's aliased-IO
+    accumulation was silently wrong for k_steps > 1)."""
+    cfg = GemminiConfig(dataflow=Dataflow.WS, max_tile_m=128,
+                        max_tile_n=128, max_tile_k=128)
+    m, n, k = 300, 260, 700
+    a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    d = jnp.asarray(rng.integers(-1000, 1000, (1, n)), jnp.int32) \
+        if bias else None
+    y = ops.gemm(a, b, d, cfg=cfg, shift=8, activation=Activation.RELU6,
+                 backend="interpret")
+    yr = ref.gemm_ref(a, b, d, acc_dtype=jnp.int32, out_dtype=jnp.int8,
+                      shift=8, activation=Activation.RELU6)
+    assert y.dtype == jnp.int8
+    assert bool(jnp.all(y == yr))
+
+
+def test_fused_ws_bf16_multistep_k(rng):
+    cfg = GemminiConfig(dataflow=Dataflow.WS, input_dtype="bf16",
+                        acc_dtype="fp32", output_dtype="bf16",
+                        max_tile_m=128, max_tile_n=128, max_tile_k=128)
+    a = jnp.asarray(rng.standard_normal((160, 384)), jnp.bfloat16)
+    b = jnp.asarray(rng.standard_normal((384, 224)), jnp.bfloat16)
+    y = ops.gemm(a, b, None, cfg=cfg, backend="interpret")
+    yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.float32,
+                      out_dtype=jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=2e-2, atol=1e-2)
+
+
+def test_accumulator_epilogue_explicit_mvout_api(rng):
+    """The standalone epilogue pass stays available for callers holding a
+    raw accumulator (the explicit-mvout path)."""
+    cfg = GemminiConfig(dataflow=Dataflow.WS)
+    plan = plan_gemm(cfg, 256, 256, 256)
+    acc = jnp.asarray(rng.integers(-(2 ** 20), 2 ** 20,
+                                   (plan.m, plan.n)), jnp.int32)
+    y = gemm_kernel.accumulator_epilogue(acc, plan, cfg, shift=8,
+                                         activation=Activation.RELU,
+                                         interpret=True)
+    from repro.kernels import epilogue as epi
+    yr = epi.apply(acc, shift=8, activation=Activation.RELU,
+                   out_dtype=cfg.output_jnp)
+    assert bool(jnp.all(y == yr))
+
+
+# ---------------------------------------------------------------------------
+# timing harness
+# ---------------------------------------------------------------------------
+def test_time_callable_syncs_and_reports_min_and_mean():
+    t = measure.time_callable(lambda x: x * 2, jnp.ones((8, 8)), iters=4)
+    assert t["min_us"] > 0
+    assert t["mean_us"] >= t["min_us"]
+    assert int(t["iters"]) == 4
+
+
+def test_warm_model_plans_smoke(tmp_cache):
+    """Whole-model warm pass touches every projection shape exactly once."""
+    from repro import configs, tune
+    flags.set_flag("tune_mode", "cached")
+    model_cfg = configs.get_smoke("gemma3-1b")
+    cfg = GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
+                        output_dtype="bf16")
+    stats = tune.warm_model_plans(cfg, model_cfg, batch=2, seq=16)
+    assert stats["shapes"] > 0
+    assert stats["cache_misses"] == stats["shapes"]  # cold cache, no tuning

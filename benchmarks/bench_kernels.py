@@ -1,7 +1,8 @@
 """Kernel micro-benchmarks: wall time of the XLA paths on this host +
 static schedule quality (VMEM footprint / arithmetic intensity) of the
-Pallas plans for the TPU target, plus the tuned-vs-greedy schedule
-comparison on the skewed serving GEMM.
+Pallas plans for the TPU target, plus the tuned-vs-static schedule
+comparison for all three tuned kernel classes (GEMM, attention, conv) so
+the per-run BENCH_kernels.json artifact tracks the whole perf trajectory.
 
 On this CPU-only container the wall times are indicative (XLA:CPU), but
 the derived columns -- tile shapes, VMEM working set, arithmetic intensity
@@ -28,6 +29,11 @@ from repro.tune import measure as tmeasure
 # decode batch against a 4096-wide projection) -- where greedy analytic
 # tiling is furthest from optimal.
 SERVING_SHAPE = (128, 4096, 1024)
+# One attention and one conv shape for the tuned-schedule trajectory:
+# a 1k-token prefill (b, tq, tk, h, kvh, d) and a resnet-ish mid-layer
+# (n, h, w, ci, co, kh, kw, stride, pad).
+ATTN_SHAPE = (1, 1024, 1024, 8, 2, 64)
+CONV_SHAPE = (2, 28, 28, 64, 96, 3, 3, 1, 1)
 
 
 def _time(fn, *args, iters=5):
@@ -59,9 +65,10 @@ def gemm_rows():
 
 
 def tuned_rows(shape=SERVING_SHAPE, iters: int = 3):
-    """Greedy-vs-tuned schedule on the skewed serving shape.
+    """Static-vs-tuned schedules for all three tuned kernel classes.
 
-    Runs the full tuner (measure + analytic tiebreak), persists the winner,
+    Runs the full tuner (measure + analytic tiebreak) on the skewed serving
+    GEMM, one attention shape, and one conv shape; persists each winner,
     then resolves the same shape again to demonstrate the cache hit -- the
     second resolution must not re-measure.
     """
@@ -81,21 +88,26 @@ def tuned_rows(shape=SERVING_SHAPE, iters: int = 3):
             tempfile.mkdtemp(prefix="gemmini-bench-"), "tile_plans.json"))
         tcache.reset_cache()
 
+    def _cached_resolve(fn):
+        prev = flags.get("tune_mode")
+        flags.set_flag("tune_mode", "cached")
+        try:
+            pc = tcache.get_cache()
+            hits0 = pc.hits
+            out = fn()
+            return out, pc.hits == hits0 + 1
+        finally:
+            flags.set_flag("tune_mode", prev)
+
     m, n, k = shape
     rows = []
     try:
         for df in (Dataflow.OS, Dataflow.WS):
             cfg = GemminiConfig(dataflow=df)
             report = tuner.tune_gemm(cfg, m, n, k, iters=iters)
-            pc = tcache.get_cache()
-            hits0 = pc.hits
-            prev = flags.get("tune_mode")
-            flags.set_flag("tune_mode", "cached")
-            try:
-                again = tuner.resolve_plan(cfg, m, n, k)
-            finally:
-                flags.set_flag("tune_mode", prev)
-            cache_hit = pc.hits == hits0 + 1 and \
+            again, hit = _cached_resolve(
+                lambda: tuner.resolve_plan(cfg, m, n, k))
+            cache_hit = hit and \
                 (again.tile_m, again.tile_n, again.tile_k) == \
                 (report.plan.tile_m, report.plan.tile_n, report.plan.tile_k)
             g, w = report.greedy, report.plan
@@ -109,6 +121,45 @@ def tuned_rows(shape=SERVING_SHAPE, iters: int = 3):
                 n_candidates=len(report.candidates),
                 backend=report.backend,
                 cache_hit=bool(cache_hit)))
+
+        acfg = GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
+                             output_dtype="bf16")
+        b, tq, tk, h, kvh, d = ATTN_SHAPE
+        arep = tuner.tune_attention(acfg, b, tq, tk, h, kvh, d,
+                                    dtype="bfloat16", iters=iters)
+        asched, hit = _cached_resolve(
+            lambda: tuner.resolve_attn_schedule(acfg, b, tq, tk, h, kvh, d,
+                                                dtype="bfloat16"))
+        rows.append(dict(
+            name=f"tune_attn_t{tq}",
+            greedy_tile=(arep.default.sched.block_q,
+                         arep.default.sched.block_k),
+            tuned_tile=(arep.sched.block_q, arep.sched.block_k),
+            greedy_us=arep.default.min_us,
+            tuned_us=min(c.min_us for c in arep.candidates),
+            speedup=arep.speedup_vs_default,
+            n_candidates=len(arep.candidates),
+            backend=arep.backend,
+            cache_hit=bool(hit and asched == arep.sched)))
+
+        ccfg = GemminiConfig()
+        cn, ch, cw, ci, co, kh, kw, stride, pad = CONV_SHAPE
+        crep = tuner.tune_conv(ccfg, cn, ch, cw, ci, co, kh, kw,
+                               stride=stride, padding=pad, iters=iters)
+        csched, hit = _cached_resolve(
+            lambda: tuner.resolve_conv_schedule(ccfg, cn, ch, cw, ci, co,
+                                                kh, kw, stride=stride,
+                                                padding=pad))
+        rows.append(dict(
+            name=f"tune_conv_{ch}x{cw}x{ci}x{co}",
+            greedy_tile=(crep.default.sched.co_tile,),
+            tuned_tile=(crep.sched.co_tile,),
+            greedy_us=crep.default.min_us,
+            tuned_us=min(c.min_us for c in crep.candidates),
+            speedup=crep.speedup_vs_default,
+            n_candidates=len(crep.candidates),
+            backend=crep.backend,
+            cache_hit=bool(hit and csched == crep.sched)))
     finally:
         if scoped:
             import shutil
@@ -136,6 +187,33 @@ def attention_rows():
     return rows
 
 
+def conv_rows():
+    """One conv shape on the XLA path + the implicit-im2col plan columns."""
+    rng = np.random.default_rng(0)
+    from repro.tune.schedules import default_conv_schedule
+    n, h, w, ci, co, kh, kw, stride, pad = CONV_SHAPE
+    cfg = GemminiConfig()
+    x = jnp.asarray(rng.integers(-64, 64, (n, h, w, ci)), jnp.int8)
+    wt = jnp.asarray(rng.integers(-32, 32, (kh, kw, ci, co)), jnp.int8)
+    f = jax.jit(lambda x, wt: ops.conv2d(x, wt, None, cfg=cfg, stride=stride,
+                                         padding=pad, shift=6,
+                                         backend="xla"))
+    t = _time(f, x, wt, iters=3)
+    # Implicit-im2col schedule columns for the static default co_tile.
+    ct = default_conv_schedule().effective(co).co_tile
+    nco = -(-co // ct)
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    hp, wp = (oh - 1) * stride + kh, (ow - 1) * stride + kw
+    macs = n * nco * kh * kw * oh * ow * ci * ct
+    traffic = n * nco * (hp * wp * ci + kh * kw * ci * ct) \
+        + n * oh * ow * nco * ct
+    return [dict(name=f"conv_{h}x{w}x{ci}x{co}", us=t["mean_us"],
+                 us_min=t["min_us"], tile=(ct,),
+                 vmem_kib=(oh * ow * ct * 4 + hp * wp * ci) // 1024,
+                 ai=2.0 * macs / traffic)]
+
+
 def ssd_rows():
     rng = np.random.default_rng(0)
     from repro.models.ssm import ssd_chunked_xla
@@ -156,7 +234,7 @@ def ssd_rows():
 
 
 def main(csv=True, with_tuner: bool = True):
-    rows = gemm_rows() + attention_rows() + ssd_rows()
+    rows = gemm_rows() + attention_rows() + conv_rows() + ssd_rows()
     trows = tuned_rows() if with_tuner else []
     if csv:
         print("# bench_kernels: XLA-path wall time (this host) + TPU plan "
@@ -166,7 +244,7 @@ def main(csv=True, with_tuner: bool = True):
             print(f"{r['name']},{r['us']:.0f},{r['us_min']:.0f},"
                   f"\"{r['tile']}\",{r['vmem_kib']},{r['ai']:.1f}")
         if trows:
-            print("# tuner: greedy vs tuned plan on the serving shape "
+            print("# tuner: static vs tuned schedule per kernel class "
                   "(backend-aware measurement, analytic tiebreak)")
             print("name,greedy_tile,tuned_tile,greedy_us,tuned_us,speedup,"
                   "candidates,backend,cache_hit")

@@ -3,6 +3,10 @@
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: kernels only,
                                                      # emits BENCH_kernels.json
+
+The smoke kernel section covers all three tuned kernel classes -- GEMM,
+one attention shape, one conv shape -- so the per-run BENCH_kernels.json
+artifact (uploaded by CI per run) tracks the whole perf trajectory.
 """
 
 from __future__ import annotations

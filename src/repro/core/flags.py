@@ -14,11 +14,14 @@ from typing import Any, Dict
 TUNE_MODES = ("off", "cached", "full")
 
 _DEFAULTS: Dict[str, Any] = {
-    # T: empirical tile-plan autotuner (src/repro/tune). "off" = greedy
-    # analytic plans only; "cached" = consult the persistent plan cache,
-    # greedy on a miss (never measures); "full" = measure candidate plans
-    # for unseen shapes and persist the winners. Seeded from $GEMMINI_TUNE
-    # so whole-model launchers pick it up without code changes.
+    # T: empirical kernel-schedule autotuner (src/repro/tune), covering all
+    # three kernel classes: GEMM tile plans, attention block_q/block_k, and
+    # conv co_tile. "off" = static schedules only (greedy analytic GEMM
+    # plans, the kernels' shipped block defaults); "cached" = consult the
+    # persistent schedule cache, static on a miss (never measures); "full"
+    # = measure candidate schedules for unseen shapes and persist the
+    # winners. Seeded from $GEMMINI_TUNE so whole-model launchers pick it
+    # up without code changes.
     "tune_mode": os.environ.get("GEMMINI_TUNE", "off"),
     # Plan-cache file override; empty = $GEMMINI_TUNE_CACHE, else
     # ~/.cache/gemmini-repro/tile_plans.json (see repro.tune.cache).

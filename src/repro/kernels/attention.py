@@ -13,10 +13,17 @@ Schedule (TPU-native, re-derived for HBM->VMEM->MXU per DESIGN.md):
   (1/l normalization) runs on the last KV step, like the OS GEMM's
   rounding-shift epilogue on the last K step.
 
-Block-skipping: fully-masked KV blocks (beyond the causal frontier or
-outside the sliding window) are skipped via ``pl.when``, so local-attention
-layers do O(T*window) work, not O(T^2) -- the kernel-level reason gemma3's
-5:1 local:global pattern makes 128k context affordable.
+Block-skipping: fully-masked KV blocks (beyond the causal frontier, outside
+the sliding window, or entirely in the pad_k zero-padding past the true
+sequence) are skipped via ``pl.when``, so local-attention layers do
+O(T*window) work, not O(T^2) -- the kernel-level reason gemma3's 5:1
+local:global pattern makes 128k context affordable. ``block_live`` is the
+single skip predicate shared by both kernels and by the tuner's analytic
+cost model (``tune.schedules.attn_cycles``).
+
+Fusion audit note (ROADMAP): the epilogue is already fused -- the
+1/l finalize reads the f32 (acc, m, l) scratch and writes the output tile
+in-kernel on the last KV step; the accumulator never round-trips HBM.
 """
 
 from __future__ import annotations
@@ -33,6 +40,24 @@ from jax.experimental.pallas import tpu as pltpu
 import repro.kernels as kernels_pkg
 
 _NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def block_live(k0, q0, *, block_q: int, block_k: int, tk: int,
+               causal: bool, window: Optional[int]):
+    """Whole-block liveness: some (qpos, kpos) pair in the (q0.., k0..)
+    block is unmasked. Works on Python ints (tuner cost model) and traced
+    values (kernel ``pl.when`` predicate) alike:
+
+      padding: k0 < tk                       (block not fully in pad_k)
+      causal:  k0 <= q0 + block_q - 1
+      window:  k0 + block_k - 1 > q0 - window
+    """
+    live = k0 < tk
+    if causal:
+        live = live & (k0 <= q0 + block_q - 1)
+    if window is not None:
+        live = live & (k0 + block_k - 1 > q0 - window)
+    return live
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -53,14 +78,11 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     k0 = j * block_k
 
     # ---- whole-block skip test (static-shape friendly) -------------------
-    # block live iff some (qpos, kpos) pair is unmasked:
-    #   causal:  k0 <= q0 + block_q - 1
-    #   window:  k0 + block_k - 1 > q0 - window
-    live = jnp.bool_(True)
-    if causal:
-        live = live & (k0 <= q0 + block_q - 1)
-    if window is not None:
-        live = live & (k0 + block_k - 1 > q0 - window)
+    # The k0 < tk padding term matters for non-causal/no-window layers:
+    # without it every fully-padded KV block (the pad_k region) still runs
+    # the MXU and relies on the -inf mask to zero its contribution.
+    live = block_live(k0, q0, block_q=block_q, block_k=block_k, tk=tk,
+                      causal=causal, window=window)
 
     @pl.when(live)
     def _compute():
@@ -167,7 +189,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 # single-token decode kernel: one query row vs a long KV cache
 # ---------------------------------------------------------------------------
 def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
-                   acc_ref, *, nk: int, block_k: int,
+                   acc_ref, *, nk: int, block_k: int, tk: int,
                    window: Optional[int], softcap: Optional[float],
                    scale: float):
     j = pl.program_id(1)
@@ -180,7 +202,10 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
 
     pos = len_ref[0]                     # current position (keys <= pos live)
     k0 = j * block_k
-    live = k0 <= pos
+    # Same skip predicate as the prefill kernel with q0 = pos and block_q=1;
+    # the k0 < tk padding term skips blocks fully in the pad_k region (pos
+    # is caller-supplied, so do not rely on pos < tk to imply it).
+    live = (k0 < tk) & (k0 <= pos)
     if window is not None:
         live = live & (k0 + block_k - 1 > pos - window)
 
@@ -243,7 +268,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         vt = jnp.pad(vt, ((0, 0), (0, pad_k), (0, 0)))
     lens = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b * kvh,))
 
-    kernel = functools.partial(_decode_kernel, nk=nk, block_k=block_k,
+    kernel = functools.partial(_decode_kernel, nk=nk, block_k=block_k, tk=s,
                                window=window, softcap=softcap, scale=sc)
     out = pl.pallas_call(
         kernel,

@@ -13,7 +13,14 @@ Schedule: grid = (N, CO_tiles, KH*KW) with the filter-tap axis innermost
 ("arbitrary"): the (OH*OW, co_t) accumulator tile is output-stationary in
 VMEM across the tap stream (each tap contributes one (OH*OW, CI) x
 (CI, co_t) GEMM), and the epilogue runs on the last tap -- the OS dataflow
-of the GEMM engine, re-applied at the convolution level.
+of the GEMM engine, re-applied at the convolution level. ``co_tile`` is the
+kernel's tunable schedule parameter (``tune.schedules.ConvSchedule``);
+``ops.conv2d(fused=True)`` resolves it through the flag-gated tuner.
+
+Fusion audit note (ROADMAP): the epilogue is fused (the accumulator never
+round-trips HBM -- rescale/saturate/activation run in-kernel on the last
+tap), and the bias load is hoisted out of the tap stream: the bias operand
+only exists when a bias does, and its block index is tap-invariant.
 """
 
 from __future__ import annotations
@@ -32,10 +39,19 @@ from repro.core.config import Activation, GemminiConfig
 from repro.kernels import epilogue as epi
 
 
-def _conv_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+def _conv_kernel(*refs,
                  kh: int, kw: int, oh: int, ow: int, stride: int,
                  acc_dtype, out_dtype, shift: int, activation: Activation,
                  has_bias: bool):
+    # The bias operand exists only when a bias does: no zeros block is
+    # streamed through the tap stream for bias-free convs, and when present
+    # its BlockSpec index (0, cc) is tap-invariant, so the load is hoisted
+    # out of the tap stream (Mosaic's block revisiting elides the re-copy;
+    # the ref is only read on tap 0).
+    if has_bias:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
     tap = pl.program_id(2)
     i = tap // kw
     j = tap % kw
@@ -100,26 +116,29 @@ def conv2d_implicit(x: jnp.ndarray, w: jnp.ndarray,
     wm = w.reshape(kh * kw, ci, co)
     if pad_co:
         wm = jnp.pad(wm, ((0, 0), (0, 0), (0, pad_co)))
-    if b is None:
-        bias = jnp.zeros((1, nco * co_tile), cfg.acc_jnp)
-        has_bias = False
-    else:
-        bias = jnp.pad(b.astype(cfg.acc_jnp), (0, pad_co))[None, :]
-        has_bias = True
+    has_bias = b is not None
 
     kernel = functools.partial(
         _conv_kernel, kh=kh, kw=kw, oh=oh, ow=ow, stride=stride,
         acc_dtype=cfg.acc_jnp, out_dtype=cfg.output_jnp, shift=shift,
         activation=activation, has_bias=has_bias)
 
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, ci), lambda nn, cc, tt: (nn, 0, 0, 0)),
+        pl.BlockSpec((1, ci, co_tile), lambda nn, cc, tt: (tt, 0, cc)),
+    ]
+    operands = [x, wm]
+    if has_bias:
+        # Tap-invariant index: the bias tile for output-channel block cc is
+        # fetched once per (n, cc), not once per filter tap.
+        in_specs.append(pl.BlockSpec((1, co_tile),
+                                     lambda nn, cc, tt: (0, cc)))
+        operands.append(jnp.pad(b.astype(cfg.acc_jnp), (0, pad_co))[None, :])
+
     out = pl.pallas_call(
         kernel,
         grid=(n, nco, kh * kw),
-        in_specs=[
-            pl.BlockSpec((1, hp, wp, ci), lambda nn, cc, tt: (nn, 0, 0, 0)),
-            pl.BlockSpec((1, ci, co_tile), lambda nn, cc, tt: (tt, 0, cc)),
-            pl.BlockSpec((1, co_tile), lambda nn, cc, tt: (0, cc)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, oh, ow, co_tile),
                                lambda nn, cc, tt: (nn, 0, 0, cc)),
         out_shape=jax.ShapeDtypeStruct((n, oh, ow, nco * co_tile),
@@ -128,5 +147,5 @@ def conv2d_implicit(x: jnp.ndarray, w: jnp.ndarray,
         compiler_params=kernels_pkg.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, wm, bias)
+    )(*operands)
     return out[..., :co]

@@ -96,26 +96,69 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, cfg: GemminiConfig,
 
 
 # -- conv2d -------------------------------------------------------------------
+def _resolve_conv_co_tile(cfg: GemminiConfig, x, w, *, has_bias: bool,
+                          stride: int, padding: int) -> int:
+    """co_tile for this conv, honoring the GEMMINI_TUNE flag (the conv twin
+    of ``_resolve_plan``): ``off`` keeps the kernel's static default with no
+    tuner import; otherwise the tuner consults the persistent cache."""
+    from repro.core import flags
+    if flags.get("tune_mode") == "off":
+        # schedules is import-light (no measurement machinery): off mode
+        # still never touches the tuner/cache.
+        from repro.tune.schedules import DEFAULT_CO_TILE
+        return DEFAULT_CO_TILE
+    from repro.tune import tuner
+    n, h, wd, ci = x.shape
+    kh, kw, _, co = w.shape
+    return tuner.resolve_conv_schedule(
+        cfg, n, h, wd, ci, co, kh, kw, stride=stride, padding=padding,
+        has_bias=has_bias).co_tile
+
+
 def conv2d(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
            padding: int = 0, shift: int = 0,
            activation: Activation = Activation.NONE,
-           backend: Backend = "xla", fused: bool = False):
+           backend: Backend = "xla", fused: bool = False,
+           co_tile: Optional[int] = None):
     """Conv2D on the GEMM engine.
 
-    fused=False: explicit im2col on the host then engine GEMM (the paper's
-    shipped design). fused=True: the implicit-im2col Pallas kernel (paper
-    section 7 future work; see kernels/conv.py).
+    backend x fused matrix:
+
+    ==========  ===========================================================
+    backend     fused=False              fused=True
+    ==========  ===========================================================
+    xla         ``ref.conv2d_ref``: explicit im2col + XLA GEMM with the
+                fused accumulate/shift/saturate/activation epilogue. This
+                IS the fused-equivalent reference -- bit-identical to the
+                fused kernel -- so ``fused`` does not change the xla path.
+    pallas /    host im2col +            implicit-im2col Pallas kernel
+    interpret   engine GEMM (the         (paper section 7 future work;
+                paper's shipped          kernels/conv.py), ``co_tile``
+                design)                  resolved via ``repro.tune`` when
+                                         tuning is enabled
+    ==========  ===========================================================
+
+    ``co_tile``: explicit output-channel tile for the fused kernel;
+    ``None`` resolves it through the flag-gated tuner (static default 128
+    under ``GEMMINI_TUNE=off``).
     """
-    if fused and backend != "xla":
-        from repro.kernels import conv as conv_kernel
-        return conv_kernel.conv2d_implicit(
-            x, w, b, cfg=cfg, stride=stride, padding=padding, shift=shift,
-            activation=activation, interpret=(backend == "interpret"))
     if backend == "xla":
+        # fused=True intentionally routes here too (there is no separate
+        # XLA lowering): conv2d_ref is the fused-equivalent reference, not
+        # a silent fallback -- see the matrix above.
         return ref_ops.conv2d_ref(x, w, b, stride=stride, padding=padding,
                                   acc_dtype=cfg.acc_jnp,
                                   out_dtype=cfg.output_jnp, shift=shift,
                                   activation=activation)
+    if fused:
+        from repro.kernels import conv as conv_kernel
+        if co_tile is None:
+            co_tile = _resolve_conv_co_tile(cfg, x, w, has_bias=b is not None,
+                                            stride=stride, padding=padding)
+        return conv_kernel.conv2d_implicit(
+            x, w, b, cfg=cfg, stride=stride, padding=padding, shift=shift,
+            activation=activation, co_tile=co_tile,
+            interpret=(backend == "interpret"))
     n, h, wd, c = x.shape
     kh, kw, _, co = w.shape
     oh = (h + 2 * padding - kh) // stride + 1
@@ -127,17 +170,62 @@ def conv2d(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
 
 
 # -- attention ---------------------------------------------------------------
+# Engine config the attention tuner falls back to when the caller has none:
+# attention streams bf16 and accumulates f32 regardless of the GEMM engine's
+# quantized datapath, so only the VMEM budgets / dim are consulted.
+_ATTN_ENGINE_CFG: Optional[GemminiConfig] = None
+
+
+def _attn_engine_cfg() -> GemminiConfig:
+    global _ATTN_ENGINE_CFG
+    if _ATTN_ENGINE_CFG is None:
+        _ATTN_ENGINE_CFG = GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
+                                         output_dtype="bf16")
+    return _ATTN_ENGINE_CFG
+
+
+def _resolve_attn_blocks(cfg: Optional[GemminiConfig], q, k, *, causal: bool,
+                         window: Optional[int]) -> "tuple[int, int]":
+    """(block_q, block_k) for this attention, honoring the GEMMINI_TUNE
+    flag (the attention twin of ``_resolve_plan``)."""
+    from repro.core import flags
+    if flags.get("tune_mode") == "off":
+        from repro.tune.schedules import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q
+        return DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K
+    from repro.tune import tuner
+    b, tq, h, d = q.shape
+    _, tk, kvh, _ = k.shape
+    sched = tuner.resolve_attn_schedule(
+        cfg or _attn_engine_cfg(), b, tq, tk, h, kvh, d, causal=causal,
+        window=window, dtype=q.dtype)
+    return sched.block_q, sched.block_k
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     softcap: Optional[float] = None,
                     scale: Optional[float] = None,
-                    block_q: int = 512, block_k: int = 512,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    cfg: Optional[GemminiConfig] = None,
                     backend: Backend = "xla"):
-    """Blockwise-softmax attention. See kernels/attention.py for the TPU kernel."""
+    """Blockwise-softmax attention. See kernels/attention.py for the TPU
+    kernel.
+
+    ``block_q``/``block_k``: explicit blocking for the Pallas kernel;
+    ``None`` resolves the schedule through the flag-gated tuner (static
+    512/512 defaults under ``GEMMINI_TUNE=off``). ``cfg`` supplies the VMEM
+    budgets for schedule legality/fingerprinting (a bf16 engine default is
+    used when omitted). The xla backend is schedule-free and ignores both.
+    """
     if backend == "xla":
         from repro.models.attention import blockwise_attention_xla
         return blockwise_attention_xla(q, k, v, causal=causal, window=window,
                                        softcap=softcap, scale=scale)
+    if block_q is None or block_k is None:
+        bq, bk = _resolve_attn_blocks(cfg, q, k, causal=causal, window=window)
+        block_q = block_q if block_q is not None else bq
+        block_k = block_k if block_k is not None else bk
     from repro.kernels import attention as attn_kernel
     return attn_kernel.flash_attention(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,

@@ -40,13 +40,16 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
                        default_engine_backend())
     max_seq = prompt_len + gen_len
     if flags.get("tune_mode") != "off":
-        # Pre-resolve (and under tune_mode=full, tune + persist) a plan for
-        # every projection GEMM before the first request hits the engine.
+        # Pre-resolve (and under tune_mode=full, tune + persist) a schedule
+        # for every projection GEMM (with its has_bias flag -- biased QKV
+        # fingerprints differently) and every attention shape before the
+        # first request hits the engine.
         from repro import tune
         stats = tune.warm_model_plans(engine.cfg, model_cfg, batch,
                                       prompt_len)
         print(f"[serve] plan warmup ({flags.get('tune_mode')}): "
-              f"{stats['shapes']} shapes, {stats['cache_hits']} cache hits, "
+              f"{stats['gemm_shapes']} gemm + {stats['attn_shapes']} attn "
+              f"shapes, {stats['cache_hits']} cache hits, "
               f"{stats['cache_misses']} misses "
               f"(cache: {tune.default_cache_path()})")
     key = jax.random.PRNGKey(seed)

@@ -88,6 +88,22 @@ def train_once(args, model_cfg, pods: int) -> RunResult:
     opt_cfg = adamw.AdamWConfig(lr=args.lr)
     batch, seq = args.batch, args.seq
 
+    if flags.get("tune_mode") != "off":
+        # Warm the schedule cache for every GEMM/attention shape a train
+        # step runs, shard-aware: the partitioner splits the global batch
+        # over the mesh's data axis, so each device launches the per-device
+        # M -- warming the global M would populate entries no kernel hits.
+        from repro import tune
+        data_shards = int(dict(mesh.shape).get("data", 1))
+        stats = tune.warm_model_plans(engine.cfg, model_cfg, batch, seq,
+                                      include_decode=False,
+                                      n_shards=data_shards)
+        print(f"[train] plan warmup ({flags.get('tune_mode')}, "
+              f"{data_shards} data shard(s)): "
+              f"{stats['gemm_shapes']} gemm + {stats['attn_shapes']} attn "
+              f"shapes, {stats['cache_hits']} cache hits, "
+              f"{stats['cache_misses']} misses")
+
     data_cfg = SyntheticLMConfig(
         vocab=model_cfg.vocab, seq=seq, global_batch=batch, seed=args.seed,
         n_codebooks=model_cfg.n_codebooks)

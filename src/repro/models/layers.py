@@ -87,11 +87,14 @@ def project(engine: GemminiInstance, x: jnp.ndarray, w: jnp.ndarray,
         y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         y = y.astype(x.dtype)
-    else:
-        y = engine.matmul(x, w)
-    if b is not None:
-        y = y + b.astype(y.dtype)
-    return y
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
+    # Engine path: the bias rides the engine's native D input (accumulated
+    # at acc dtype inside the fused epilogue, Gemmini's D matrix) instead
+    # of a separate post-engine add -- and the tile plan resolves with
+    # has_bias=True, the same fingerprint warm_model_plans pre-populates.
+    return engine.matmul(x, w, d=b)
 
 
 def mlp_init(key, d: int, d_ff: int, *, dtype=jnp.bfloat16,

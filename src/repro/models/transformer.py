@@ -198,28 +198,43 @@ _PROJ_KEYS = frozenset({"wq", "wk", "wv", "wo", "wi", "wg", "router",
 
 def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int, *,
                       include_decode: bool = True) -> list:
-    """Every (M, N, K) GEMM shape the model's projections run.
+    """Every (M, N, K, has_bias) GEMM shape the model's projections run.
 
     Walked from the parameter tree under ``jax.eval_shape`` (no allocation):
     each projection weight's trailing (d_in, d_out) becomes a
     (batch*seq, d_out, d_in) prefill/train GEMM, plus the (batch, d_out,
-    d_in) single-token decode GEMM. Used by ``repro.tune.warm_model_plans``
-    to pre-tune a whole model's schedule before the first request arrives.
+    d_in) single-token decode GEMM. ``has_bias`` is detected from a sibling
+    bias leaf (``wq`` -> ``bq``): biased projections ride the engine's
+    native D input (``layers.project``), and the tuner fingerprints them
+    separately, so the warm pass must resolve them with the flag or it
+    populates entries the request path never hits. Used by
+    ``repro.tune.warm_model_plans`` to pre-tune a whole model's schedule
+    before the first request arrives.
     """
     import functools
     shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
                             jax.random.PRNGKey(0))
     ms = [batch * seq] + ([batch] if include_decode else [])
     leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+
+    def _names(path):
+        return tuple(p.key for p in path
+                     if isinstance(p, jax.tree_util.DictKey))
+
+    # Leaf names present under each parent dict, to detect sibling biases.
+    siblings: dict = {}
+    for path, _ in leaves:
+        names = _names(path)
+        if names:
+            siblings.setdefault(names[:-1], set()).add(names[-1])
+
     out, seen = [], set()
     for path, leaf in leaves:
         if len(leaf.shape) < 2:
             continue
-        name = next((p.key for p in reversed(path)
-                     if isinstance(p, jax.tree_util.DictKey)), "")
-        in_moe = any(isinstance(p, jax.tree_util.DictKey) and p.key == "moe"
-                     for p in path)
-        if in_moe and name in ("wi", "wg", "wo"):
+        names = _names(path)
+        name = names[-1] if names else ""
+        if "moe" in names and name in ("wi", "wg", "wo"):
             continue                      # einsum expert GEMMs, not engine
         if name in _PROJ_KEYS:
             k_in, n_out = leaf.shape[-2], leaf.shape[-1]
@@ -227,11 +242,28 @@ def model_gemm_shapes(cfg: ModelConfig, batch: int, seq: int, *,
             k_in, n_out = leaf.shape[-1], leaf.shape[-2]   # unembed: table.T
         else:
             continue
+        has_bias = (name.startswith("w")
+                    and "b" + name[1:] in siblings.get(names[:-1], ()))
         for m in ms:
-            t = (int(m), int(n_out), int(k_in))
+            t = (int(m), int(n_out), int(k_in), bool(has_bias))
             if t not in seen:
                 seen.add(t)
                 out.append(t)
+    return out
+
+
+def model_attention_shapes(cfg: ModelConfig, batch: int, seq: int) -> list:
+    """Every (B, Tq, Tk, H, KVH, D, causal, window) flash-attention shape
+    the model runs at this (batch, seq): one per distinct per-layer window
+    (gemma-style local:global interleaving collapses to two shapes). Used
+    by ``repro.tune.warm_model_plans`` so attention schedules resolve from
+    the cache on the request path."""
+    if not cfg.has_attn:
+        return []
+    out = []
+    for w in sorted({int(w) for w in layer_windows(cfg, seq)}):
+        out.append((batch, seq, seq, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.head_dim, True, None if w == 0 else w))
     return out
 
 

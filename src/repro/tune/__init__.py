@@ -1,12 +1,17 @@
-"""Empirical tile-plan autotuning (the measured "header file").
+"""Empirical kernel-schedule autotuning (the measured "header file").
 
 The paper ships analytically-derived tiling parameters in a generated
-header; this subsystem replaces that static schedule with a measured one:
+header; this subsystem replaces that static schedule with a measured one,
+for every kernel class the stack runs hot:
 
-* ``tiling.enumerate_plans``   -- the candidate lattice (core.tiling),
-* ``measure``                  -- the per-iteration-synced timing harness,
-* ``tuner.resolve_plan``       -- flag-gated plan resolution for the kernels,
-* ``cache``                    -- the persistent JSON plan cache.
+* ``tiling.enumerate_plans``       -- the GEMM candidate lattice,
+* ``schedules``                    -- attention (block_q/block_k) and conv
+                                      (co_tile) schedule spaces,
+* ``measure``                      -- the per-iteration-synced timing harness,
+* ``tuner.resolve_plan`` /
+  ``tuner.resolve_attn_schedule`` /
+  ``tuner.resolve_conv_schedule``  -- flag-gated resolution for the kernels,
+* ``cache``                        -- the persistent JSON schedule cache.
 
 Controlled by ``GEMMINI_TUNE={off,cached,full}`` (see ``core.flags`` and
 docs/tuning.md).
@@ -14,36 +19,90 @@ docs/tuning.md).
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.config import Dataflow, GemminiConfig
 from repro.tune.cache import (PlanCache, default_cache_path, fingerprint,
-                              get_cache, reset_cache)
-from repro.tune.measure import (measure_plan, measurement_backend,
+                              get_cache, kernel_fingerprint, reset_cache)
+from repro.tune.measure import (measure_attn_schedule, measure_conv_schedule,
+                                measure_plan, measurement_backend,
                                 time_callable)
-from repro.tune.tuner import (TIE_BAND, TuneReport, analytic_cycles,
-                              resolve_plan, tune_gemm, tuned_plan_fn)
+from repro.tune.schedules import (AttnSchedule, ConvSchedule, attn_cache_key,
+                                  attn_cycles, conv_cache_key, conv_cycles,
+                                  enumerate_attn_schedules,
+                                  enumerate_conv_schedules)
+from repro.tune.tuner import (TIE_BAND, SchedReport, TuneReport,
+                              analytic_cycles, resolve_attn_schedule,
+                              resolve_conv_schedule, resolve_plan, tune_attention,
+                              tune_conv, tune_gemm, tuned_plan_fn)
 
 __all__ = [
-    "PlanCache", "TIE_BAND", "TuneReport", "analytic_cycles",
-    "default_cache_path", "fingerprint", "get_cache", "measure_plan",
-    "measurement_backend", "reset_cache", "resolve_plan", "time_callable",
-    "tune_gemm", "tuned_plan_fn", "warm_model_plans",
+    "AttnSchedule", "ConvSchedule", "PlanCache", "SchedReport", "TIE_BAND",
+    "TuneReport", "analytic_cycles", "attn_cache_key", "attn_cycles",
+    "conv_cache_key", "conv_cycles", "default_cache_path",
+    "enumerate_attn_schedules", "enumerate_conv_schedules", "fingerprint",
+    "get_cache", "kernel_fingerprint", "measure_attn_schedule",
+    "measure_conv_schedule", "measure_plan", "measurement_backend",
+    "reset_cache", "resolve_attn_schedule", "resolve_conv_schedule",
+    "resolve_plan", "time_callable", "tune_attention", "tune_conv",
+    "tune_gemm", "tuned_plan_fn", "warm_conv_plans", "warm_model_plans",
 ]
 
 
 def warm_model_plans(cfg: GemminiConfig, model_cfg, batch: int, seq: int, *,
                      dataflow: Optional[Dataflow] = None,
-                     include_decode: bool = True) -> Dict[str, int]:
-    """Resolve (and, under ``tune_mode=full``, tune + persist) a plan for
-    every GEMM shape a model will run, so serving never tunes on the request
-    path. Returns {shapes, cache_hits, cache_misses} for the warm pass."""
-    from repro.models.transformer import model_gemm_shapes
+                     include_decode: bool = True,
+                     include_attention: bool = True,
+                     n_shards: int = 1) -> Dict[str, int]:
+    """Resolve (and, under ``tune_mode=full``, tune + persist) a schedule for
+    every GEMM *and attention* shape a model will run, so serving never
+    tunes on the request path.
+
+    ``n_shards``: data-parallel mesh split -- each device sees the
+    per-device batch after the mesh partitions the global one, so shapes
+    are warmed at the per-device M (``ceil(batch / n_shards) * seq``), not
+    the global M the partitioner never launches.
+
+    GEMM shapes carry their ``has_bias`` flag: biased projections (e.g.
+    qwen QKV) ride the engine's D input and fingerprint differently from
+    their un-biased twins, so warming without the flag would populate
+    entries the request path never hits.
+
+    Returns {shapes, gemm_shapes, attn_shapes, cache_hits, cache_misses}
+    for the warm pass.
+    """
+    from repro.models.transformer import (model_attention_shapes,
+                                          model_gemm_shapes)
     cache = get_cache()
     h0, m0 = cache.hits, cache.misses
-    shapes = model_gemm_shapes(model_cfg, batch, seq,
-                               include_decode=include_decode)
-    for (m, n, k) in shapes:
-        resolve_plan(cfg, m, n, k, dataflow=dataflow)
+    shard_batch = max(1, -(-batch // max(1, n_shards)))
+    gshapes = model_gemm_shapes(model_cfg, shard_batch, seq,
+                                include_decode=include_decode)
+    for (m, n, k, has_bias) in gshapes:
+        resolve_plan(cfg, m, n, k, dataflow=dataflow, has_bias=has_bias)
+    ashapes: List[Tuple] = []
+    if include_attention:
+        ashapes = model_attention_shapes(model_cfg, shard_batch, seq)
+        for (b, tq, tk, h, kvh, d, causal, window) in ashapes:
+            resolve_attn_schedule(cfg, b, tq, tk, h, kvh, d, causal=causal,
+                                  window=window, dtype=model_cfg.dtype)
+    return {"shapes": len(gshapes) + len(ashapes),
+            "gemm_shapes": len(gshapes), "attn_shapes": len(ashapes),
+            "cache_hits": cache.hits - h0,
+            "cache_misses": cache.misses - m0}
+
+
+def warm_conv_plans(cfg: GemminiConfig, shapes) -> Dict[str, int]:
+    """Resolve a co_tile schedule for each explicit conv shape
+    ``(n, h, w, ci, co, kh, kw, stride, padding, has_bias)`` -- the warm
+    entry for CNN workloads (the LM model zoo has no conv layers, so these
+    shapes come from the caller, e.g. a vision-tower driver or benchmark).
+    """
+    cache = get_cache()
+    h0, m0 = cache.hits, cache.misses
+    shapes = list(shapes)
+    for (n, h, w, ci, co, kh, kw, stride, padding, has_bias) in shapes:
+        resolve_conv_schedule(cfg, n, h, w, ci, co, kh, kw, stride=stride,
+                              padding=padding, has_bias=has_bias)
     return {"shapes": len(shapes), "cache_hits": cache.hits - h0,
             "cache_misses": cache.misses - m0}

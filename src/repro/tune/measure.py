@@ -7,15 +7,17 @@ execution (the original ``bench_kernels._time`` bug). ``time_callable`` calls
 ``jax.block_until_ready`` on every iteration and reports min-of-iters (the
 noise-robust statistic schedulers should rank by) alongside the mean.
 
-Backend selection for plan measurement:
+Backend selection for schedule measurement (all kernel classes):
 
-* on a TPU host the candidate is lowered for real (``kernels.gemm`` with the
-  candidate plan) -- the measured ranking is the true Mosaic ranking;
+* on a TPU host the candidate is lowered for real (``kernels.gemm`` /
+  ``kernels.attention`` / ``kernels.conv`` with the candidate schedule) --
+  the measured ranking is the true Mosaic ranking;
 * on CPU hosts (CI) Mosaic cannot lower, so we time a *schedule proxy*: the
-  XLA reference GEMM on operands padded to the candidate plan's dims. That
-  captures the padding waste a bad snap costs, but candidates that differ
-  only in tile split time identically -- the tuner's analytic-cost tiebreak
-  (``tuner.analytic_cycles``) decides those, keeping CI deterministic.
+  XLA reference path on operands padded to the candidate schedule's dims.
+  That captures the padding waste a bad blocking costs, but candidates that
+  differ only in split time identically -- the tuner's analytic-cost
+  tiebreaks (``tuner.analytic_cycles`` / ``schedules.attn_cycles`` /
+  ``schedules.conv_cycles``) decide those, keeping CI deterministic.
 """
 
 from __future__ import annotations
@@ -73,3 +75,83 @@ def measure_plan(cfg: GemminiConfig, plan: TilePlan, *, has_bias: bool = False,
                                     out_dtype=cfg.output_jnp)
 
     return time_callable(jax.jit(run), a, b, iters=iters, warmup=warmup)
+
+
+def measure_attn_schedule(cfg: GemminiConfig, sched, b: int, tq: int,
+                          tk: int, h: int, kvh: int, d: int, *,
+                          causal: bool = True, window: Optional[int] = None,
+                          dtype="bf16", backend: Optional[str] = None,
+                          iters: int = 3, warmup: int = 1) -> Dict[str, float]:
+    """Wall-time one (block_q, block_k) candidate on this host.
+
+    Pallas backend runs the real flash kernel with the candidate blocking;
+    the CPU proxy times the XLA blockwise path on operands padded to the
+    candidate's block grid (the padding waste a bad blocking costs).
+    """
+    backend = backend or measurement_backend()
+    dt = jnp.dtype(dtype)
+    eff = sched.effective(tq, tk)
+    bq, bk = eff.block_q, eff.block_k
+
+    if backend == "pallas":
+        from repro.kernels import attention as attn_kernel
+        q = jnp.zeros((b, tq, h, d), dt)
+        k = jnp.zeros((b, tk, kvh, d), dt)
+        v = jnp.zeros((b, tk, kvh, d), dt)
+
+        def run(q, k, v):
+            return attn_kernel.flash_attention(
+                q, k, v, causal=causal, window=window,
+                block_q=bq, block_k=bk)
+    else:
+        from repro.models.attention import blockwise_attention_xla
+        nq, nk = -(-tq // bq), -(-tk // bk)
+        q = jnp.zeros((b, nq * bq, h, d), dt)
+        k = jnp.zeros((b, nk * bk, kvh, d), dt)
+        v = jnp.zeros((b, nk * bk, kvh, d), dt)
+
+        def run(q, k, v):
+            return blockwise_attention_xla(q, k, v, causal=causal,
+                                           window=window, block_k=bk)
+
+    return time_callable(jax.jit(run), q, k, v, iters=iters, warmup=warmup)
+
+
+def measure_conv_schedule(cfg: GemminiConfig, sched, n: int, h: int, w: int,
+                          ci: int, co: int, kh: int, kw: int, *,
+                          stride: int = 1, padding: int = 0,
+                          has_bias: bool = False,
+                          backend: Optional[str] = None, iters: int = 3,
+                          warmup: int = 1) -> Dict[str, float]:
+    """Wall-time one co_tile candidate on this host.
+
+    Pallas backend runs the implicit-im2col kernel with the candidate tile;
+    the CPU proxy times the explicit-im2col reference with the output
+    channels padded to the candidate's tile grid.
+    """
+    backend = backend or measurement_backend()
+    ct = sched.effective(co).co_tile
+    x = jnp.zeros((n, h, w, ci), cfg.input_jnp)
+    bias = jnp.zeros((co,), cfg.acc_jnp) if has_bias else None
+
+    if backend == "pallas":
+        from repro.kernels import conv as conv_kernel
+        wt = jnp.zeros((kh, kw, ci, co), cfg.input_jnp)
+
+        def run(x, wt):
+            return conv_kernel.conv2d_implicit(
+                x, wt, bias, cfg=cfg, stride=stride, padding=padding,
+                co_tile=ct)
+    else:
+        from repro.kernels import ref as ref_ops
+        cop = -(-co // ct) * ct
+        wt = jnp.zeros((kh, kw, ci, cop), cfg.input_jnp)
+        bp = jnp.zeros((cop,), cfg.acc_jnp) if has_bias else None
+
+        def run(x, wt):
+            return ref_ops.conv2d_ref(x, wt, bp, stride=stride,
+                                      padding=padding,
+                                      acc_dtype=cfg.acc_jnp,
+                                      out_dtype=cfg.output_jnp)
+
+    return time_callable(jax.jit(run), x, wt, iters=iters, warmup=warmup)

@@ -1,13 +1,18 @@
-"""Empirical tile-plan autotuner.
+"""Empirical kernel-schedule autotuner (GEMM, attention, conv).
 
-``resolve_plan`` is the single entry the kernels' dispatch layer
-(``kernels.ops.gemm``) consults on every un-planned GEMM:
+The ``resolve_*`` functions are the single entries the kernels' dispatch
+layer consults on every un-planned launch: ``resolve_plan`` for
+``ops.gemm``, ``resolve_attn_schedule`` for ``ops.flash_attention``,
+``resolve_conv_schedule`` for ``ops.conv2d(fused=True)``. All three honor
+the same flag:
 
-* ``tune_mode="off"``    -- greedy analytic plan (the paper's static header).
-* ``tune_mode="cached"`` -- persisted tuned plan if one exists, greedy
+* ``tune_mode="off"``    -- static schedule (greedy analytic plan for GEMM,
+                            the kernels' shipped block-size defaults for
+                            attention/conv: the paper's static header).
+* ``tune_mode="cached"`` -- persisted tuned schedule if one exists, static
                             otherwise; never measures.
-* ``tune_mode="full"``   -- cache hit, else measure ``enumerate_plans``
-                            candidates, pick the winner, persist it.
+* ``tune_mode="full"``   -- cache hit, else measure the kernel's candidate
+                            lattice, pick the winner, persist it.
 
 Winner selection is measurement-led but deterministic: candidates whose
 min-of-iters time lands within ``TIE_BAND`` of the best are considered tied
@@ -32,11 +37,29 @@ from repro.core import flags, isa
 from repro.core import tiling
 from repro.core.config import Dataflow, GemminiConfig, bytes_of
 from repro.core.tiling import TilePlan, enumerate_plans, plan_gemm
-from repro.tune import measure
+from repro.tune import measure, schedules
 from repro.tune.cache import PlanCache, get_cache
+from repro.tune.schedules import AttnSchedule, ConvSchedule
 
 # Measured times within 5% of the best are a tie -> analytic model decides.
 TIE_BAND = 0.05
+
+
+def _check_mode() -> str:
+    mode = flags.get("tune_mode")
+    if mode not in flags.TUNE_MODES:
+        raise ValueError(f"GEMMINI_TUNE/tune_mode must be one of "
+                         f"{flags.TUNE_MODES}, got {mode!r}")
+    return mode
+
+
+def _tie_pick(results, key_fn):
+    """Measurement-led, deterministically tie-broken winner selection: the
+    candidates within TIE_BAND of the best min-of-iters time are tied and
+    ``key_fn`` (analytic cycles first) provides a total order among them."""
+    best_us = min(r.min_us for r in results)
+    tied = [r for r in results if r.min_us <= best_us * (1.0 + TIE_BAND)]
+    return min(tied, key=key_fn)
 
 
 def analytic_cycles(plan: TilePlan, cfg: GemminiConfig, *,
@@ -139,9 +162,6 @@ def tune_gemm(cfg: GemminiConfig, m: int, n: int, k: int, *,
             is_greedy=True)
         results.append(greedy_result)
 
-    best_us = min(r.min_us for r in results)
-    tied = [r for r in results if r.min_us <= best_us * (1.0 + TIE_BAND)]
-
     def _tie_key(r: CandidateResult):
         gm, gn, gk = r.plan.grid
         # cycles, then fewest grid steps (fewest instructions), then the
@@ -149,7 +169,7 @@ def tune_gemm(cfg: GemminiConfig, m: int, n: int, k: int, *,
         return (r.cycles, gm * gn * gk,
                 -r.plan.tile_m, -r.plan.tile_n, -r.plan.tile_k)
 
-    winner = min(tied, key=_tie_key)
+    winner = _tie_pick(results, _tie_key)
 
     key = ""
     cache = cache or get_cache()
@@ -167,10 +187,7 @@ def resolve_plan(cfg: GemminiConfig, m: int, n: int, k: int, *,
                  dataflow: Optional[Dataflow] = None,
                  has_bias: bool = False) -> TilePlan:
     """The plan the engine should run now, honoring the ``tune_mode`` flag."""
-    mode = flags.get("tune_mode")
-    if mode not in flags.TUNE_MODES:
-        raise ValueError(f"GEMMINI_TUNE/tune_mode must be one of "
-                         f"{flags.TUNE_MODES}, got {mode!r}")
+    mode = _check_mode()
     if mode == "off":
         return plan_gemm(cfg, m, n, k, dataflow=dataflow, has_bias=has_bias)
     # Resolve the dataflow exactly as plan_gemm would, so cache keys agree
@@ -182,6 +199,190 @@ def resolve_plan(cfg: GemminiConfig, m: int, n: int, k: int, *,
     if mode == "cached":
         return plan_gemm(cfg, m, n, k, dataflow=df, has_bias=has_bias)
     return tune_gemm(cfg, m, n, k, dataflow=df, has_bias=has_bias).plan
+
+
+# ---------------------------------------------------------------------------
+# attention / conv schedule tuning (kernel-agnostic layer)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SchedResult:
+    """One measured candidate of a non-GEMM schedule space."""
+
+    sched: object                       # AttnSchedule | ConvSchedule
+    min_us: float
+    mean_us: float
+    cycles: float
+    is_default: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedReport:
+    sched: object                       # the winner
+    candidates: Tuple[SchedResult, ...]
+    default: SchedResult                # the static (untuned) schedule
+    backend: str
+    cache_key: str = ""
+
+    @property
+    def speedup_vs_default(self) -> float:
+        best = min(c.min_us for c in self.candidates)
+        return self.default.min_us / best if best else 1.0
+
+
+def _sched_tie_key(r: SchedResult):
+    # cycles, then the default schedule (prefer the shipped static blocking
+    # on a true tie), then the largest blocks (fewest grid steps) -- a
+    # total, deterministic order, mirroring the GEMM tiebreak.
+    return (r.cycles, not r.is_default,
+            tuple(-v for v in dataclasses.astuple(r.sched)))
+
+
+def tune_attention(cfg: GemminiConfig, b: int, tq: int, tk: int, h: int,
+                   kvh: int, d: int, *, causal: bool = True,
+                   window: Optional[int] = None, dtype="bf16",
+                   backend: Optional[str] = None, iters: int = 3,
+                   max_candidates: int = 16,
+                   cache: Optional[PlanCache] = None,
+                   persist: bool = True) -> SchedReport:
+    """Measure the (block_q, block_k) lattice and persist the winner."""
+    import jax.numpy as jnp
+    backend = backend or measure.measurement_backend()
+    in_bytes = jnp.dtype(dtype).itemsize
+    default = schedules.default_attn_schedule().effective(tq, tk)
+    cands = schedules.enumerate_attn_schedules(
+        cfg, b, h, kvh, tq, tk, d, causal=causal, window=window,
+        in_bytes=in_bytes, max_candidates=max_candidates)
+
+    results: List[SchedResult] = []
+    # The XLA proxy cannot see block_q (no q blocking in the blockwise
+    # path) but DOES execute block_k (its KV scan length), so memoize per
+    # (padded dims, block_k): candidates the proxy cannot distinguish must
+    # time identically (analytic tiebreak decides), while distinct KV
+    # blockings are measured for real.
+    proxy_memo: dict = {}
+    for s in cands:
+        eff = s.effective(tq, tk)
+        nq, nk = -(-tq // eff.block_q), -(-tk // eff.block_k)
+        memo_key = ((nq * eff.block_q, nk * eff.block_k, eff.block_k)
+                    if backend != "pallas" else None)
+        if memo_key is not None and memo_key in proxy_memo:
+            t = proxy_memo[memo_key]
+        else:
+            t = measure.measure_attn_schedule(
+                cfg, s, b, tq, tk, h, kvh, d, causal=causal, window=window,
+                dtype=dtype, backend=backend, iters=iters)
+            if memo_key is not None:
+                proxy_memo[memo_key] = t
+        results.append(SchedResult(
+            sched=eff, min_us=t["min_us"], mean_us=t["mean_us"],
+            cycles=schedules.attn_cycles(s, cfg, b, h, kvh, tq, tk, d,
+                                         causal=causal, window=window,
+                                         in_bytes=in_bytes),
+            is_default=(eff == default)))
+    default_result = next(r for r in results if r.is_default)
+    winner = _tie_pick(results, _sched_tie_key)
+
+    cache = cache or get_cache()
+    key = schedules.attn_cache_key(cfg, b, tq, tk, h, kvh, d, causal=causal,
+                                   window=window, dtype=dtype)
+    key = cache.store_schedule(
+        key, {"block_q": winner.sched.block_q, "block_k": winner.sched.block_k},
+        source="measured" if backend == "pallas" else "proxy+analytic",
+        best_us=winner.min_us, greedy_us=default_result.min_us,
+        n_candidates=len(results), persist=persist)
+    return SchedReport(sched=winner.sched, candidates=tuple(results),
+                       default=default_result, backend=backend, cache_key=key)
+
+
+def resolve_attn_schedule(cfg: GemminiConfig, b: int, tq: int, tk: int,
+                          h: int, kvh: int, d: int, *, causal: bool = True,
+                          window: Optional[int] = None,
+                          dtype="bf16") -> AttnSchedule:
+    """The attention blocking to launch now, honoring ``tune_mode``."""
+    mode = _check_mode()
+    if mode == "off":
+        return schedules.default_attn_schedule()
+    key = schedules.attn_cache_key(cfg, b, tq, tk, h, kvh, d, causal=causal,
+                                   window=window, dtype=dtype)
+    params = get_cache().lookup_schedule(key, ("block_q", "block_k"))
+    if params is not None:
+        return AttnSchedule(params["block_q"], params["block_k"])
+    if mode == "cached":
+        return schedules.default_attn_schedule()
+    return tune_attention(cfg, b, tq, tk, h, kvh, d, causal=causal,
+                          window=window, dtype=dtype).sched
+
+
+def tune_conv(cfg: GemminiConfig, n: int, h: int, w: int, ci: int, co: int,
+              kh: int, kw: int, *, stride: int = 1, padding: int = 0,
+              has_bias: bool = False, backend: Optional[str] = None,
+              iters: int = 3, max_candidates: int = 12,
+              cache: Optional[PlanCache] = None,
+              persist: bool = True) -> SchedReport:
+    """Measure the co_tile lattice and persist the winner."""
+    backend = backend or measure.measurement_backend()
+    default = schedules.default_conv_schedule().effective(co)
+    cands = schedules.enumerate_conv_schedules(
+        cfg, n, h, w, ci, co, kh, kw, stride=stride, padding=padding,
+        has_bias=has_bias, max_candidates=max_candidates)
+    if default not in cands:
+        cands.append(default)
+
+    results: List[SchedResult] = []
+    proxy_memo: dict = {}
+    for s in cands:
+        eff = s.effective(co)
+        nco = -(-co // eff.co_tile)
+        memo_key = nco * eff.co_tile if backend != "pallas" else None
+        if memo_key is not None and memo_key in proxy_memo:
+            t = proxy_memo[memo_key]
+        else:
+            t = measure.measure_conv_schedule(
+                cfg, s, n, h, w, ci, co, kh, kw, stride=stride,
+                padding=padding, has_bias=has_bias, backend=backend,
+                iters=iters)
+            if memo_key is not None:
+                proxy_memo[memo_key] = t
+        results.append(SchedResult(
+            sched=eff, min_us=t["min_us"], mean_us=t["mean_us"],
+            cycles=schedules.conv_cycles(s, cfg, n, h, w, ci, co, kh, kw,
+                                         stride=stride, padding=padding,
+                                         has_bias=has_bias),
+            is_default=(eff == default)))
+    default_result = next(r for r in results if r.is_default)
+    winner = _tie_pick(results, _sched_tie_key)
+
+    cache = cache or get_cache()
+    key = schedules.conv_cache_key(cfg, n, h, w, ci, co, kh, kw,
+                                   stride=stride, padding=padding,
+                                   has_bias=has_bias)
+    key = cache.store_schedule(
+        key, {"co_tile": winner.sched.co_tile},
+        source="measured" if backend == "pallas" else "proxy+analytic",
+        best_us=winner.min_us, greedy_us=default_result.min_us,
+        n_candidates=len(results), persist=persist)
+    return SchedReport(sched=winner.sched, candidates=tuple(results),
+                       default=default_result, backend=backend, cache_key=key)
+
+
+def resolve_conv_schedule(cfg: GemminiConfig, n: int, h: int, w: int,
+                          ci: int, co: int, kh: int, kw: int, *,
+                          stride: int = 1, padding: int = 0,
+                          has_bias: bool = False) -> ConvSchedule:
+    """The conv co_tile to launch now, honoring ``tune_mode``."""
+    mode = _check_mode()
+    if mode == "off":
+        return schedules.default_conv_schedule()
+    key = schedules.conv_cache_key(cfg, n, h, w, ci, co, kh, kw,
+                                   stride=stride, padding=padding,
+                                   has_bias=has_bias)
+    params = get_cache().lookup_schedule(key, ("co_tile",))
+    if params is not None:
+        return ConvSchedule(params["co_tile"])
+    if mode == "cached":
+        return schedules.default_conv_schedule()
+    return tune_conv(cfg, n, h, w, ci, co, kh, kw, stride=stride,
+                     padding=padding, has_bias=has_bias).sched
 
 
 def tuned_plan_fn(mode: Optional[str] = None

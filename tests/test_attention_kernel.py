@@ -100,6 +100,52 @@ def test_kernel_window_blocks_are_skipped(rng):
                                rtol=2e-5, atol=2e-5)
 
 
+def test_block_live_padding_term():
+    """Regression: the whole-block skip test must include k0 < tk, so for
+    non-causal/no-window layers a fully-padded KV block (the pad_k region)
+    is skipped instead of running the MXU against the -inf mask."""
+    # tk=100 with block_k=64 -> second block [64, 128) is partly live,
+    # a third block [128, 192) would be fully padding.
+    common = dict(block_q=64, block_k=64, tk=100, causal=False, window=None)
+    assert bool(ak.block_live(0, 0, **common))
+    assert bool(ak.block_live(64, 0, **common))
+    assert not bool(ak.block_live(128, 0, **common))     # fully padded
+    # causal + padding: both terms must hold
+    assert not bool(ak.block_live(128, 0, block_q=64, block_k=64, tk=100,
+                                  causal=True, window=None))
+    assert not bool(ak.block_live(64, 0, block_q=32, block_k=64, tk=100,
+                                  causal=True, window=None))  # causal-dead
+    # window-dead block with k inside the padded range
+    assert not bool(ak.block_live(0, 200, block_q=32, block_k=64, tk=256,
+                                  causal=True, window=32))
+
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_kernel_padded_tk_vs_oracle(rng, causal):
+    """Ragged tk with small blocks: the padded KV tail is block-skipped
+    (non-causal exercises the new k0 < tk term) and numerics still match."""
+    q = _t(rng, (1, 100, 4, 32))
+    k = _t(rng, (1, 100, 2, 32))
+    v = _t(rng, (1, 100, 2, 32))
+    y = ak.flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                           interpret=True)
+    yr = ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_kernel_padded_cache_vs_oracle(rng):
+    """Decode against a cache whose padded tail spans whole blocks."""
+    q = _t(rng, (1, 1, 4, 32))
+    k = _t(rng, (1, 130, 2, 32))
+    v = _t(rng, (1, 130, 2, 32))
+    y = ak.decode_attention(q, k, v, jnp.int32(100), block_k=64,
+                            interpret=True)
+    yr = ref.mha_ref(q, k[:, :101], v[:, :101], causal=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_bf16_inputs(rng):
     q = _t(rng, (1, 64, 4, 64), jnp.bfloat16)
     k = _t(rng, (1, 64, 2, 64), jnp.bfloat16)

@@ -66,6 +66,43 @@ def test_ops_conv_host_im2col_matches_fused(rng):
     assert bool(jnp.all(y_host == y_fused))
 
 
+def test_conv_bias_operand_hoisted(rng):
+    """Bias-free convs stream no dummy bias block through the tap stream:
+    the pallas_call takes 2 operands without a bias, 3 with one."""
+    cfg = GemminiConfig()
+    x = jnp.zeros((1, 10, 10, 8), jnp.int8)
+    wt = jnp.zeros((3, 3, 8, 16), jnp.int8)
+    b = jnp.zeros((16,), jnp.int32)
+
+    def n_pallas_operands(fn, *args):
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        eqn = next(e for e in jaxpr.eqns
+                   if "pallas_call" in str(e.primitive))
+        return len(eqn.invars)
+
+    assert n_pallas_operands(
+        lambda x, wt: ck.conv2d_implicit(x, wt, None, cfg=cfg, co_tile=8,
+                                         interpret=True), x, wt) == 2
+    assert n_pallas_operands(
+        lambda x, wt, b: ck.conv2d_implicit(x, wt, b, cfg=cfg, co_tile=8,
+                                            interpret=True), x, wt, b) == 3
+
+
+def test_ops_conv_fused_xla_routes_to_fused_equivalent_ref(rng):
+    """fused=True on the xla backend routes to conv2d_ref (documented as
+    the fused-equivalent reference), bit-identical to the fused kernel."""
+    cfg = GemminiConfig()
+    x = jnp.asarray(rng.integers(-64, 64, (1, 10, 10, 8)), jnp.int8)
+    wt = jnp.asarray(rng.integers(-32, 32, (3, 3, 8, 16)), jnp.int8)
+    b = jnp.asarray(rng.integers(-500, 500, (16,)), jnp.int32)
+    y_xla = ops.conv2d(x, wt, b, cfg=cfg, stride=1, padding=1, shift=6,
+                       activation=Activation.RELU, backend="xla", fused=True)
+    y_fused = ops.conv2d(x, wt, b, cfg=cfg, stride=1, padding=1, shift=6,
+                         activation=Activation.RELU, backend="interpret",
+                         fused=True)
+    assert bool(jnp.all(y_xla == y_fused))
+
+
 def test_float_conv(rng):
     cfg = GemminiConfig(input_dtype="fp32", acc_dtype="fp32",
                         output_dtype="fp32")

@@ -289,6 +289,295 @@ def test_accumulator_epilogue_explicit_mvout_api(rng):
 # ---------------------------------------------------------------------------
 # timing harness
 # ---------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+# attention / conv schedule tuning (the kernel-agnostic layer)
+# ---------------------------------------------------------------------------
+ACFG = dict(input_dtype="bf16", acc_dtype="fp32", output_dtype="bf16")
+
+
+def test_static_defaults_agree_with_kernel_signatures():
+    """The schedules constants ARE the off-mode schedule: they must match
+    the kernels' own keyword defaults, or GEMMINI_TUNE=off would launch a
+    different blocking than a direct kernel call."""
+    import inspect
+    from repro.kernels import attention as ak
+    from repro.kernels import conv as ck
+    from repro.tune import schedules
+    sig = inspect.signature(ak.flash_attention)
+    assert sig.parameters["block_q"].default == schedules.DEFAULT_BLOCK_Q
+    assert sig.parameters["block_k"].default == schedules.DEFAULT_BLOCK_K
+    sig = inspect.signature(ck.conv2d_implicit)
+    assert sig.parameters["co_tile"].default == schedules.DEFAULT_CO_TILE
+
+
+def test_attn_key_ignores_engine_gemm_dtypes_and_caps(tmp_cache):
+    """Attention consults only budgets/dim: a quantized engine config and
+    the bf16 default must key the SAME attention entry (the has_bias
+    warm-mismatch bug, as a class), while budget changes still miss."""
+    from repro.tune import schedules
+    quant = GemminiConfig()                       # int8/int32/int8 + no caps
+    bf16 = GemminiConfig(**ACFG)
+    capped = GemminiConfig(max_tile_m=128, max_tile_n=128, max_tile_k=128)
+    kw = dict(causal=True, window=None, dtype="bfloat16")
+    k_quant = schedules.attn_cache_key(quant, 1, 64, 64, 4, 2, 32, **kw)
+    assert k_quant == schedules.attn_cache_key(bf16, 1, 64, 64, 4, 2, 32,
+                                               **kw)
+    assert k_quant == schedules.attn_cache_key(capped, 1, 64, 64, 4, 2, 32,
+                                               **kw)
+    smaller = GemminiConfig(scratchpad_bytes=1 << 20)
+    assert k_quant != schedules.attn_cache_key(smaller, 1, 64, 64, 4, 2, 32,
+                                               **kw)
+
+
+def test_attn_enumerate_legal_and_has_default():
+    cfg = GemminiConfig(**ACFG)
+    from repro.tune import schedules
+    cands = schedules.enumerate_attn_schedules(cfg, 1, 8, 2, 1024, 1024, 64)
+    assert len(cands) >= 2
+    default = schedules.default_attn_schedule().effective(1024, 1024)
+    assert default in cands
+    for s in cands:
+        assert s.block_q > 0 and s.block_k > 0
+        assert s.block_q <= 1024 and s.block_k <= 1024
+
+
+def test_conv_enumerate_legal_and_has_default():
+    cfg = GemminiConfig()
+    from repro.tune import schedules
+    cands = schedules.enumerate_conv_schedules(cfg, 1, 28, 28, 64, 96, 3, 3,
+                                               stride=1, padding=1)
+    assert len(cands) >= 2
+    assert schedules.default_conv_schedule().effective(96) in cands
+    for s in cands:
+        assert 0 < s.co_tile <= 96
+
+
+def test_attn_fingerprint_stable_across_processes(tmp_cache):
+    from repro.tune import schedules
+    cfg = GemminiConfig(**ACFG)
+    here = schedules.attn_cache_key(cfg, 2, 128, 512, 8, 2, 64, causal=True,
+                                    window=256, dtype="bfloat16")
+    code = (
+        "from repro.core.config import GemminiConfig\n"
+        "from repro.tune import schedules\n"
+        "cfg = GemminiConfig(input_dtype='bf16', acc_dtype='fp32', "
+        "output_dtype='bf16')\n"
+        "print(schedules.attn_cache_key(cfg, 2, 128, 512, 8, 2, 64, "
+        "causal=True, window=256, dtype='bfloat16'))\n")
+    import os
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, check=True).stdout.strip()
+    assert out == here
+    # sensitive to masking structure, shape, and dtype
+    assert here != schedules.attn_cache_key(cfg, 2, 128, 512, 8, 2, 64,
+                                            causal=False, window=256,
+                                            dtype="bfloat16")
+    assert here != schedules.attn_cache_key(cfg, 2, 128, 512, 8, 2, 64,
+                                            causal=True, window=None,
+                                            dtype="bfloat16")
+    assert here != schedules.attn_cache_key(cfg, 2, 128, 512, 8, 2, 64,
+                                            causal=True, window=256,
+                                            dtype="float32")
+    # and distinct from a conv/gemm key built on the same config
+    assert here != schedules.conv_cache_key(cfg, 2, 128, 512, 8, 2, 6, 4,
+                                            stride=1, padding=0,
+                                            has_bias=True)
+
+
+def test_conv_fingerprint_stable_across_processes(tmp_cache):
+    from repro.tune import schedules
+    cfg = GemminiConfig()
+    here = schedules.conv_cache_key(cfg, 2, 28, 28, 64, 96, 3, 3, stride=2,
+                                    padding=1, has_bias=True)
+    code = (
+        "from repro.core.config import GemminiConfig\n"
+        "from repro.tune import schedules\n"
+        "print(schedules.conv_cache_key(GemminiConfig(), 2, 28, 28, 64, 96, "
+        "3, 3, stride=2, padding=1, has_bias=True))\n")
+    import os
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, check=True).stdout.strip()
+    assert out == here
+    assert here != schedules.conv_cache_key(cfg, 2, 28, 28, 64, 96, 3, 3,
+                                            stride=1, padding=1,
+                                            has_bias=True)
+
+
+def test_resolve_attn_cached_never_measures(tmp_cache, monkeypatch):
+    from repro.tune import schedules, tuner
+    cfg = GemminiConfig(**ACFG)
+    key = schedules.attn_cache_key(cfg, 1, 256, 256, 8, 2, 64, causal=True,
+                                   window=None, dtype="bfloat16")
+    tcache.get_cache().store_schedule(key, {"block_q": 128, "block_k": 64})
+
+    def boom(*a, **kw):
+        raise AssertionError("cached mode must not measure")
+    monkeypatch.setattr(measure, "measure_attn_schedule", boom)
+    monkeypatch.setattr(measure, "measure_conv_schedule", boom)
+
+    flags.set_flag("tune_mode", "cached")
+    hit = tuner.resolve_attn_schedule(cfg, 1, 256, 256, 8, 2, 64,
+                                      dtype="bfloat16")
+    assert (hit.block_q, hit.block_k) == (128, 64)
+    # miss falls back to the static default, still without measuring
+    miss = tuner.resolve_attn_schedule(cfg, 1, 512, 512, 8, 2, 64,
+                                       dtype="bfloat16")
+    assert (miss.block_q, miss.block_k) == \
+        (schedules.DEFAULT_BLOCK_Q, schedules.DEFAULT_BLOCK_K)
+    cmiss = tuner.resolve_conv_schedule(cfg, 1, 28, 28, 64, 96, 3, 3)
+    assert cmiss.co_tile == schedules.DEFAULT_CO_TILE
+
+
+def test_resolve_attn_full_tunes_once_then_hits(tmp_cache, monkeypatch):
+    from repro.tune import tuner
+    cfg = GemminiConfig(**ACFG)
+    calls = {"n": 0}
+    real = measure.measure_attn_schedule
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+    monkeypatch.setattr(measure, "measure_attn_schedule", counting)
+
+    flags.set_flag("tune_mode", "full")
+    s1 = tuner.resolve_attn_schedule(cfg, 1, 64, 64, 4, 2, 32,
+                                     dtype="float32")
+    assert calls["n"] > 0
+    first = calls["n"]
+    s2 = tuner.resolve_attn_schedule(cfg, 1, 64, 64, 4, 2, 32,
+                                     dtype="float32")
+    assert calls["n"] == first           # second resolve: pure cache hit
+    assert s1 == s2
+    with open(tmp_cache) as f:
+        raw = json.load(f)
+    assert any("block_q" in e for e in raw["plans"].values())
+
+
+def test_resolve_conv_full_tunes_once_then_hits(tmp_cache, monkeypatch):
+    from repro.tune import tuner
+    cfg = GemminiConfig()
+    calls = {"n": 0}
+    real = measure.measure_conv_schedule
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+    monkeypatch.setattr(measure, "measure_conv_schedule", counting)
+
+    flags.set_flag("tune_mode", "full")
+    s1 = tuner.resolve_conv_schedule(cfg, 1, 10, 10, 8, 20, 3, 3, padding=1)
+    assert calls["n"] > 0
+    first = calls["n"]
+    s2 = tuner.resolve_conv_schedule(cfg, 1, 10, 10, 8, 20, 3, 3, padding=1)
+    assert calls["n"] == first
+    assert s1 == s2
+
+
+def test_ops_flash_attention_consults_tuner_ragged(tmp_cache):
+    """ops.flash_attention resolves a tuned (block_q, block_k) from the
+    cache and matches the oracle on a ragged tq != tk shape."""
+    from repro.kernels import ref as kref
+    from repro.tune import schedules
+    cfg = GemminiConfig(**ACFG)
+    rng = np.random.default_rng(0)
+    b, tq, tk, h, kvh, d = 1, 100, 192, 4, 2, 32
+    key = schedules.attn_cache_key(cfg, b, tq, tk, h, kvh, d, causal=True,
+                                   window=None, dtype="float32")
+    tcache.get_cache().store_schedule(key, {"block_q": 32, "block_k": 64})
+    flags.set_flag("tune_mode", "cached")
+    q = jnp.asarray(rng.standard_normal((b, tq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, tk, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, tk, kvh, d)), jnp.float32)
+    pc = tcache.get_cache()
+    hits0 = pc.hits
+    y = ops.flash_attention(q, k, v, causal=True, cfg=cfg,
+                            backend="interpret")
+    assert pc.hits == hits0 + 1          # resolved from the seeded entry
+    yr = kref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_conv_consults_tuner_ragged_co(tmp_cache):
+    """ops.conv2d(fused=True) resolves a tuned co_tile from the cache and
+    matches the oracle with co % co_tile != 0."""
+    from repro.kernels import ref as kref
+    from repro.core.config import Activation
+    from repro.tune import schedules
+    cfg = GemminiConfig()
+    rng = np.random.default_rng(0)
+    n, h, w, ci, co, kh, kw = 1, 10, 10, 8, 20, 3, 3
+    key = schedules.conv_cache_key(cfg, n, h, w, ci, co, kh, kw, stride=1,
+                                   padding=1, has_bias=True)
+    tcache.get_cache().store_schedule(key, {"co_tile": 8})
+    flags.set_flag("tune_mode", "cached")
+    x = jnp.asarray(rng.integers(-64, 64, (n, h, w, ci)), jnp.int8)
+    wt = jnp.asarray(rng.integers(-32, 32, (kh, kw, ci, co)), jnp.int8)
+    bias = jnp.asarray(rng.integers(-500, 500, (co,)), jnp.int32)
+    pc = tcache.get_cache()
+    hits0 = pc.hits
+    y = ops.conv2d(x, wt, bias, cfg=cfg, stride=1, padding=1, shift=7,
+                   activation=Activation.RELU, backend="interpret",
+                   fused=True)
+    assert pc.hits == hits0 + 1
+    yr = kref.conv2d_ref(x, wt, bias, stride=1, padding=1,
+                         acc_dtype=jnp.int32, out_dtype=jnp.int8, shift=7,
+                         activation=Activation.RELU)
+    assert bool(jnp.all(y == yr))
+
+
+def test_warm_then_serve_zero_misses(tmp_cache):
+    """Acceptance: full-mode warm, then the serve request path -- a real
+    model forward through the engine (biased qwen QKV included) plus the
+    routed attention op -- reports zero cache misses.
+
+    Regression for the warm-path has_bias bug: warming without the bias
+    flag populated fingerprints the request path never hits."""
+    from repro import configs, tune
+    from repro.core.generator import elaborate
+    from repro.models import transformer as tf
+    from repro.models.transformer import model_gemm_shapes
+
+    model_cfg = configs.get_smoke("qwen1.5-4b")
+    cfg = GemminiConfig(**ACFG)
+    # The regression precondition: biased projections exist and are flagged.
+    gshapes = model_gemm_shapes(model_cfg, 2, 16)
+    assert any(bias for (_, _, _, bias) in gshapes)
+
+    flags.set_flag("tune_mode", "full")
+    stats = tune.warm_model_plans(cfg, model_cfg, batch=2, seq=16)
+    assert stats["cache_misses"] == stats["shapes"]   # cold: everything tuned
+
+    flags.set_flag("tune_mode", "cached")
+    pc = tcache.get_cache()
+    h0, m0 = pc.hits, pc.misses
+    engine = elaborate(cfg, "interpret")
+    params = tf.init_params(jax.random.PRNGKey(0), model_cfg)
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = tf.forward(engine, params, model_cfg, toks)
+    assert bool(jnp.all(jnp.isfinite(jnp.asarray(logits, jnp.float32))))
+    # decode-shaped GEMMs (M = batch) were warmed too
+    for (m, n, k, bias) in gshapes:
+        tuner.resolve_plan(cfg, m, n, k, has_bias=bias)
+    # the routed attention op resolves its warmed schedule
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 16, model_cfg.n_heads,
+                                         model_cfg.head_dim)), jnp.bfloat16)
+    kv = jnp.asarray(rng.standard_normal((2, 16, model_cfg.n_kv_heads,
+                                          model_cfg.head_dim)), jnp.bfloat16)
+    ops.flash_attention(q, kv, kv, causal=True, cfg=cfg, backend="interpret")
+    assert pc.misses == m0, "request path missed a warmed schedule"
+    assert pc.hits > h0
+
+
 def test_time_callable_syncs_and_reports_min_and_mean():
     t = measure.time_callable(lambda x: x * 2, jnp.ones((8, 8)), iters=4)
     assert t["min_us"] > 0
@@ -297,12 +586,31 @@ def test_time_callable_syncs_and_reports_min_and_mean():
 
 
 def test_warm_model_plans_smoke(tmp_cache):
-    """Whole-model warm pass touches every projection shape exactly once."""
+    """Whole-model warm pass touches every projection + attention shape
+    exactly once."""
     from repro import configs, tune
     flags.set_flag("tune_mode", "cached")
     model_cfg = configs.get_smoke("gemma3-1b")
     cfg = GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
                         output_dtype="bf16")
     stats = tune.warm_model_plans(cfg, model_cfg, batch=2, seq=16)
-    assert stats["shapes"] > 0
+    assert stats["gemm_shapes"] > 0
+    assert stats["attn_shapes"] > 0       # gemma3: local + global layers
+    assert stats["shapes"] == stats["gemm_shapes"] + stats["attn_shapes"]
     assert stats["cache_misses"] == stats["shapes"]  # cold cache, no tuning
+
+
+def test_warm_model_plans_shard_aware(tmp_cache):
+    """n_shards warms the per-device M (mesh-split batch), not the global."""
+    from repro import configs, tune
+    from repro.models.transformer import model_gemm_shapes
+    flags.set_flag("tune_mode", "cached")
+    model_cfg = configs.get_smoke("gemma3-1b")
+    cfg = GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
+                        output_dtype="bf16")
+    stats = tune.warm_model_plans(cfg, model_cfg, batch=8, seq=16,
+                                  n_shards=4, include_decode=False)
+    # identical to warming the per-device batch directly
+    per_dev = model_gemm_shapes(model_cfg, 2, 16, include_decode=False)
+    assert stats["gemm_shapes"] == len(per_dev)
+    assert all(m == 2 * 16 for (m, _, _, _) in per_dev)

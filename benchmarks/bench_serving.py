@@ -1,0 +1,111 @@
+"""Serving benchmark: static batching vs continuous batching on one trace.
+
+The system-level experiment the paper's full-stack argument calls for: the
+same model, the same kernels, the same paged cache -- only the *scheduling
+policy* differs. The trace mixes prompt and generation lengths, so static
+batching (admission barrier, no slot recycling) pays the group-max decode
+depth per batch while continuous batching recycles slots the moment a
+request finishes; tokens/s and per-request latency quantify the gap.
+
+``benchmarks/run.py --smoke`` writes the rows to BENCH_serving.json (a
+per-run CI artifact alongside BENCH_kernels.json); chart the accumulated
+trajectory with ``benchmarks/plot_trend.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+ARCH = "gemma3-1b"
+# (prompt_len, gen_len) mix: short/long prompts, shallow/deep generations.
+TRACE = [(9, 12), (17, 4), (5, 16), (13, 8), (21, 3), (7, 14),
+         (11, 6), (15, 10)]
+MAX_SLOTS = 4
+PAGE_SIZE = 16
+MAX_CONTEXT = 64
+N_PAGES = 32
+
+
+_PARAMS = None
+
+
+def _shared_params(model_cfg):
+    """One parameter init shared by every engine construction: the weights
+    are identical either way (same seed), and re-initializing them 8x per
+    benchmark would be pure startup waste."""
+    global _PARAMS
+    if _PARAMS is None:
+        import jax
+
+        from repro.models import transformer as tf
+        _PARAMS = tf.init_params(jax.random.PRNGKey(1), model_cfg)
+    return _PARAMS
+
+
+def _run_policy(policy: str) -> Dict:
+    from repro import configs
+    from repro.serving import ServingEngine
+    model_cfg = configs.get_smoke(ARCH)
+    rng = np.random.default_rng(0)
+    engine = ServingEngine(model_cfg, max_slots=MAX_SLOTS,
+                           max_context=MAX_CONTEXT, page_size=PAGE_SIZE,
+                           n_pages=N_PAGES, temperature=0.0, seed=0,
+                           policy=policy, params=_shared_params(model_cfg))
+    for plen, glen in TRACE:
+        engine.submit(rng.integers(0, model_cfg.vocab, (plen,),
+                                   dtype=np.int32), glen)
+    return engine.run()
+
+
+def main(csv: bool = True, repeats: int = 3) -> List[Dict]:
+    rows: List[Dict] = []
+    summaries = {}
+    for policy in ("static", "continuous"):
+        # Warm-up run first: jit compilation must not be charged to either
+        # policy (both share the same prefill buckets + decode step via the
+        # engine's cross-instance jit cache). Then best-of-``repeats``
+        # traces: shared CI hosts are noisy at the tens-of-ms level, and
+        # min-wall is the same noise-robust statistic the kernel tuner
+        # ranks by.
+        _run_policy(policy)
+        s = max((_run_policy(policy)["summary"] for _ in range(repeats)),
+                key=lambda s: s["tokens_per_s"])
+        summaries[policy] = s
+        rows.append(dict(
+            name=f"serving_{policy}_{ARCH}",
+            policy=policy, arch=ARCH, requests=int(s["requests"]),
+            new_tokens=int(s["new_tokens"]),
+            tokens_per_s=s["tokens_per_s"],
+            iterations=int(s["iterations"]),
+            p50_latency_s=s["p50_latency_s"],
+            p99_latency_s=s["p99_latency_s"],
+            p50_ttft_s=s["p50_ttft_s"], p99_ttft_s=s["p99_ttft_s"],
+            preemptions=int(s["preemptions"]),
+            slots=MAX_SLOTS, page_size=PAGE_SIZE))
+    speedup = (summaries["continuous"]["tokens_per_s"]
+               / max(summaries["static"]["tokens_per_s"], 1e-9))
+    # The host-independent version of the same claim: iterations for the
+    # same token count (static pays the group-max decode depth per batch).
+    iter_ratio = (summaries["static"]["iterations"]
+                  / max(summaries["continuous"]["iterations"], 1.0))
+    rows.append(dict(name="serving_continuous_vs_static", policy="ratio",
+                     arch=ARCH, tokens_per_s_speedup=speedup,
+                     iteration_ratio=iter_ratio))
+    if csv:
+        print("# bench_serving: one mixed prefill/decode trace, two "
+              "scheduling policies (same kernels, same paged cache)")
+        print("name,tokens_per_s,iterations,p50_latency_s,p99_latency_s,"
+              "preemptions")
+        for r in rows[:2]:
+            print(f"{r['name']},{r['tokens_per_s']:.1f},{r['iterations']},"
+                  f"{r['p50_latency_s']:.3f},{r['p99_latency_s']:.3f},"
+                  f"{r['preemptions']}")
+        print(f"# continuous vs static: {speedup:.2f}x tokens/s, "
+              f"{iter_ratio:.2f}x fewer engine iterations")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

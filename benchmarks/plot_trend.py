@@ -1,0 +1,152 @@
+"""Chart the perf trajectory from accumulated BENCH_*.json CI artifacts.
+
+Every CI run uploads BENCH_kernels.json and BENCH_serving.json named by
+run number; download a set of them into a directory and point this tool at
+it to see how the tracked metrics moved across runs (the ROADMAP
+"plot the perf trajectory" item):
+
+  python benchmarks/plot_trend.py artifacts/ --metric tokens_per_s
+  python benchmarks/plot_trend.py artifacts/                 # all metrics
+
+Renders terminal-friendly sparkline tables (no display needed on CI); if
+matplotlib is importable and ``--png OUT`` is given, also writes a chart.
+Files are ordered by their embedded timestamp, falling back to filename.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Tuple
+
+# (row-name field, metric field) pairs worth tracking across runs.
+_TRACKED = ("us", "us_min", "tuned_us", "greedy_us", "speedup",
+            "tokens_per_s", "p50_latency_s", "p99_latency_s",
+            "tokens_per_s_speedup")
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def _run_key(filename: str) -> str:
+    """Collapse one CI run's artifact pair to a single run id: CI uploads
+    BENCH_kernels*.json AND BENCH_serving*.json per run, so the kind prefix
+    is stripped and the remainder (run number / sha / nothing) groups
+    them. Without this, every series would show a hole at the other
+    kind's file positions and '# runs' would double-count."""
+    base = os.path.basename(filename)
+    for kind in ("BENCH_kernels", "BENCH_serving"):
+        if base.startswith(kind):
+            return base[len(kind):] or base
+    return base
+
+
+def load_runs(paths: List[str]) -> List[Tuple[str, Dict]]:
+    """[(label, payload)] ordered by payload timestamp then label, with
+    same-run artifact files merged (rows concatenated)."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(glob.glob(os.path.join(p, "BENCH_*.json"))))
+        else:
+            files.extend(sorted(glob.glob(p)))
+    merged: Dict[str, Dict] = {}
+    for f in files:
+        try:
+            with open(f) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError):
+            continue
+        key = _run_key(f)
+        if key in merged:
+            merged[key]["rows"] = (merged[key].get("rows", [])
+                                   + payload.get("rows", []))
+            merged[key]["timestamp"] = min(
+                merged[key].get("timestamp", ""),
+                payload.get("timestamp", "")) or \
+                payload.get("timestamp", "")
+        else:
+            merged[key] = dict(payload)
+    runs = list(merged.items())
+    runs.sort(key=lambda r: (r[1].get("timestamp", ""), r[0]))
+    return runs
+
+
+def series(runs: List[Tuple[str, Dict]],
+           metric_filter: str = "") -> Dict[str, List[float]]:
+    """{row_name.metric: [value per run]} (None-padded for missing runs)."""
+    out: Dict[str, List[float]] = {}
+    for i, (_, payload) in enumerate(runs):
+        for row in payload.get("rows", []):
+            name = row.get("name", "?")
+            for metric in _TRACKED:
+                if metric not in row:
+                    continue
+                if metric_filter and metric != metric_filter:
+                    continue
+                key = f"{name}.{metric}"
+                col = out.setdefault(key, [None] * len(runs))
+                col[i] = float(row[metric])
+    return out
+
+
+def sparkline(vals: List[float]) -> str:
+    xs = [v for v in vals if v is not None]
+    if not xs:
+        return ""
+    lo, hi = min(xs), max(xs)
+    rng = (hi - lo) or 1.0
+    return "".join(" " if v is None else
+                   _SPARK[int((v - lo) / rng * (len(_SPARK) - 1))]
+                   for v in vals)
+
+
+def render(runs, metric_filter: str = "") -> List[str]:
+    cols = series(runs, metric_filter)
+    lines = [f"# {len(runs)} runs: {runs[0][0]} .. {runs[-1][0]}"] \
+        if runs else ["# no BENCH_*.json runs found"]
+    for key in sorted(cols):
+        vals = cols[key]
+        xs = [v for v in vals if v is not None]
+        if len(xs) < 1:
+            continue
+        first, last = xs[0], xs[-1]
+        delta = (last - first) / first * 100 if first else 0.0
+        lines.append(f"{key:<48} {sparkline(vals)}  "
+                     f"{first:.3g} -> {last:.3g} ({delta:+.1f}%)")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+",
+                    help="directories or globs of BENCH_*.json artifacts")
+    ap.add_argument("--metric", default="",
+                    help="only this metric (e.g. tokens_per_s)")
+    ap.add_argument("--png", default="",
+                    help="also write a matplotlib chart here (optional)")
+    args = ap.parse_args(argv)
+    runs = load_runs(args.paths)
+    for line in render(runs, args.metric):
+        print(line)
+    if args.png and runs:
+        try:
+            import matplotlib
+            matplotlib.use("Agg")
+            import matplotlib.pyplot as plt
+        except ImportError:
+            print("# matplotlib not available; skipped --png")
+            return 0
+        cols = series(runs, args.metric)
+        fig, ax = plt.subplots(figsize=(10, 6))
+        for key, vals in sorted(cols.items()):
+            ax.plot(range(len(vals)), vals, marker="o", label=key)
+        ax.set_xlabel("run")
+        ax.legend(fontsize=6)
+        fig.savefig(args.png, dpi=120, bbox_inches="tight")
+        print(f"# wrote {args.png}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,12 +1,16 @@
 """Benchmark driver: one section per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: kernels only,
-                                                     # emits BENCH_kernels.json
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: kernels +
+                                                     # serving; emits
+                                                     # BENCH_kernels.json
+                                                     # + BENCH_serving.json
 
-The smoke kernel section covers all three tuned kernel classes -- GEMM,
-one attention shape, one conv shape -- so the per-run BENCH_kernels.json
-artifact (uploaded by CI per run) tracks the whole perf trajectory.
+The smoke sections cover all four tuned kernel classes (GEMM, attention,
+conv, paged attention via the serving engine) plus the static-vs-continuous
+scheduling comparison, so the per-run BENCH_*.json artifacts (uploaded by
+CI per run, charted by benchmarks/plot_trend.py) track the whole perf
+trajectory.
 """
 
 from __future__ import annotations
@@ -35,18 +39,24 @@ def _emit_json(rows, path: str) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="kernel section only; write BENCH_kernels.json")
+                    help="kernel + serving sections only; write "
+                         "BENCH_kernels.json and BENCH_serving.json")
     ap.add_argument("--json-out", default="BENCH_kernels.json",
                     help="where --smoke writes the kernel rows")
+    ap.add_argument("--serving-json-out", default="BENCH_serving.json",
+                    help="where --smoke writes the serving rows")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_dse, bench_kernels, bench_roofline,
-                            bench_system_amdahl, bench_tiling)
+                            bench_serving, bench_system_amdahl, bench_tiling)
     t0 = time.time()
     if args.smoke:
         print("\n===== Kernel micro-benchmarks (smoke) =====")
         rows = bench_kernels.main()
         _emit_json(rows, args.json_out)
+        print("\n===== Serving: static vs continuous batching (smoke) =====")
+        srows = bench_serving.main()
+        _emit_json(srows, args.serving_json_out)
         print(f"\n# smoke benchmarks done in {time.time() - t0:.1f}s")
         return
 
@@ -55,9 +65,10 @@ def main(argv=None) -> None:
         ("System Amdahl (section 8 finding)", bench_system_amdahl.main),
         ("Tiling fit (Fig 7b) + scratchpad sweep", bench_tiling.main),
         ("Kernel micro-benchmarks", bench_kernels.main),
+        ("Serving: static vs continuous batching", bench_serving.main),
         ("Roofline table (dry-run artifacts)", bench_roofline.main),
     ]
-    rows = None
+    rows = srows = None
     for title, fn in sections:
         print(f"\n===== {title} =====")
         try:
@@ -67,8 +78,12 @@ def main(argv=None) -> None:
             raise
         if fn is bench_kernels.main:
             rows = out
+        elif fn is bench_serving.main:
+            srows = out
     if rows is not None:
         _emit_json(rows, args.json_out)
+    if srows is not None:
+        _emit_json(srows, args.serving_json_out)
     print(f"\n# all benchmarks done in {time.time() - t0:.1f}s")
 
 

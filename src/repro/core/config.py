@@ -97,6 +97,11 @@ class GemminiConfig:
         lower throughput).
       max_tile_m/n/k: optional hard caps on the solver's tile search, used by
         the DSE to emulate narrower configurations.
+      hbm_bytes: main-memory (HBM / the paper's DRAM behind the DMA) capacity
+        the serving stack budgets long-lived state against -- the paged
+        KV-cache allocator sizes its page arena from this (see
+        ``repro.serving.paged_cache``). Kernel schedules never consult it,
+        so it is deliberately absent from every tuner fingerprint.
     """
 
     dataflow: Dataflow = Dataflow.OS
@@ -111,6 +116,7 @@ class GemminiConfig:
     max_tile_m: Optional[int] = None
     max_tile_n: Optional[int] = None
     max_tile_k: Optional[int] = None
+    hbm_bytes: int = 16 * 1024 * 1024 * 1024
 
     def __post_init__(self):
         if self.dim % 8 != 0 or self.dim <= 0:

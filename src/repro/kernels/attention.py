@@ -292,3 +292,131 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         interpret=interpret,
     )(qg, kt, vt, lens)
     return out.reshape(b, kvh * rep, d)[:, None].reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# paged-attention decode kernel: gather KV pages via per-request block tables
+# ---------------------------------------------------------------------------
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, npages: int, page: int,
+                         window: Optional[int], softcap: Optional[float],
+                         scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                 # logical page index within the seq
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ln = len_ref[b]                      # live tokens incl. the current one
+    pos = ln - 1
+    k0 = j * page
+    # The shared whole-block predicate with block_q = 1 (one query row): the
+    # padding term k0 < ln skips pages past the request's frontier entirely
+    # -- dead and never-allocated table slots do no MXU work. An empty slot
+    # (ln == 0) has no live page at all; _finalize's l == 0 guard then
+    # yields a zero row the engine ignores.
+    live = block_live(k0, pos, block_q=1, block_k=page, tk=ln,
+                      causal=True, window=window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (rep, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (page, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= pos
+        if window is not None:
+            mask &= kpos > pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           lengths: jnp.ndarray, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Single-token decode against a *paged* KV cache.
+
+    q: (B, 1, H, D); k_pool/v_pool: (KVH, NP, page, D) shared page pools;
+    block_tables: (B, MP) int32 page ids mapping request positions
+    [j*page, (j+1)*page) to pool page ``block_tables[b, j]``; lengths: (B,)
+    int32 live tokens per request (the current token included -- write the
+    KV of the new token first, then attend).
+
+    The gather happens *inside* the kernel: each (b, kvh, j) grid step's
+    K/V BlockSpec index map reads the block table (scalar-prefetched into
+    SMEM) and DMAs exactly one pool page into VMEM -- the pool is never
+    materialized per-request in HBM, which is the whole point of paging.
+    Dead logical pages (j past the request frontier) clamp their index map
+    to the last live page, so Mosaic's block-revisiting elides the re-copy,
+    and the ``block_live`` predicate skips their compute.
+    """
+    b, tq, h, d = q.shape
+    assert tq == 1
+    kvh, npool, page, _ = k_pool.shape
+    mp = block_tables.shape[1]
+    rep = h // kvh
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    qg = q[:, 0].reshape(b, kvh, rep, d)
+    bt = block_tables.reshape(-1).astype(jnp.int32)          # (B*MP,)
+    lens = lengths.astype(jnp.int32)
+
+    def _page_index(bb, hh, j, bt_ref, len_ref):
+        # Clamp dead j to the request's last live page: same block index ->
+        # Mosaic elides the DMA; an empty request (len 0) pins page bt[b,0].
+        jmax = jnp.maximum(len_ref[bb] - 1, 0) // page
+        return (hh, bt_ref[bb * mp + jnp.minimum(j, jmax)], 0, 0)
+
+    kernel = functools.partial(_paged_decode_kernel, npages=mp, page=page,
+                               window=window, softcap=softcap, scale=sc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, d),
+                         lambda bb, hh, j, bt_ref, len_ref: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), _page_index),
+            pl.BlockSpec((1, 1, page, d), _page_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rep, d),
+            lambda bb, hh, j, bt_ref, len_ref: (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, d), q.dtype),
+        compiler_params=kernels_pkg.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, lens, qg, k_pool, v_pool)
+    return out.reshape(b, 1, h, d)

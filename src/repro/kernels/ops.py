@@ -233,6 +233,36 @@ def flash_attention(q, k, v, *, causal: bool = True,
         interpret=(backend == "interpret"))
 
 
+# -- paged attention ---------------------------------------------------------
+def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    backend: Backend = "xla"):
+    """Single-token decode over a paged KV cache (the serving engine's hot
+    loop). q: (B, 1, H, D); k_pool/v_pool: (KVH, NP, page, D); block_tables:
+    (B, MP) int32; lengths: (B,) int32 live tokens incl. the current one.
+
+    The *page size* is the tuned schedule here -- it is baked into the pool
+    shape when the serving engine sizes its cache arena through
+    ``repro.tune.resolve_paged_attn_schedule``, not resolved per call (a
+    pool cannot be re-blocked mid-flight). The xla backend gathers pages
+    explicitly (SPMD-friendly reference); pallas/interpret gather inside
+    the kernel via scalar-prefetched block tables.
+    """
+    if backend == "xla":
+        from repro.models.attention import (PagedKVCache,
+                                            paged_decode_attention_xla)
+        cache = PagedKVCache(k_pool, v_pool, block_tables, lengths,
+                             k_pool.shape[2])
+        return paged_decode_attention_xla(q, cache, window=window,
+                                          softcap=softcap, scale=scale)
+    from repro.kernels import attention as attn_kernel
+    return attn_kernel.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, lengths, window=window,
+        softcap=softcap, scale=scale, interpret=(backend == "interpret"))
+
+
 # -- mamba2 ssd ---------------------------------------------------------------
 def ssd(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
         backend: Backend = "xla"):

@@ -1,10 +1,11 @@
-"""Batched serving driver: prefill + decode loop with sampling.
+"""Serving driver over the continuous-batching engine.
 
-Serves a (reduced or full) model with a batch of requests: one prefill pass
-builds the KV/SSM caches, then single-token decode steps run against them
-(the ``serve_step`` the dry-run lowers). Requests can terminate early on an
-EOS token; a finished slot keeps decoding padding (static shapes) but its
-output is frozen -- the standard static-batch serving discipline.
+Requests run through ``repro.serving.ServingEngine``: paged KV cache,
+admission queue, prefill/decode interleaving, preemption under cache
+pressure -- the request-level system layer (docs/serving.md). The old
+static batch loop survives as ``--policy static`` (admission barrier, no
+slot recycling) for A/B comparison; ``benchmarks/bench_serving.py`` tracks
+the two policies against each other per CI run.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \
       --batch 4 --prompt-len 32 --gen 32
@@ -15,86 +16,59 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.core import flags
-from repro.core.config import GemminiConfig
-from repro.core.generator import default_engine_backend, elaborate
-from repro.models import transformer as tf
-
-
-def sample(logits: jnp.ndarray, key, temperature: float = 1.0) -> jnp.ndarray:
-    """logits: (B, V) [or (B, n_q, V)] -> token ids."""
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+from repro.serving import ServingEngine
 
 
 def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
-          temperature: float = 1.0, seed: int = 0, eos_id: int = -1):
-    engine = elaborate(GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
-                                     output_dtype="bf16"),
-                       default_engine_backend())
-    max_seq = prompt_len + gen_len
-    if flags.get("tune_mode") != "off":
-        # Pre-resolve (and under tune_mode=full, tune + persist) a schedule
-        # for every projection GEMM (with its has_bias flag -- biased QKV
-        # fingerprints differently) and every attention shape before the
-        # first request hits the engine.
+          temperature: float = 1.0, seed: int = 0, eos_id: int = -1,
+          policy: str = "continuous", max_slots: int = 0,
+          page_size: int = 0):
+    """Serve ``batch`` random-prompt requests; returns the old static-loop
+    schema (tokens (B, gen[, n_q]), t_prefill, t_decode, tok_per_s) plus
+    the engine's full telemetry under ``report``."""
+    rng = np.random.default_rng(seed)
+    max_slots = max_slots or min(batch, 8)
+    max_context = prompt_len + model_cfg.n_meta_tokens + gen_len + 64
+    engine = ServingEngine(
+        model_cfg, max_slots=max_slots, max_context=max_context,
+        page_size=page_size or None, seed=seed, temperature=temperature,
+        policy=policy, warm_prompt_lens=[prompt_len])
+    if engine.warm_stats is not None:
         from repro import tune
-        stats = tune.warm_model_plans(engine.cfg, model_cfg, batch,
-                                      prompt_len)
+        s = engine.warm_stats
         print(f"[serve] plan warmup ({flags.get('tune_mode')}): "
-              f"{stats['gemm_shapes']} gemm + {stats['attn_shapes']} attn "
-              f"shapes, {stats['cache_hits']} cache hits, "
-              f"{stats['cache_misses']} misses "
+              f"{s['gemm_shapes']} gemm + {s['attn_shapes']} attn + "
+              f"{s['paged_shapes']} paged shapes, {s['cache_hits']} cache "
+              f"hits, {s['cache_misses']} misses "
               f"(cache: {tune.default_cache_path()})")
-    key = jax.random.PRNGKey(seed)
-    key, pk, sk = jax.random.split(key, 3)
+        print(f"[serve] paged cache: page={engine.page_size} tokens, "
+              f"arena={engine.alloc.n_pages} pages")
 
-    params = tf.init_params(pk, model_cfg)
-    tok_shape = (batch, prompt_len, model_cfg.n_codebooks) \
-        if model_cfg.n_codebooks > 1 else (batch, prompt_len)
-    prompts = jax.random.randint(sk, tok_shape, 0, model_cfg.vocab, jnp.int32)
-
-    # ---- prefill: forward over the prompt + cache build -------------------
+    tok_shape = (prompt_len, model_cfg.n_codebooks) \
+        if model_cfg.n_codebooks > 1 else (prompt_len,)
+    for _ in range(batch):
+        prompt = rng.integers(0, model_cfg.vocab, tok_shape).astype(np.int32)
+        engine.submit(prompt, gen_len, eos_id=eos_id)
     t0 = time.time()
-    state = tf.init_decode_state(model_cfg, batch, max_seq,
-                                 dtype=model_cfg.dtype)
-    state = state._replace(pos=jnp.zeros((), jnp.int32))
-    prefill = jax.jit(lambda p, tk, st: tf.prefill_into_cache(
-        engine, p, model_cfg, tk, st))
-    logits, state = prefill(params, prompts, state)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    report = engine.run()
+    wall = time.time() - t0
 
-    decode = jax.jit(lambda p, tk, st: tf.decode_step(
-        engine, p, model_cfg, tk, st), donate_argnums=(2,))
-
-    last = logits[:, -1]
-    done = jnp.zeros((batch,), bool)
-    outputs = []
-    t0 = time.time()
-    for i in range(gen_len):
-        key, k = jax.random.split(key)
-        nxt = sample(last, k, temperature)           # (B,) or (B, n_q)
-        if model_cfg.n_codebooks > 1:
-            step_tok = nxt[:, None, :]
-        else:
-            nxt = jnp.where(done, 0, nxt)
-            done = done | (nxt == eos_id)
-            step_tok = nxt[:, None]
-        outputs.append(np.asarray(nxt))
-        logits, state = decode(params, step_tok, state)
-        last = logits[:, -1]
-    jax.block_until_ready(last)
-    t_decode = time.time() - t0
-    toks = np.stack(outputs, axis=1)
-    return dict(tokens=toks, t_prefill=t_prefill, t_decode=t_decode,
-                tok_per_s=batch * gen_len / max(t_decode, 1e-9))
+    # Old static-loop output schema: (B, gen) tokens, frozen-at-0 past EOS.
+    outs = []
+    for r in report["requests"]:
+        toks = np.asarray(r["tokens"], np.int32)
+        pad_shape = (gen_len - toks.shape[0],) + toks.shape[1:]
+        outs.append(np.concatenate([toks, np.zeros(pad_shape, np.int32)]))
+    toks = np.stack(outs)
+    summ = report["summary"]
+    ttft = max(r["ttft_s"] or 0.0 for r in report["requests"])
+    return dict(tokens=toks, t_prefill=ttft, t_decode=wall - ttft,
+                tok_per_s=summ["tokens_per_s"], report=report,
+                engine=engine)
 
 
 def main(argv=None):
@@ -105,6 +79,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--policy", choices=("continuous", "static"),
+                    default="continuous",
+                    help="continuous batching (default) or the static "
+                         "group-barrier baseline")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (default: min(batch, 8))")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size (default: tuned or 64)")
     ap.add_argument("--tune", choices=flags.TUNE_MODES, default=None,
                     help="tile-plan autotuning mode (default: $GEMMINI_TUNE)")
     args = ap.parse_args(argv)
@@ -114,10 +96,16 @@ def main(argv=None):
                    else flags.get("tune_mode"))
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                gen_len=args.gen, temperature=args.temperature)
-    print(f"[serve] prefill {out['t_prefill']*1e3:.0f}ms, "
-          f"decode {out['t_decode']*1e3:.0f}ms "
+                gen_len=args.gen, temperature=args.temperature,
+                policy=args.policy, max_slots=args.slots,
+                page_size=args.page_size)
+    s = out["report"]["summary"]
+    print(f"[serve] {args.policy}: {int(s['requests'])} reqs, "
+          f"{int(s['new_tokens'])} tokens in {s['wall_s']*1e3:.0f}ms "
           f"({out['tok_per_s']:.1f} tok/s), "
+          f"p50 latency {s['p50_latency_s']*1e3:.0f}ms, "
+          f"p99 {s['p99_latency_s']*1e3:.0f}ms, "
+          f"preemptions {int(s['preemptions'])}, "
           f"out shape {out['tokens'].shape}")
     return out
 

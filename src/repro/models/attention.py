@@ -21,6 +21,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.generator import GemminiInstance
 from repro.models import layers
@@ -125,6 +126,27 @@ class KVCache(NamedTuple):
     v: jnp.ndarray        # (B, S, KVH, D)
 
 
+class PagedKVCache(NamedTuple):
+    """One layer's paged KV cache: shared page pools + per-slot tables.
+
+    The pools are the serving engine's HBM page arena (one per layer,
+    allocated once against the config's HBM budget); ``tables``/``lengths``
+    describe every decode slot's view into them. ``page`` rides along as a
+    static int so model code never re-derives it from shapes. For decode,
+    ``active`` masks live slots and ``trash`` names the reserved spill page
+    retired slots write to (see ``paged_update_decode``); prefill ignores
+    both.
+    """
+
+    k: jnp.ndarray             # (KVH, NP, page, D) page pool
+    v: jnp.ndarray             # (KVH, NP, page, D)
+    tables: jnp.ndarray        # (B, MP) int32 page ids per slot
+    lengths: jnp.ndarray       # (B,) int32 tokens already cached per slot
+    page: int                  # static page size (tokens per page)
+    active: Optional[jnp.ndarray] = None   # (B,) bool decode-slot liveness
+    trash: int = 0                         # reserved spill page id
+
+
 def decode_attention(q, cache: KVCache, pos, *,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
@@ -207,6 +229,172 @@ def update_cache(cache: KVCache, k_new, v_new, pos) -> KVCache:
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache: scatter writes + gather-based decode (the XLA reference
+# the Pallas paged kernel must match; kernels/attention.paged_decode_attention
+# is the in-kernel-gather TPU lowering)
+# ---------------------------------------------------------------------------
+def paged_update_decode(cache: PagedKVCache, k_new, v_new,
+                        active: jnp.ndarray, trash_page: int) -> PagedKVCache:
+    """Write one decode token per slot into its paged position.
+
+    k_new/v_new: (B, 1, KVH, D); slot b's token lands at logical position
+    ``lengths[b]`` = pool page ``tables[b, lengths[b]//page]``, offset
+    ``lengths[b] % page``. Inactive slots (finished/empty -- ``active``
+    False) are redirected to the reserved ``trash_page`` so a retired slot
+    can never corrupt pages the allocator has handed to another request,
+    and their lengths stay frozen.
+    """
+    page = cache.page
+    mp = cache.tables.shape[1]
+    # Clamp before the gather: an inactive slot parked at full capacity
+    # would otherwise index column MP (the engine only decodes slots with
+    # headroom, but every slot computes its index under the static batch).
+    col = jnp.minimum(cache.lengths[:, None] // page, mp - 1)
+    pidx = jnp.take_along_axis(cache.tables, col, axis=1)[:, 0]
+    pidx = jnp.where(active, pidx, jnp.int32(trash_page))
+    off = cache.lengths % page
+    kt = jnp.moveaxis(k_new[:, 0], 1, 0).astype(cache.k.dtype)   # (KVH, B, D)
+    vt = jnp.moveaxis(v_new[:, 0], 1, 0).astype(cache.v.dtype)
+    k = cache.k.at[:, pidx, off].set(kt)
+    v = cache.v.at[:, pidx, off].set(vt)
+    lengths = jnp.where(active, cache.lengths + 1, cache.lengths)
+    return cache._replace(k=k, v=v, lengths=lengths)
+
+
+def paged_update_prefill(cache: PagedKVCache, k_new, v_new,
+                         pages: jnp.ndarray) -> PagedKVCache:
+    """Scatter a fresh prompt's KV into the pages allocated for it.
+
+    k_new/v_new: (1, T, KVH, D); ``pages``: (MP,) page ids covering logical
+    positions [0, T) (entries past ceil(T/page) unused). Positions past the
+    true prompt length are bucket padding -- they land in allocated pages
+    but decode's length mask keeps them dead forever, and the next decode
+    token overwrites the first of them.
+    """
+    page = cache.page
+    t = k_new.shape[1]
+    pos = jnp.arange(t)
+    pidx = pages[pos // page]
+    off = pos % page
+    kt = jnp.moveaxis(k_new[0], 1, 0).astype(cache.k.dtype)      # (KVH, T, D)
+    vt = jnp.moveaxis(v_new[0], 1, 0).astype(cache.v.dtype)
+    return cache._replace(k=cache.k.at[:, pidx, off].set(kt),
+                          v=cache.v.at[:, pidx, off].set(vt))
+
+
+def paged_decode_attention_xla(q, cache: PagedKVCache, *,
+                               window: Optional[int] = None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token attention over a paged cache, by explicit gather.
+
+    q: (B, 1, H, D); ``cache.lengths`` counts the live tokens *including*
+    the current one (write first, then attend). Numerics mirror
+    ``decode_attention`` exactly -- same einsums, same staging, same
+    mask-then-softmax, including the ``gqa_grouped_decode`` flag branch --
+    so a request decoded through the paged path is bit-identical to the
+    dense static path under either flag setting (the serve_decode
+    example's mismatch gate relies on this).
+    """
+    from repro.core import flags
+    b, tq, h, d = q.shape
+    kvh, _, page, _ = cache.k.shape
+    rep = h // kvh
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    mp = cache.tables.shape[1]
+    s_ctx = mp * page
+
+    # (KVH, B, MP, page, D) -> (B, S_ctx, KVH, D) logical-position order
+    def gather(pool):
+        g = pool[:, cache.tables]
+        return jnp.transpose(g, (1, 2, 3, 0, 4)).reshape(b, s_ctx, kvh, d)
+
+    kpos = jnp.arange(s_ctx)
+    pos = (cache.lengths - 1)[:, None]                  # (B, 1)
+    mask = kpos[None, :] <= pos
+    if window is not None:
+        mask = mask & (kpos[None, :] > pos - window)
+
+    if flags.get("gqa_grouped_decode"):
+        # The dense path's no-repeat/bf16-storage contraction (see
+        # decode_attention): K/V stay at storage dtype, dots accumulate
+        # f32 via preferred_element_type.
+        kg, vg = gather(cache.k), gather(cache.v)
+        qg = (q[:, 0].reshape(b, kvh, rep, d).astype(jnp.float32)
+              * sc).astype(kg.dtype)
+        sl = jnp.einsum("bgrd,bsgd->bgrs", qg, kg,
+                        preferred_element_type=jnp.float32)
+        if softcap is not None:
+            sl = softcap * jnp.tanh(sl / softcap)
+        sl = jnp.where(mask[:, None, None, :], sl, _NEG_INF)
+        p = jax.nn.softmax(sl, axis=-1)
+        out = jnp.einsum("bgrs,bsgd->bgrd", p.astype(vg.dtype), vg,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(b, 1, h, d).astype(q.dtype)
+
+    kh = jnp.repeat(gather(cache.k), rep, axis=2)
+    vh = jnp.repeat(gather(cache.v), rep, axis=2)
+    sl = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * sc,
+                    kh.astype(jnp.float32))
+    if softcap is not None:
+        sl = softcap * jnp.tanh(sl / softcap)
+    sl = jnp.where(mask[:, None, None, :], sl, _NEG_INF)
+    p = jax.nn.softmax(sl, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# routed attention op (the tuned-schedule entry)
+# ---------------------------------------------------------------------------
+def _route_window(engine: Optional[GemminiInstance], window):
+    """Shared routing policy for the op-layer attention entries: returns
+    (window, backend). A static int window is normalized (0 encodes
+    "global" -> None) and keeps the engine's backend; a *traced* per-layer
+    scalar (gemma-style local:global interleave scanned as data, 0/2^30
+    encoding) cannot parameterize a Mosaic kernel, so it demotes the call
+    to the XLA path, whose mask arithmetic handles traced scalars."""
+    backend = engine.backend if engine is not None else "xla"
+    static_window = (window is None or isinstance(window, (int, np.integer)))
+    if static_window and window is not None:
+        window = int(window) or None
+    if not static_window:
+        backend = "xla"
+    return window, backend
+
+
+def attn_op(engine: Optional[GemminiInstance], q, k, v, *,
+            causal: bool = True, window=None, softcap: Optional[float] = None,
+            scale: Optional[float] = None):
+    """Model-zoo attention, routed through ``ops.flash_attention`` so the
+    engine's backend -- not the call site -- picks the lowering, and the
+    Pallas path resolves its tuned ``(block_q, block_k)`` schedule (the
+    ROADMAP "attn_apply uses the XLA blockwise path everywhere" gap).
+    ``transformer`` passes a static window whenever the model's layers are
+    window-uniform; see :func:`_route_window` for the traced-window rule.
+    """
+    from repro.kernels import ops
+    window, backend = _route_window(engine, window)
+    return ops.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, backend=backend)
+
+
+def paged_attn_op(engine: Optional[GemminiInstance], q,
+                  cache: PagedKVCache, *, window=None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None):
+    """Paged-decode twin of :func:`attn_op`: routes through
+    ``ops.paged_attention`` (in-kernel gather on pallas/interpret engines,
+    explicit gather on xla); a traced per-layer window falls back to the
+    gather path, whose masking handles traced scalars."""
+    from repro.kernels import ops
+    window, backend = _route_window(engine, window)
+    return ops.paged_attention(q, cache.k, cache.v, cache.tables,
+                               cache.lengths, window=window, softcap=softcap,
+                               scale=scale, backend=backend)
+
+
+# ---------------------------------------------------------------------------
 # full attention block
 # ---------------------------------------------------------------------------
 def attn_apply(engine: GemminiInstance, p: Params, x: jnp.ndarray, *,
@@ -230,11 +418,11 @@ def attn_apply(engine: GemminiInstance, p: Params, x: jnp.ndarray, *,
             o = decode_attention(q, cache, cache_pos, window=window,
                                  softcap=softcap, scale=query_scale)
         else:  # chunked prefill into cache
-            o = blockwise_attention_xla(q, cache.k[:, :], cache.v[:, :],
-                                        causal=True, window=window,
-                                        softcap=softcap, scale=query_scale)
+            o = attn_op(engine, q, cache.k[:, :], cache.v[:, :],
+                        causal=True, window=window, softcap=softcap,
+                        scale=query_scale)
     else:
-        o = blockwise_attention_xla(q, k, v, causal=True, window=window,
-                                    softcap=softcap, scale=query_scale)
+        o = attn_op(engine, q, k, v, causal=True, window=window,
+                    softcap=softcap, scale=query_scale)
     o = o.reshape(b, t, n_heads * head_dim)
     return layers.project(engine, o, p["wo"]), cache

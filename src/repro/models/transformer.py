@@ -137,6 +137,16 @@ def layer_windows(cfg: ModelConfig, seq_hint: int) -> np.ndarray:
     return win
 
 
+def uniform_window(win_np: np.ndarray) -> Optional[int]:
+    """The single static window shared by every layer (0 = global), or None
+    when layers disagree (gemma-style local:global interleave). A static
+    window lets the layer scan route attention to the Pallas kernel (and
+    its tuned schedule) on pallas/interpret engines; mixed-window models
+    scan the window as traced data and keep the XLA path."""
+    vals = {int(w) for w in win_np}
+    return vals.pop() if len(vals) == 1 else None
+
+
 def layer_rope_bases(cfg: ModelConfig) -> np.ndarray:
     base = np.full((cfg.n_layers,), cfg.rope_base, np.float32)
     if cfg.rope_base_local is not None and cfg.local_window:
@@ -307,8 +317,12 @@ def _maybe_qknorm(cfg, bp, q, k):
 
 
 def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
-                 cache=None, cache_pos=None):
-    """window: traced scalar, 0 = global. Returns (out, new_cache)."""
+                 cache=None, cache_pos=None, window_static=None):
+    """window: traced scalar, 0 = global; window_static: the same value as
+    a python int when the model is window-uniform (None = unavailable, use
+    the traced scalar). Returns (out, new_cache). ``cache`` may be a dense
+    :class:`attn.KVCache` (static-batch serving) or a paged
+    :class:`attn.PagedKVCache` (the continuous-batching engine)."""
     b, t, _ = h.shape
     p = bp["attn"]
     q = layers.project(engine, h, p["wq"], p.get("bq")).reshape(
@@ -323,7 +337,20 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
 
     # encode "global" as window > any position: mask kpos > qpos - window
     eff_window = jnp.where(window > 0, window, jnp.int32(2 ** 30))
-    if cache is not None:
+    win_arg = window_static if window_static is not None else eff_window
+    if isinstance(cache, attn.PagedKVCache):
+        if t == 1:
+            cache = attn.paged_update_decode(cache, k, v, cache.active,
+                                             cache.trash)
+            o = attn.paged_attn_op(engine, q, cache, window=win_arg,
+                                   softcap=cfg.attn_softcap)
+        else:
+            # fresh-request prefill: the prompt attends only itself, so the
+            # pool is write-only here (scatter into the allocated pages).
+            cache = attn.paged_update_prefill(cache, k, v, cache.tables[0])
+            o = attn.attn_op(engine, q, k, v, causal=True, window=win_arg,
+                             softcap=cfg.attn_softcap)
+    elif cache is not None:
         cache = attn.update_cache(cache, k, v, cache_pos)
         if t == 1:
             o = attn.decode_attention(q, cache, cache_pos,
@@ -333,27 +360,27 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
             # prefill from position 0: attend only the t written positions
             # (the cache tail beyond t is unwritten zeros, and blockwise
             # attention right-aligns queries against the key length).
-            o = attn.blockwise_attention_xla(q, cache.k[:, :t],
-                                             cache.v[:, :t], causal=True,
-                                             window=eff_window,
-                                             softcap=cfg.attn_softcap)
+            o = attn.attn_op(engine, q, cache.k[:, :t], cache.v[:, :t],
+                             causal=True, window=win_arg,
+                             softcap=cfg.attn_softcap)
     else:
-        o = attn.blockwise_attention_xla(q, k, v, causal=True,
-                                         window=eff_window,
-                                         softcap=cfg.attn_softcap)
+        o = attn.attn_op(engine, q, k, v, causal=True, window=win_arg,
+                         softcap=cfg.attn_softcap)
     o = o.reshape(b, t, cfg.n_heads * cfg.head_dim)
     return layers.project(engine, o, p["wo"]), cache
 
 
 def _block_apply(engine, cfg: ModelConfig, bp: Params, h: jnp.ndarray,
                  positions, window, rope_base,
-                 kv_cache=None, ssm_cache=None, cache_pos=None):
+                 kv_cache=None, ssm_cache=None, cache_pos=None,
+                 window_static=None):
     """One decoder block. Returns (h, kv_cache, ssm_cache)."""
     x = layers.rmsnorm(h, bp["ln1"])
     outs = []
     if cfg.has_attn:
         a_out, kv_cache = _attn_branch(engine, cfg, bp, x, positions, window,
-                                       rope_base, kv_cache, cache_pos)
+                                       rope_base, kv_cache, cache_pos,
+                                       window_static=window_static)
         outs.append(("attn", a_out))
     if cfg.has_ssm:
         s_out, ssm_cache = ssm.mamba2_apply(
@@ -457,12 +484,18 @@ def forward(engine: GemminiInstance, params: Params, cfg: ModelConfig,
     h = embed_inputs(cfg, params, tokens, extra_embeds)
     b, t, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
-    windows = jnp.asarray(layer_windows(cfg, t))
+    win_np = layer_windows(cfg, t)
+    windows = jnp.asarray(win_np)
     bases = jnp.asarray(layer_rope_bases(cfg))
     h = _constrain(h, residual_sharding)
 
     def body(h, xs):
         bp, win, base = xs
+        # No window_static here: forward() is the TRAIN path (loss_fn
+        # differentiates through it) and the Pallas flash kernel has no
+        # VJP, so attention must stay on the differentiable XLA route on
+        # every backend. The inference paths (prefill_into_cache /
+        # paged_prefill) pass the static window and get the kernel.
         h, _, _ = _block_apply(engine, cfg, bp, h, positions, win, base)
         return _constrain(h, residual_sharding), None
 
@@ -550,7 +583,9 @@ def prefill_into_cache(engine: GemminiInstance, params: Params,
     h = embed_inputs(cfg, params, tokens, extra_embeds)
     b, t, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
-    windows = jnp.asarray(layer_windows(cfg, t))
+    win_np = layer_windows(cfg, t)
+    windows = jnp.asarray(win_np)
+    static_win = uniform_window(win_np)
     bases = jnp.asarray(layer_rope_bases(cfg))
     write_pos = jnp.zeros((), jnp.int32)
 
@@ -560,7 +595,8 @@ def prefill_into_cache(engine: GemminiInstance, params: Params,
         ssc = ssm.SSMCache(conv, st) if conv is not None else None
         h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
                                    kv_cache=kvc, ssm_cache=ssc,
-                                   cache_pos=write_pos)
+                                   cache_pos=write_pos,
+                                   window_static=static_win)
         new = (kvc.k if kvc else None, kvc.v if kvc else None,
                ssc.conv if ssc else None, ssc.state if ssc else None)
         return h, new
@@ -674,3 +710,153 @@ def decode_step(engine: GemminiInstance, params: Params, cfg: ModelConfig,
     kv_k, kv_v, conv, st = caches
     logits = unembed(engine, cfg, params, h)
     return logits, DecodeState(kv_k, kv_v, conv, st, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# paged decode (the continuous-batching serving engine's substrate)
+# ---------------------------------------------------------------------------
+class PagedDecodeState(NamedTuple):
+    """Decode-slot state over *paged* KV pools.
+
+    Unlike :class:`DecodeState` (one contiguous (B, S) cache, one shared
+    scalar position), slots here are independent requests at independent
+    positions: per-layer page pools shared by every slot, per-slot block
+    tables mapping logical positions to pool pages, and per-slot lengths.
+    The last pool page (id NP) is the reserved trash page retired slots
+    spill to; the allocator only ever hands out ids [0, NP).
+    """
+
+    kv_k: Optional[jnp.ndarray]       # (L, KVH, NP + 1, page, D) or None
+    kv_v: Optional[jnp.ndarray]
+    conv: Optional[jnp.ndarray]       # (L, slots, K-1, conv_dim) or None
+    ssm: Optional[jnp.ndarray]        # (L, slots, H, N, P) or None
+    tables: jnp.ndarray               # (slots, MP) int32 page ids
+    lengths: jnp.ndarray              # (slots,) int32 cached tokens per slot
+
+
+def init_paged_state(cfg: ModelConfig, slots: int, n_pages: int,
+                     page_size: int, max_pages: int,
+                     dtype=jnp.bfloat16) -> PagedDecodeState:
+    kv_k = kv_v = conv = st = None
+    if cfg.has_attn:
+        shape = (cfg.n_layers, cfg.n_kv_heads, n_pages + 1, page_size,
+                 cfg.head_dim)
+        kv_k = jnp.zeros(shape, dtype)
+        kv_v = jnp.zeros(shape, dtype)
+    if cfg.has_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.d_state
+        conv = jnp.zeros((cfg.n_layers, slots, cfg.d_conv - 1, conv_dim),
+                         dtype)
+        st = jnp.zeros((cfg.n_layers, slots, cfg.n_ssm_heads, cfg.d_state,
+                        cfg.ssm_head_dim), jnp.float32)
+    return PagedDecodeState(kv_k, kv_v, conv, st,
+                            jnp.zeros((slots, max_pages), jnp.int32),
+                            jnp.zeros((slots,), jnp.int32))
+
+
+def paged_prefill(engine: GemminiInstance, params: Params, cfg: ModelConfig,
+                  tokens: jnp.ndarray, state: PagedDecodeState,
+                  slot: jnp.ndarray, pages: jnp.ndarray, *,
+                  page_size: int) -> Tuple[jnp.ndarray, PagedDecodeState]:
+    """Prefill ONE fresh request into the paged pools.
+
+    tokens: (1, P) [or (1, P, n_q)], P bucket-padded by the engine; slot:
+    scalar int32 decode slot; pages: (MP,) int32 pages allocated for the
+    request (entries past ceil(T'/page) unused, T' = P + meta tokens).
+    Returns (logits (1, T', V), state with the pools and the slot's SSM
+    caches written). The caller owns the host-side table/length update
+    (``lengths[slot] = true_len + meta``, ``tables[slot] = pages``) --
+    bucket-padding positions land in the allocated pages but stay dead
+    under the length mask, and the first decode token overwrites the first
+    of them. SSM slot caches start from zeros (a fresh request must not
+    inherit a retired tenant's recurrent state).
+    """
+    h = embed_inputs(cfg, params, tokens)
+    b, t, _ = h.shape                                  # b == 1
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    win_np = layer_windows(cfg, t)
+    windows = jnp.asarray(win_np)
+    static_win = uniform_window(win_np)
+    bases = jnp.asarray(layer_rope_bases(cfg))
+    zero_len = jnp.zeros((1,), jnp.int32)
+
+    def body(h, xs):
+        bp, win, base, kv_k, kv_v, conv, st = xs
+        kvc = None
+        if kv_k is not None:
+            kvc = attn.PagedKVCache(kv_k, kv_v, pages[None], zero_len,
+                                    page_size)
+        ssc = None
+        if conv is not None:
+            c1 = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(conv, slot, 1, 0))
+            s1 = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(st, slot, 1, 0))
+            ssc = ssm.SSMCache(c1, s1)
+        h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
+                                   kv_cache=kvc, ssm_cache=ssc,
+                                   window_static=static_win)
+        new = (kvc.k if kvc else None, kvc.v if kvc else None,
+               jax.lax.dynamic_update_slice_in_dim(
+                   conv, ssc.conv.astype(conv.dtype), slot, 0)
+               if ssc else None,
+               jax.lax.dynamic_update_slice_in_dim(
+                   st, ssc.state.astype(st.dtype), slot, 0)
+               if ssc else None)
+        return h, new
+
+    xs = (params["blocks"], windows, bases, state.kv_k, state.kv_v,
+          state.conv, state.ssm)
+    h, caches = jax.lax.scan(body, h, xs)
+    kv_k, kv_v, conv, st = caches
+    logits = unembed(engine, cfg, params, h)
+    return logits, state._replace(kv_k=kv_k, kv_v=kv_v, conv=conv, ssm=st)
+
+
+def paged_decode_step(engine: GemminiInstance, params: Params,
+                      cfg: ModelConfig, tokens: jnp.ndarray,
+                      state: PagedDecodeState, active: jnp.ndarray, *,
+                      page_size: int
+                      ) -> Tuple[jnp.ndarray, PagedDecodeState]:
+    """One continuous-batching decode step: every slot advances one token.
+
+    tokens: (slots, 1) [or (slots, 1, n_q)]; active: (slots,) bool -- slots
+    that are empty or whose request finished/preempted decode padding
+    (static shapes) but write to the trash page and keep frozen lengths,
+    so they can never touch pages owned by live requests. Each slot ropes
+    and attends at its OWN position (``lengths[slot]``) -- the per-request
+    raggedness the static-batch ``decode_step`` cannot express.
+    """
+    if cfg.n_codebooks > 1:
+        h = sum(layers.embed_apply(params["embed"][i], tokens[..., i])
+                for i in range(cfg.n_codebooks))
+    else:
+        h = layers.embed_apply(params["embed"], tokens,
+                               scale_by_sqrt_dim=cfg.embed_scale)
+    positions = state.lengths[:, None]                 # (slots, 1)
+    win_np = layer_windows(cfg, 0)
+    windows = jnp.asarray(win_np)
+    static_win = uniform_window(win_np)
+    bases = jnp.asarray(layer_rope_bases(cfg))
+    trash = state.kv_k.shape[2] - 1 if state.kv_k is not None else 0
+
+    def body(h, xs):
+        bp, win, base, kv_k, kv_v, conv, st = xs
+        kvc = None
+        if kv_k is not None:
+            kvc = attn.PagedKVCache(kv_k, kv_v, state.tables, state.lengths,
+                                    page_size, active, trash)
+        ssc = ssm.SSMCache(conv, st) if conv is not None else None
+        h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
+                                   kv_cache=kvc, ssm_cache=ssc,
+                                   window_static=static_win)
+        new = (kvc.k if kvc else None, kvc.v if kvc else None,
+               ssc.conv if ssc else None, ssc.state if ssc else None)
+        return h, new
+
+    xs = (params["blocks"], windows, bases, state.kv_k, state.kv_v,
+          state.conv, state.ssm)
+    h, caches = jax.lax.scan(body, h, xs)
+    kv_k, kv_v, conv, st = caches
+    logits = unembed(engine, cfg, params, h)
+    lengths = jnp.where(active, state.lengths + 1, state.lengths)
+    return logits, state._replace(kv_k=kv_k, kv_v=kv_v, conv=conv, ssm=st,
+                                  lengths=lengths)

@@ -1,0 +1,22 @@
+"""Continuous-batching serving engine over paged KV caches.
+
+The system layer above the kernel library (ROADMAP north star): request
+admission, prefill/decode interleaving, paged cache memory management, and
+preemption under pressure -- the shared-resource contention the paper
+argues accelerator evaluation must include.
+
+* :mod:`repro.serving.paged_cache` -- fixed-size-block KV allocator
+  (alloc/free/defrag, capacity accounting vs ``GemminiConfig.hbm_bytes``);
+* :mod:`repro.serving.scheduler`   -- admission queue, token-budget
+  prefill/decode interleave, preemption-by-eviction, telemetry;
+* :mod:`repro.serving.engine`      -- ``ServingEngine``: the jitted paged
+  model steps + the policy loop (``policy="continuous" | "static"``).
+"""
+
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_cache import (PagedKVAllocator, arena_pages,
+                                       pages_for)
+from repro.serving.scheduler import ContinuousScheduler, Request, summarize
+
+__all__ = ["ContinuousScheduler", "PagedKVAllocator", "Request",
+           "ServingEngine", "arena_pages", "pages_for", "summarize"]

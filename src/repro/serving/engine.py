@@ -1,0 +1,331 @@
+"""Request-level serving engine: continuous batching over paged KV caches.
+
+``ServingEngine`` binds a model, its parameters, one jitted paged-prefill
+and one jitted paged-decode computation, the page allocator, and the
+scheduler into the loop a serving binary runs:
+
+    engine = ServingEngine(configs.get_smoke("gemma3-1b"), max_slots=4)
+    engine.submit(prompt, max_new_tokens=32)
+    report = engine.run()            # drains the queue
+
+Static shapes throughout (XLA/jit discipline): the decode batch is always
+``max_slots`` wide -- empty or finished slots decode padding into the trash
+page -- and prefill pads prompts up to a page-size multiple so distinct
+prompt lengths share compile-cache buckets. The *contents* are fully
+dynamic: requests enter and leave slots every iteration, which is exactly
+the contention the static batch loop (``policy="static"``: admission
+barrier, no slot recycling) cannot express; ``benchmarks/bench_serving.py``
+measures the two policies against each other on one request trace.
+
+Per-request numerics are batch-invariant: projections, norms, and the
+paged attention path are row-independent, so a request decoded alongside
+arbitrary co-tenants produces bit-identical tokens to the same request
+decoded alone through the static reference path (``examples/serve_decode``
+gates its exit code on this).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flags
+from repro.core.config import GemminiConfig
+from repro.core.generator import default_engine_backend, elaborate
+from repro.models import transformer as tf
+from repro.serving.paged_cache import PagedKVAllocator, arena_pages
+from repro.serving.scheduler import ContinuousScheduler, Request, summarize
+
+
+# Jitted step functions shared across ServingEngine instances: jax.jit
+# caches per function object, so per-engine lambdas would recompile every
+# prefill/decode bucket on every engine construction (e.g. the
+# static-vs-continuous benchmark builds four engines over one model).
+# Keyed by everything the closures bake in; both configs are frozen
+# dataclasses, so the key is value-hashed, not identity-hashed.
+_JIT_CACHE: Dict = {}
+
+
+def _jitted_steps(engine, model_cfg, page_size: int):
+    key = (engine.cfg, engine.backend, model_cfg, page_size)
+    if key not in _JIT_CACHE:
+        prefill = jax.jit(
+            lambda p, tok, st, slot, pages: tf.paged_prefill(
+                engine, p, model_cfg, tok, st, slot, pages,
+                page_size=page_size),
+            donate_argnums=(2,))
+        decode = jax.jit(
+            lambda p, tok, st, act: tf.paged_decode_step(
+                engine, p, model_cfg, tok, st, act, page_size=page_size),
+            donate_argnums=(2,))
+        _JIT_CACHE[key] = (prefill, decode)
+    return _JIT_CACHE[key]
+
+
+class ServingEngine:
+    """Continuous-batching executor for one model on one host."""
+
+    def __init__(self, model_cfg, *, max_slots: int = 4,
+                 max_context: int = 2048,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 engine_cfg: Optional[GemminiConfig] = None,
+                 backend: Optional[str] = None,
+                 params=None, seed: int = 0,
+                 temperature: float = 0.0,
+                 prefill_token_budget: int = 512,
+                 policy: str = "continuous",
+                 warm_prompt_lens: Sequence[int] = ()):
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.model_cfg = model_cfg
+        self.policy = policy
+        self.temperature = temperature
+        self.max_slots = max_slots
+        self.max_context = max_context
+        cfg = engine_cfg or GemminiConfig(input_dtype="bf16",
+                                          acc_dtype="fp32",
+                                          output_dtype="bf16")
+        self.engine = elaborate(cfg, backend or default_engine_backend())
+
+        # -- page geometry: the tuned schedule is the page size ------------
+        if page_size is None:
+            if flags.get("tune_mode") != "off" and model_cfg.has_attn:
+                from repro import tune
+                page_size = tune.resolve_paged_attn_schedule(
+                    cfg, max_slots, model_cfg.n_heads, model_cfg.n_kv_heads,
+                    model_cfg.head_dim, max_context,
+                    dtype=model_cfg.dtype).page_size
+            else:
+                from repro.tune.schedules import DEFAULT_PAGE_SIZE
+                page_size = DEFAULT_PAGE_SIZE
+        self.page_size = max(8, min(page_size, max_context))
+        self.max_pages_per_seq = -(-max_context // self.page_size)
+        if n_pages is None:
+            # Budget-derived arena, capped at what the engine can ever hold
+            # live: pages belong only to running slots, each at most
+            # max_pages_per_seq deep, so anything beyond slots*MP is zero
+            # pools that no schedule could touch (a full gemma3 config
+            # would otherwise allocate the whole 4096-page cap -- GiBs of
+            # zeros -- to serve a 2-request smoke batch).
+            n_pages = max(self.max_pages_per_seq,
+                          min(max_slots * self.max_pages_per_seq,
+                              arena_pages(model_cfg, cfg, self.page_size)))
+        self.alloc = PagedKVAllocator(n_pages, self.page_size,
+                                      self.max_pages_per_seq)
+        # Prompt bucketing (compile-cache friendliness): legal only for
+        # pure-attention families, where padded positions are provably dead
+        # under the causal mask + length mask. An SSM/hybrid model's
+        # recurrent scan state WOULD absorb padding tokens, silently
+        # diverging from the reference path, so those prefill at exact
+        # length (one compile per distinct prompt length).
+        self.prefill_pad = 1 if model_cfg.has_ssm else self.page_size
+        self.sched = ContinuousScheduler(
+            self.alloc, max_slots,
+            prefill_token_budget=prefill_token_budget,
+            extra_tokens_per_prefill=model_cfg.n_meta_tokens,
+            pad_to=self.prefill_pad)
+        if policy == "static":
+            # Static batching as a degenerate policy: admit only into an
+            # EMPTY engine (group barrier, no slot recycling) and ignore
+            # the prefill budget -- the whole group prefills at once.
+            self.sched.prefill_token_budget = 1 << 30
+
+        # -- model state + jitted steps ------------------------------------
+        self._key = jax.random.PRNGKey(seed)
+        if params is None:
+            self._key, pk = jax.random.split(self._key)
+            params = tf.init_params(pk, model_cfg)
+        self.params = params
+        self.state = tf.init_paged_state(model_cfg, max_slots, n_pages,
+                                         self.page_size,
+                                         self.max_pages_per_seq,
+                                         dtype=model_cfg.dtype)
+        mc = model_cfg
+        self._jit_prefill, self._jit_decode = _jitted_steps(
+            self.engine, mc, self.page_size)
+
+        tok_shape = (max_slots,) if mc.n_codebooks == 1 \
+            else (max_slots, mc.n_codebooks)
+        self._next_token = np.zeros(tok_shape, np.int32)
+        self._rid = 0
+        self.requests: List[Request] = []
+        self.warm_stats: Optional[Dict[str, int]] = None
+        if warm_prompt_lens and flags.get("tune_mode") != "off":
+            self.warm_stats = self.warm(warm_prompt_lens)
+
+    # -- plan warm-up ------------------------------------------------------
+    def warm(self, prompt_lens: Sequence[int]) -> Dict[str, int]:
+        """Pre-resolve every schedule the engine will launch: prefill GEMM
+        and attention shapes per prompt bucket (batch 1), decode GEMMs at
+        the slot batch, and the paged-attention page size the pools were
+        sized with -- so no request ever tunes on the request path."""
+        from repro import tune
+        totals: Dict[str, int] = {}
+        # Prefill really runs at bucket + meta tokens (embed_inputs prepends
+        # them), so that is the length to warm -- warming the bare bucket
+        # would populate fingerprints the request path never hits.
+        meta = self.model_cfg.n_meta_tokens
+        buckets = sorted({self._bucket(int(p)) + meta for p in prompt_lens})
+        for i, b in enumerate(buckets):
+            st = tune.warm_model_plans(
+                self.engine.cfg, self.model_cfg, 1, b,
+                include_decode=False,
+                paged_slots=self.max_slots if i == 0 else 0,
+                paged_max_context=self.max_context)
+            totals = {k: totals.get(k, 0) + v for k, v in st.items()}
+        st = tune.warm_model_plans(self.engine.cfg, self.model_cfg,
+                                   self.max_slots, 1,
+                                   include_attention=False)
+        totals = {k: totals.get(k, 0) + v for k, v in st.items()}
+        return totals
+
+    # -- submission --------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        return -(-max(1, n) // self.prefill_pad) * self.prefill_pad
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               eos_id: int = -1) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        need = self._bucket(len(prompt)) + self.model_cfg.n_meta_tokens
+        cap = min(self.max_pages_per_seq,
+                  self.alloc.n_pages) * self.page_size
+        if need > cap:
+            raise ValueError(f"prompt of {len(prompt)} tokens can never be "
+                             f"admitted (cache capacity {cap} tokens, "
+                             f"max_context={self.max_context})")
+        req = Request(rid=self._rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+        self._rid += 1
+        self.requests.append(req)
+        self.sched.submit(req)
+        return req
+
+    # -- sampling ----------------------------------------------------------
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        """logits: (..., V) -> token ids, greedy unless temperature > 0."""
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._key, k = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.temperature), np.int32)
+
+    def _record_token(self, req: Request, tok: np.ndarray,
+                      now: float) -> None:
+        req.generated.append(tok if tok.ndim else int(tok))
+        if req.t_first_token is None:
+            req.t_first_token = now
+        self._next_token[req.slot] = tok
+        done = req.n_generated >= req.max_new_tokens
+        if self.model_cfg.n_codebooks == 1 and int(tok) == req.eos_id:
+            done = True
+        if done:
+            self.sched.finish(req)
+
+    # -- execution ---------------------------------------------------------
+    def _table_row(self, slot: int) -> np.ndarray:
+        row = np.zeros((self.max_pages_per_seq,), np.int32)
+        pages = self.alloc.slot_pages(slot)
+        row[:len(pages)] = pages
+        return row
+
+    def _sync_tables(self, slots) -> None:
+        tables = self.state.tables
+        for slot in slots:
+            tables = tables.at[slot].set(jnp.asarray(self._table_row(slot)))
+        self.state = self.state._replace(tables=tables)
+
+    def _do_prefill(self, req: Request, slot: int) -> None:
+        prompt = req.serve_prompt()
+        pad = self._bucket(len(prompt)) - len(prompt)
+        if pad:
+            prompt = np.pad(prompt, ((0, pad),) + ((0, 0),)
+                            * (prompt.ndim - 1))
+        row = self._table_row(slot)
+        logits, self.state = self._jit_prefill(
+            self.params, jnp.asarray(prompt[None]), self.state,
+            jnp.int32(slot), jnp.asarray(row))
+        true_len = len(req.serve_prompt()) + self.model_cfg.n_meta_tokens
+        req.cache_len = true_len
+        self.state = self.state._replace(
+            lengths=self.state.lengths.at[slot].set(true_len))
+        self._sync_tables([slot])
+        tok = self._sample(logits[0, true_len - 1])
+        self._record_token(req, tok, time.time())
+
+    def _do_decode(self) -> None:
+        active_np = np.zeros((self.max_slots,), bool)
+        for slot in self.sched.running:
+            active_np[slot] = True
+        toks = self._next_token[:, None] \
+            if self.model_cfg.n_codebooks == 1 \
+            else self._next_token[:, None, :]
+        logits, self.state = self._jit_decode(
+            self.params, jnp.asarray(toks), self.state,
+            jnp.asarray(active_np))
+        last = self._sample(logits[:, -1])
+        now = time.time()
+        for slot, req in list(self.sched.running.items()):
+            req.cache_len += 1
+            self._record_token(req, last[slot], now)
+
+    def step(self) -> None:
+        """One scheduler iteration: admit/prefill, ensure capacity
+        (preempting by eviction under pressure), decode one token."""
+        if not (self.policy == "static" and self.sched.running):
+            for (req, slot, _pages) in self.sched.admissions():
+                self._do_prefill(req, slot)
+        for req in self.sched.rejected:
+            # Regrew past the arena while preempted: finish truncated.
+            self.sched.finish(req, truncated=True)
+        self.sched.rejected = []
+        new_pages, _evicted, _truncated = self.sched.ensure_decode_capacity()
+        if new_pages:
+            self._sync_tables({slot for slot, _ in new_pages})
+        if self.sched.running:
+            self._do_decode()
+
+    def run(self) -> Dict:
+        """Drain the queue; returns {summary, requests} telemetry."""
+        t0 = time.time()
+        iters = 0
+        while self.sched.has_work:
+            self.step()
+            iters += 1
+            if iters > 100_000:
+                raise RuntimeError("serving loop did not converge")
+        wall = time.time() - t0
+        summary = summarize(self.requests, wall)
+        # Deterministic structural metric alongside the wall-clock ones:
+        # continuous batching's win IS fewer engine iterations for the same
+        # token count (slot recycling), independent of host noise.
+        summary["iterations"] = float(iters)
+        return {"summary": summary,
+                "requests": [self._req_report(r) for r in self.requests]}
+
+    def _req_report(self, r: Request) -> Dict:
+        return {"rid": r.rid, "prompt_tokens": int(len(r.prompt)),
+                "new_tokens": r.n_generated,
+                "tokens": np.asarray(r.generated),
+                "preempted": r.n_preempted, "truncated": r.truncated,
+                "ttft_s": (r.t_first_token - r.submitted_at)
+                if r.t_first_token else None,
+                "latency_s": (r.t_finished - r.submitted_at)
+                if r.t_finished else None}
+
+    # -- maintenance -------------------------------------------------------
+    def defrag(self) -> None:
+        """Compact live pages to the arena front: permute the device pools
+        and rewrite every slot's table (see PagedKVAllocator.defrag)."""
+        perm = self.alloc.defrag()
+        if self.state.kv_k is not None:
+            inv = np.argsort(perm)
+            idx = jnp.asarray(np.concatenate([inv, [self.alloc.n_pages]]))
+            self.state = self.state._replace(
+                kv_k=jnp.take(self.state.kv_k, idx, axis=2),
+                kv_v=jnp.take(self.state.kv_v, idx, axis=2))
+        self._sync_tables(list(self.sched.running))

@@ -1,0 +1,152 @@
+"""Paged KV-cache allocator: fixed-size blocks, per-request block tables.
+
+The host-side half of the serving engine's memory system. Device state (the
+page pools) lives in :class:`repro.models.transformer.PagedDecodeState`;
+this module owns the *accounting*: which pool pages are free, which belong
+to which decode slot, and whether a new request fits under the HBM budget
+the :class:`~repro.core.config.GemminiConfig` grants long-lived state
+(``hbm_bytes``). Paging exists precisely so that budget is spent on tokens
+actually cached, not on max-context-sized contiguous reservations: a
+request holds ``ceil(len / page_size)`` pages, never ``max_context``.
+
+Invariants the engine relies on:
+
+* page ids handed out are always in ``[0, n_pages)`` -- id ``n_pages`` is
+  the reserved trash page retired decode slots spill to, and the allocator
+  never owns it;
+* a page belongs to at most one slot (``free`` + per-slot tables partition
+  the arena);
+* ``free_slot`` makes the freed pages immediately reusable (eviction IS
+  the preemption mechanism: the scheduler frees a victim's pages and
+  re-queues it for recompute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-max(0, n_tokens) // page_size)
+
+
+@dataclasses.dataclass
+class PagedKVAllocator:
+    """Free-list page allocator over one page arena shared by all layers."""
+
+    n_pages: int
+    page_size: int
+    max_pages_per_seq: int
+
+    def __post_init__(self):
+        if self.n_pages < 1:
+            raise ValueError("paged cache needs at least one page; raise "
+                             "hbm_bytes or shrink the model/page size")
+        # LIFO free list: a just-freed page is the next handed out, so tests
+        # can observe reuse deterministically and the hot arena stays small.
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self._tables: Dict[int, List[int]] = {}      # slot -> page ids
+
+    # -- capacity accounting ----------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_pages / self.n_pages
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.n_pages * self.page_size
+
+    def slot_pages(self, slot: int) -> List[int]:
+        return list(self._tables.get(slot, ()))
+
+    def can_admit(self, n_tokens: int) -> bool:
+        need = pages_for(n_tokens, self.page_size)
+        return need <= len(self._free) and need <= self.max_pages_per_seq
+
+    # -- alloc / free ------------------------------------------------------
+    def alloc_slot(self, slot: int, n_tokens: int) -> Optional[List[int]]:
+        """Pages covering positions [0, n_tokens) for a fresh request, or
+        None when the arena (or the per-request table) cannot hold it."""
+        if slot in self._tables:
+            raise ValueError(f"slot {slot} already holds pages; free first")
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_pages_per_seq or need > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[slot] = pages
+        return list(pages)
+
+    def extend_slot(self, slot: int) -> Optional[int]:
+        """One more page for a growing request (decode crossed a page
+        boundary); None when the arena is exhausted or the request is at
+        ``max_pages_per_seq`` (its context limit)."""
+        pages = self._tables.get(slot)
+        if pages is None:
+            raise ValueError(f"slot {slot} holds no pages")
+        if len(pages) >= self.max_pages_per_seq or not self._free:
+            return None
+        pid = self._free.pop()
+        pages.append(pid)
+        return pid
+
+    def free_slot(self, slot: int) -> int:
+        """Return the slot's pages to the arena; returns how many."""
+        pages = self._tables.pop(slot, [])
+        self._free.extend(reversed(pages))
+        return len(pages)
+
+    # -- defrag ------------------------------------------------------------
+    def defrag(self) -> np.ndarray:
+        """Compact live pages to the front of the arena.
+
+        Returns the length-``n_pages`` permutation ``perm`` with
+        ``perm[old_id] = new_id`` (identity for already-compact arenas);
+        the caller must apply it to the device pools
+        (``pool[:, :, perm_inverse]``, see ``ServingEngine.defrag``) and
+        this allocator rewrites its tables in place. Paging makes defrag
+        unnecessary for correctness -- it exists so a long-lived engine can
+        shrink its arena (checkpoint/offload the contiguous free tail).
+        """
+        live = [p for slot in sorted(self._tables)
+                for p in self._tables[slot]]
+        perm = np.full((self.n_pages,), -1, np.int64)
+        for new_id, old_id in enumerate(live):
+            perm[old_id] = new_id
+        nxt = len(live)
+        for old_id in range(self.n_pages):
+            if perm[old_id] < 0:
+                perm[old_id] = nxt
+                nxt += 1
+        for slot, pages in self._tables.items():
+            self._tables[slot] = [int(perm[p]) for p in pages]
+        self._free = list(range(self.n_pages - 1, len(live) - 1, -1))
+        return perm
+
+
+def arena_pages(model_cfg, engine_cfg, page_size: int, *,
+                budget_fraction: float = 0.5,
+                max_pages: int = 4096) -> int:
+    """Size the page arena against the config's HBM budget.
+
+    One page costs ``L * 2 (K and V) * page * KVH * D * dtype_bytes``
+    across the layer-stacked pools; ``budget_fraction`` of
+    ``engine_cfg.hbm_bytes`` goes to the arena (the rest stays for weights
+    and activations). ``max_pages`` caps the arena for smoke/CPU runs.
+    """
+    import jax.numpy as jnp
+    dtype_bytes = jnp.dtype(model_cfg.dtype).itemsize
+    page_bytes = (model_cfg.n_layers * 2 * page_size * model_cfg.n_kv_heads
+                  * model_cfg.head_dim * dtype_bytes)
+    budget = int(engine_cfg.hbm_bytes * budget_fraction)
+    return max(1, min(max_pages, budget // max(1, page_bytes)))

@@ -1,0 +1,247 @@
+"""Continuous-batching scheduler: admission, interleave, preemption.
+
+The request-level control loop the paper's full-stack argument calls for:
+kernel quality only matters under the contention a real serving mix
+creates, and this module is where that mix is shaped. Policy, in order of
+application each engine iteration:
+
+1. **Admission** (prefill side): queued requests are admitted into free
+   decode slots oldest-first, as long as (a) a slot is free, (b) the paged
+   allocator can hold the whole prompt, and (c) the iteration's
+   *prefill token budget* is not exhausted. The budget is the classic
+   continuous-batching knob balancing time-to-first-token of queued
+   requests against inter-token latency of running ones: each admitted
+   prompt stalls every running request for one prefill pass.
+2. **Decode capacity** (preemption-by-eviction): every running request
+   about to cross a page boundary gets one page; when the arena is dry the
+   *youngest* running request is evicted -- its pages freed, the request
+   re-queued for recompute (prompt + tokens generated so far become the
+   new prompt). Youngest-first eviction wastes the least completed work,
+   and the oldest request can always make progress, so the loop is
+   livelock-free. A request that hits its per-sequence page cap is
+   finished as truncated instead (its context limit, not memory pressure).
+3. **Decode**: one token for every running slot (the engine's single
+   static-shape ``paged_decode_step``).
+
+Telemetry is per-request (TTFT, end-to-end latency, preemption count) and
+aggregated to the p50/p99 + tokens/s numbers BENCH_serving.json tracks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.paged_cache import PagedKVAllocator, pages_for
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its runtime bookkeeping."""
+
+    rid: int
+    prompt: np.ndarray                    # (P,) int32 [or (P, n_q)]
+    max_new_tokens: int
+    eos_id: int = -1                      # -1: never emitted
+
+    # runtime (engine/scheduler owned)
+    state: str = "queued"                 # queued | running | finished
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    cache_len: int = 0                    # cached tokens (prompt+meta+gen)
+    n_preempted: int = 0
+    truncated: bool = False
+    submitted_at: float = 0.0
+    admitted_seq: int = -1                # admission order (eviction key)
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    def serve_prompt(self) -> np.ndarray:
+        """What prefill must (re)compute: the original prompt plus anything
+        generated before a preemption (recompute-style restart)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate([self.prompt, np.asarray(self.generated,
+                                                       self.prompt.dtype)])
+
+
+class ContinuousScheduler:
+    """Slot/page bookkeeping + the three-phase policy above.
+
+    The scheduler is deliberately device-free: it sees token counts and the
+    allocator, never arrays, so its decisions are unit-testable without a
+    model. The engine executes the actions it returns.
+    """
+
+    def __init__(self, allocator: PagedKVAllocator, n_slots: int, *,
+                 prefill_token_budget: int = 512,
+                 extra_tokens_per_prefill: int = 0,
+                 pad_to: int = 1):
+        self.alloc = allocator
+        self.n_slots = n_slots
+        self.prefill_token_budget = prefill_token_budget
+        # meta tokens (hymba) ride along with every prefill's cache cost
+        self.extra_tokens = extra_tokens_per_prefill
+        # the engine bucket-pads prompts (compile caching), so admission
+        # must charge the padded cache footprint, not the raw prompt
+        self.pad_to = pad_to
+        self.queue: List[Request] = []
+        self.running: Dict[int, Request] = {}          # slot -> request
+        self.rejected: List[Request] = []              # engine drains these
+        self._admit_seq = 0
+
+    def _prefill_need(self, req: Request) -> int:
+        plen = len(req.serve_prompt())
+        return -(-plen // self.pad_to) * self.pad_to + self.extra_tokens
+
+    # -- submission --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.state = "queued"
+        req.submitted_at = req.submitted_at or time.time()
+        self.queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.running)
+
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.n_slots) if s not in self.running]
+
+    # -- phase 1: admission ------------------------------------------------
+    def admissions(self) -> List[Tuple[Request, int, List[int]]]:
+        """(request, slot, pages) to prefill this iteration. Pages are
+        allocated here (the commitment point); the engine only executes."""
+        out: List[Tuple[Request, int, List[int]]] = []
+        budget = self.prefill_token_budget
+        free = self._free_slots()
+        while self.queue and free:
+            req = self.queue[0]
+            need = self._prefill_need(req)
+            cap = min(self.alloc.n_pages, self.alloc.max_pages_per_seq)
+            if pages_for(need, self.alloc.page_size) > cap:
+                # Can NEVER be admitted -- a preempted request regrew past
+                # the arena (its recompute prompt includes everything it
+                # generated). Reject it instead of head-of-line-blocking
+                # the queue forever; the engine finishes it as truncated.
+                self.queue.pop(0)
+                self.rejected.append(req)
+                continue
+            if out and need > budget:
+                break                      # budget spent; keep FIFO order
+            if not self.alloc.can_admit(need):
+                break                      # head-of-line blocks: no overtake
+            self.queue.pop(0)
+            slot = free.pop(0)
+            pages = self.alloc.alloc_slot(slot, need)
+            assert pages is not None       # can_admit just said yes
+            req.state, req.slot = "running", slot
+            req.admitted_seq = self._admit_seq
+            self._admit_seq += 1
+            self.running[slot] = req
+            budget -= need
+            out.append((req, slot, pages))
+        return out
+
+    # -- phase 2: decode capacity / preemption ----------------------------
+    def ensure_decode_capacity(self) -> Tuple[List[Tuple[int, int]],
+                                              List[Request],
+                                              List[Request]]:
+        """Guarantee every running slot can take one more token.
+
+        Returns (new_pages, evicted, truncated): ``new_pages`` as
+        (slot, page_id) for the engine's table updates; ``evicted``
+        requests were preempted back to the queue (their slots are free);
+        ``truncated`` hit their per-sequence context cap and were finished
+        here (immediately out of ``running`` -- a truncated request left
+        running would be a legal eviction victim later in the same pass,
+        and preempting an already-finished request would requeue it as a
+        zombie).
+        """
+        new_pages: List[Tuple[int, int]] = []
+        evicted: List[Request] = []
+        truncated: List[Request] = []
+        for slot in sorted(self.running):
+            req = self.running.get(slot)
+            if req is None:
+                continue
+            while True:
+                if req.cache_len % self.alloc.page_size != 0:
+                    break                  # headroom in the current page
+                held = len(self.alloc.slot_pages(slot))
+                if req.cache_len < held * self.alloc.page_size:
+                    break                  # page already allocated
+                if held >= self.alloc.max_pages_per_seq:
+                    self.finish(req, truncated=True)   # context limit
+                    truncated.append(req)
+                    break
+                pid = self.alloc.extend_slot(slot)
+                if pid is not None:
+                    new_pages.append((slot, pid))
+                    break
+                if len(self.running) <= 1:
+                    # The sole runner holds every live page yet needs more:
+                    # its context outgrew the arena, and eviction cannot
+                    # help. Finish it truncated rather than thrash.
+                    self.finish(req, truncated=True)
+                    truncated.append(req)
+                    break
+                victim = self._eviction_victim()
+                self.preempt(victim)
+                evicted.append(victim)
+                if victim is req:
+                    break                  # evicted itself; retry later
+        return new_pages, evicted, truncated
+
+    def _eviction_victim(self) -> Request:
+        """The youngest-admitted runner: least completed work is wasted and
+        the oldest request always keeps making progress (no livelock)."""
+        return max(self.running.values(), key=lambda r: r.admitted_seq)
+
+    # -- state transitions -------------------------------------------------
+    def preempt(self, req: Request) -> None:
+        """Evict a running request: free its pages, requeue for recompute.
+        Generated tokens are kept (they re-prefill as prompt suffix)."""
+        self.alloc.free_slot(req.slot)
+        del self.running[req.slot]
+        req.state, req.slot, req.cache_len = "queued", -1, 0
+        req.n_preempted += 1
+        self.queue.insert(0, req)          # preempted requests go first
+
+    def finish(self, req: Request, *, truncated: bool = False) -> None:
+        self.alloc.free_slot(req.slot)
+        self.running.pop(req.slot, None)
+        req.state = "finished"
+        req.truncated = truncated
+        req.t_finished = time.time()
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+def summarize(requests: List[Request], wall_s: float) -> Dict[str, float]:
+    """Aggregate per-request telemetry into the BENCH_serving schema."""
+    done = [r for r in requests if r.state == "finished"]
+    lat = np.asarray([r.t_finished - r.submitted_at for r in done
+                      if r.t_finished is not None] or [0.0])
+    ttft = np.asarray([r.t_first_token - r.submitted_at for r in done
+                       if r.t_first_token is not None] or [0.0])
+    new_tokens = sum(r.n_generated for r in done)
+    return {
+        "requests": float(len(done)),
+        "new_tokens": float(new_tokens),
+        "wall_s": wall_s,
+        "tokens_per_s": new_tokens / max(wall_s, 1e-9),
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "p50_ttft_s": float(np.percentile(ttft, 50)),
+        "p99_ttft_s": float(np.percentile(ttft, 99)),
+        "preemptions": float(sum(r.n_preempted for r in requests)),
+        "truncated": float(sum(1 for r in requests if r.truncated)),
+    }

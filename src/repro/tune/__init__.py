@@ -25,27 +25,35 @@ from repro.core.config import Dataflow, GemminiConfig
 from repro.tune.cache import (PlanCache, default_cache_path, fingerprint,
                               get_cache, kernel_fingerprint, reset_cache)
 from repro.tune.measure import (measure_attn_schedule, measure_conv_schedule,
-                                measure_plan, measurement_backend,
-                                time_callable)
-from repro.tune.schedules import (AttnSchedule, ConvSchedule, attn_cache_key,
+                                measure_paged_schedule, measure_plan,
+                                measurement_backend, time_callable)
+from repro.tune.schedules import (AttnSchedule, ConvSchedule,
+                                  PagedAttnSchedule, attn_cache_key,
                                   attn_cycles, conv_cache_key, conv_cycles,
                                   enumerate_attn_schedules,
-                                  enumerate_conv_schedules)
+                                  enumerate_conv_schedules,
+                                  enumerate_paged_schedules,
+                                  paged_attn_cache_key, paged_attn_cycles)
 from repro.tune.tuner import (TIE_BAND, SchedReport, TuneReport,
                               analytic_cycles, resolve_attn_schedule,
-                              resolve_conv_schedule, resolve_plan, tune_attention,
-                              tune_conv, tune_gemm, tuned_plan_fn)
+                              resolve_conv_schedule,
+                              resolve_paged_attn_schedule, resolve_plan,
+                              tune_attention, tune_conv, tune_gemm,
+                              tune_paged_attention, tuned_plan_fn)
 
 __all__ = [
-    "AttnSchedule", "ConvSchedule", "PlanCache", "SchedReport", "TIE_BAND",
-    "TuneReport", "analytic_cycles", "attn_cache_key", "attn_cycles",
-    "conv_cache_key", "conv_cycles", "default_cache_path",
-    "enumerate_attn_schedules", "enumerate_conv_schedules", "fingerprint",
+    "AttnSchedule", "ConvSchedule", "PagedAttnSchedule", "PlanCache",
+    "SchedReport", "TIE_BAND", "TuneReport", "analytic_cycles",
+    "attn_cache_key", "attn_cycles", "conv_cache_key", "conv_cycles",
+    "default_cache_path", "enumerate_attn_schedules",
+    "enumerate_conv_schedules", "enumerate_paged_schedules", "fingerprint",
     "get_cache", "kernel_fingerprint", "measure_attn_schedule",
-    "measure_conv_schedule", "measure_plan", "measurement_backend",
+    "measure_conv_schedule", "measure_paged_schedule", "measure_plan",
+    "measurement_backend", "paged_attn_cache_key", "paged_attn_cycles",
     "reset_cache", "resolve_attn_schedule", "resolve_conv_schedule",
-    "resolve_plan", "time_callable", "tune_attention", "tune_conv",
-    "tune_gemm", "tuned_plan_fn", "warm_conv_plans", "warm_model_plans",
+    "resolve_paged_attn_schedule", "resolve_plan", "time_callable",
+    "tune_attention", "tune_conv", "tune_gemm", "tune_paged_attention",
+    "tuned_plan_fn", "warm_conv_plans", "warm_model_plans",
 ]
 
 
@@ -53,7 +61,9 @@ def warm_model_plans(cfg: GemminiConfig, model_cfg, batch: int, seq: int, *,
                      dataflow: Optional[Dataflow] = None,
                      include_decode: bool = True,
                      include_attention: bool = True,
-                     n_shards: int = 1) -> Dict[str, int]:
+                     n_shards: int = 1,
+                     paged_slots: int = 0,
+                     paged_max_context: int = 0) -> Dict[str, int]:
     """Resolve (and, under ``tune_mode=full``, tune + persist) a schedule for
     every GEMM *and attention* shape a model will run, so serving never
     tunes on the request path.
@@ -68,8 +78,16 @@ def warm_model_plans(cfg: GemminiConfig, model_cfg, batch: int, seq: int, *,
     their un-biased twins, so warming without the flag would populate
     entries the request path never hits.
 
-    Returns {shapes, gemm_shapes, attn_shapes, cache_hits, cache_misses}
-    for the warm pass.
+    ``paged_slots``/``paged_max_context``: when set (the continuous-batching
+    serving engine), additionally resolve the paged-attention page size at
+    the engine's decode batch -- the shape the paged pools are sized with
+    at startup. One entry, window=None: the engine runs ONE page size for
+    every layer, so it resolves the global-window (worst-case) key, and
+    warming per-layer-window entries would populate fingerprints the
+    engine never consults (the PR-2 warm-path has_bias bug, as a class).
+
+    Returns {shapes, gemm_shapes, attn_shapes, paged_shapes, cache_hits,
+    cache_misses} for the warm pass.
     """
     from repro.models.transformer import (model_attention_shapes,
                                           model_gemm_shapes)
@@ -86,8 +104,18 @@ def warm_model_plans(cfg: GemminiConfig, model_cfg, batch: int, seq: int, *,
         for (b, tq, tk, h, kvh, d, causal, window) in ashapes:
             resolve_attn_schedule(cfg, b, tq, tk, h, kvh, d, causal=causal,
                                   window=window, dtype=model_cfg.dtype)
-    return {"shapes": len(gshapes) + len(ashapes),
+    pshapes: List[Tuple] = []
+    if paged_slots and paged_max_context and model_cfg.has_attn:
+        pshapes.append((paged_slots, model_cfg.n_heads,
+                        model_cfg.n_kv_heads, model_cfg.head_dim,
+                        paged_max_context, None))
+        for (b, h, kvh, d, ctx, window) in pshapes:
+            resolve_paged_attn_schedule(cfg, b, h, kvh, d, ctx,
+                                        window=window,
+                                        dtype=model_cfg.dtype)
+    return {"shapes": len(gshapes) + len(ashapes) + len(pshapes),
             "gemm_shapes": len(gshapes), "attn_shapes": len(ashapes),
+            "paged_shapes": len(pshapes),
             "cache_hits": cache.hits - h0,
             "cache_misses": cache.misses - m0}
 

@@ -88,8 +88,9 @@ def measure_attn_schedule(cfg: GemminiConfig, sched, b: int, tq: int,
     the CPU proxy times the XLA blockwise path on operands padded to the
     candidate's block grid (the padding waste a bad blocking costs).
     """
+    from repro.tune.schedules import schedule_dtype
     backend = backend or measurement_backend()
-    dt = jnp.dtype(dtype)
+    dt = schedule_dtype(dtype)
     eff = sched.effective(tq, tk)
     bq, bk = eff.block_q, eff.block_k
 
@@ -115,6 +116,43 @@ def measure_attn_schedule(cfg: GemminiConfig, sched, b: int, tq: int,
                                            window=window, block_k=bk)
 
     return time_callable(jax.jit(run), q, k, v, iters=iters, warmup=warmup)
+
+
+def measure_paged_schedule(cfg: GemminiConfig, sched, b: int, h: int,
+                           kvh: int, d: int, max_context: int, *,
+                           window: Optional[int] = None, dtype="bf16",
+                           backend: Optional[str] = None, iters: int = 3,
+                           warmup: int = 1) -> Dict[str, float]:
+    """Wall-time one page-size candidate for the paged decode kernel.
+
+    Both backends build a pool sized for a full decode batch (every slot at
+    ``max_context``, sequentially-allocated tables -- the layout cost of
+    fragmentation is the allocator's concern, not the kernel's). Pallas
+    runs the in-kernel-gather kernel; the CPU proxy times the explicit
+    XLA gather path, which DOES see the page size (its gather/reshape
+    granularity), so candidates genuinely measure differently even on CI.
+    """
+    from repro.kernels import ops
+    from repro.tune.schedules import schedule_dtype
+
+    backend = backend or measurement_backend()
+    dt = schedule_dtype(dtype)
+    page = sched.effective(max_context).page_size
+    mp = -(-max_context // page)
+    n_pages = b * mp
+    q = jnp.zeros((b, 1, h, d), dt)
+    k_pool = jnp.zeros((kvh, n_pages + 1, page, d), dt)
+    v_pool = jnp.zeros((kvh, n_pages + 1, page, d), dt)
+    tables = jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
+    lengths = jnp.full((b,), max_context, jnp.int32)
+    op_backend = "pallas" if backend == "pallas" else "xla"
+
+    def run(q, k_pool, v_pool):
+        return ops.paged_attention(q, k_pool, v_pool, tables, lengths,
+                                   window=window, backend=op_backend)
+
+    return time_callable(jax.jit(run), q, k_pool, v_pool, iters=iters,
+                         warmup=warmup)
 
 
 def measure_conv_schedule(cfg: GemminiConfig, sched, n: int, h: int, w: int,

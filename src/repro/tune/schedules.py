@@ -36,15 +36,38 @@ from repro.tune import cache as tcache
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_K = 512
 DEFAULT_CO_TILE = 128
+DEFAULT_PAGE_SIZE = 64
 
 # Candidate block sizes before clamping against the problem (the kernels
 # clamp the same way: block = min(block, max(t, 8))).
 _ATTN_BLOCKS = (64, 128, 256, 512, 1024)
 _CO_TILES = (8, 16, 32, 64, 128, 256, 512)
+_PAGE_SIZES = (8, 16, 32, 64, 128, 256, 512)
+
+# Fixed per-grid-step cost (cycles) of the paged decode kernel: the block
+# table SMEM read + DMA issue latency a tiny page cannot amortize. Rough,
+# but it is what makes the page-size lattice non-degenerate on the analytic
+# tiebreak (pure bandwidth/MAC terms would always pick the smallest page).
+PAGE_STEP_CYCLES = 200.0
 
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def schedule_dtype(dtype):
+    """Normalize a schedule's streamed dtype: accepts the engine's short
+    names ("bf16", "fp32", ...) as well as anything numpy/jax understands,
+    so fingerprints and byte widths agree no matter which spelling the
+    caller used."""
+    import jax.numpy as jnp
+    if isinstance(dtype, str):
+        from repro.core import config as _config
+        try:
+            return jnp.dtype(_config.dtype_of(dtype))
+        except ValueError:
+            pass
+    return jnp.dtype(dtype)
 
 
 def _macs_per_cycle(cfg: GemminiConfig) -> float:
@@ -167,19 +190,137 @@ def attn_cache_key(cfg: GemminiConfig, b: int, tq: int, tk: int, h: int,
     streamed dtype (q/k/v storage width; softcap is elementwise and
     schedule-neutral, so it is excluded).
     """
-    import jax.numpy as jnp
     payload = {
         "b": int(b), "tq": int(tq), "tk": int(tk),
         "h": int(h), "kvh": int(kvh), "d": int(d),
         "causal": bool(causal),
         "win": int(window) if window else 0,
-        "dtype": jnp.dtype(dtype).name,
+        "dtype": schedule_dtype(dtype).name,
     }
     # Attention consults only the VMEM budgets / dim / pipelining: the
     # engine's GEMM dtypes and tile caps must not discriminate, or a warm
     # pass under a quantized engine config would key entries a bf16-default
     # request path never hits.
     return tcache.kernel_fingerprint("attn", cfg, payload,
+                                     engine_dtypes=False, tile_caps=False)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (serving decode)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PagedAttnSchedule:
+    """Paged-decode blocking: the KV page size (tokens per cache block).
+
+    Unlike the other schedule spaces this one is *allocation-coupled*: the
+    page size is baked into the serving engine's pool shapes at startup
+    (``serving.PagedKVAllocator``), and the kernel streams exactly one page
+    per grid step. The lattice therefore trades kernel efficiency (bigger
+    pages amortize the per-step table-read/DMA overhead) against allocator
+    efficiency (bigger pages waste ~page/2 tokens of HBM per request to
+    internal fragmentation, shrinking the number of co-resident requests).
+    """
+
+    page_size: int
+
+    def effective(self, max_context: int) -> "PagedAttnSchedule":
+        return PagedAttnSchedule(max(8, min(self.page_size, max_context)))
+
+
+def default_paged_schedule() -> PagedAttnSchedule:
+    return PagedAttnSchedule(DEFAULT_PAGE_SIZE)
+
+
+def _paged_fits(cfg: GemminiConfig, page: int, rep: int, d: int,
+                in_bytes: int) -> bool:
+    # Streamed per page step: one K and one V page (double-buffered).
+    streamed = cfg.pipeline_depth * 2 * page * d * in_bytes
+    # Resident across the stream: the (rep, D) query rows + f32 accumulator
+    # + (m, l) state, as kernels/attention._paged_decode_kernel holds them.
+    resident = rep * d * (in_bytes + 4) + 2 * rep * 4
+    return (streamed <= cfg.scratchpad_bytes
+            and resident <= cfg.accumulator_bytes)
+
+
+def paged_attn_cycles(sched: PagedAttnSchedule, cfg: GemminiConfig, b: int,
+                      h: int, kvh: int, d: int, max_context: int, *,
+                      window: Optional[int], in_bytes: int,
+                      mean_len: Optional[int] = None,
+                      sys: Optional[isa.SystemParams] = None) -> float:
+    """Deterministic decode-step cost as the paged kernel runs it, at a
+    representative request length (``mean_len``, default max_context/2).
+
+    Live pages per request follow ``attention.block_live`` with block_q=1:
+    ceil(len/page) minus the pages a sliding window lets the kernel skip.
+    The fragmentation penalty models the allocator side: the last page of
+    every request is half-wasted on average, which at a fixed HBM budget
+    evicts-or-queues proportionally more co-resident requests, so it is
+    charged as extra amortized traffic.
+    """
+    sys = sys or isa.ROCKET
+    eff = sched.effective(max_context)
+    page = eff.page_size
+    rep = h // kvh
+    ln = mean_len if mean_len is not None else max(1, max_context // 2)
+    pos = ln - 1
+    j_hi = pos // page
+    j_lo = 0
+    if window is not None:
+        # smallest j with j*page + page - 1 > pos - window (block_live's
+        # window term at block_q = 1)
+        j_lo = max(0, -(-(pos - window - page + 2) // page))
+    live = max(1, j_hi - j_lo + 1)
+    # Two MXU contractions per live page: Q@K^T and P@V on (rep, page, d).
+    macs = 2 * b * kvh * live * rep * page * d
+    loads = b * kvh * live * 2 * page * d * in_bytes
+    # Internal fragmentation: ~page/2 dead tokens resident per request,
+    # charged at the K+V byte cost they occupy in the budget.
+    frag = b * kvh * (page / 2) * 2 * d * in_bytes
+    bw = sys.effective_bw(cfg.dim)
+    compute = max(macs / _macs_per_cycle(cfg), (loads + frag) / bw)
+    return compute + b * kvh * live * PAGE_STEP_CYCLES
+
+
+def enumerate_paged_schedules(cfg: GemminiConfig, b: int, h: int, kvh: int,
+                              d: int, max_context: int, *,
+                              window: Optional[int] = None,
+                              in_bytes: int = 2,
+                              max_candidates: int = 8
+                              ) -> List[PagedAttnSchedule]:
+    """Legal page-size lattice, analytic-cost ordered; the clamped static
+    default always survives (the GEMM solver's minimal-tile guarantee)."""
+    rep = h // kvh
+    default = default_paged_schedule().effective(max_context)
+    scheds = {default}
+    for p in _PAGE_SIZES:
+        s = PagedAttnSchedule(p).effective(max_context)
+        if _paged_fits(cfg, s.page_size, rep, d, in_bytes):
+            scheds.add(s)
+    ordered = sorted(
+        scheds,
+        key=lambda s: (paged_attn_cycles(s, cfg, b, h, kvh, d, max_context,
+                                         window=window, in_bytes=in_bytes),
+                       -s.page_size))
+    ordered = ordered[:max_candidates]
+    if default not in ordered:
+        ordered[-1] = default
+    return ordered
+
+
+def paged_attn_cache_key(cfg: GemminiConfig, b: int, h: int, kvh: int,
+                         d: int, max_context: int, *,
+                         window: Optional[int], dtype) -> str:
+    """Stable fingerprint for a paged-schedule lookup. Like the dense
+    attention key: only the VMEM budgets / dim / pipelining discriminate
+    on the config side (the kernel streams the model dtype regardless of
+    the engine's GEMM datapath)."""
+    payload = {
+        "b": int(b), "h": int(h), "kvh": int(kvh), "d": int(d),
+        "ctx": int(max_context),
+        "win": int(window) if window else 0,
+        "dtype": schedule_dtype(dtype).name,
+    }
+    return tcache.kernel_fingerprint("paged_attn", cfg, payload,
                                      engine_dtypes=False, tile_caps=False)
 
 

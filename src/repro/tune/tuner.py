@@ -39,7 +39,7 @@ from repro.core.config import Dataflow, GemminiConfig, bytes_of
 from repro.core.tiling import TilePlan, enumerate_plans, plan_gemm
 from repro.tune import measure, schedules
 from repro.tune.cache import PlanCache, get_cache
-from repro.tune.schedules import AttnSchedule, ConvSchedule
+from repro.tune.schedules import AttnSchedule, ConvSchedule, PagedAttnSchedule
 
 # Measured times within 5% of the best are a tie -> analytic model decides.
 TIE_BAND = 0.05
@@ -245,9 +245,8 @@ def tune_attention(cfg: GemminiConfig, b: int, tq: int, tk: int, h: int,
                    cache: Optional[PlanCache] = None,
                    persist: bool = True) -> SchedReport:
     """Measure the (block_q, block_k) lattice and persist the winner."""
-    import jax.numpy as jnp
     backend = backend or measure.measurement_backend()
-    in_bytes = jnp.dtype(dtype).itemsize
+    in_bytes = schedules.schedule_dtype(dtype).itemsize
     default = schedules.default_attn_schedule().effective(tq, tk)
     cands = schedules.enumerate_attn_schedules(
         cfg, b, h, kvh, tq, tk, d, causal=causal, window=window,
@@ -311,6 +310,74 @@ def resolve_attn_schedule(cfg: GemminiConfig, b: int, tq: int, tk: int,
         return schedules.default_attn_schedule()
     return tune_attention(cfg, b, tq, tk, h, kvh, d, causal=causal,
                           window=window, dtype=dtype).sched
+
+
+def tune_paged_attention(cfg: GemminiConfig, b: int, h: int, kvh: int,
+                         d: int, max_context: int, *,
+                         window: Optional[int] = None, dtype="bf16",
+                         backend: Optional[str] = None, iters: int = 3,
+                         max_candidates: int = 8,
+                         cache: Optional[PlanCache] = None,
+                         persist: bool = True) -> SchedReport:
+    """Measure the page-size lattice for the paged decode kernel and
+    persist the winner. Measured at a full-context decode batch (the
+    worst-case step the engine must sustain); the analytic tiebreak
+    (``schedules.paged_attn_cycles``) additionally prices the allocator's
+    internal-fragmentation cost, which wall time alone cannot see."""
+    backend = backend or measure.measurement_backend()
+    in_bytes = schedules.schedule_dtype(dtype).itemsize
+    default = schedules.default_paged_schedule().effective(max_context)
+    cands = schedules.enumerate_paged_schedules(
+        cfg, b, h, kvh, d, max_context, window=window, in_bytes=in_bytes,
+        max_candidates=max_candidates)
+
+    results: List[SchedResult] = []
+    for s in cands:
+        eff = s.effective(max_context)
+        t = measure.measure_paged_schedule(
+            cfg, s, b, h, kvh, d, max_context, window=window, dtype=dtype,
+            backend=backend, iters=iters)
+        results.append(SchedResult(
+            sched=eff, min_us=t["min_us"], mean_us=t["mean_us"],
+            cycles=schedules.paged_attn_cycles(s, cfg, b, h, kvh, d,
+                                               max_context, window=window,
+                                               in_bytes=in_bytes),
+            is_default=(eff == default)))
+    default_result = next(r for r in results if r.is_default)
+    winner = _tie_pick(results, _sched_tie_key)
+
+    cache = cache or get_cache()
+    key = schedules.paged_attn_cache_key(cfg, b, h, kvh, d, max_context,
+                                         window=window, dtype=dtype)
+    key = cache.store_schedule(
+        key, {"page_size": winner.sched.page_size},
+        source="measured" if backend == "pallas" else "proxy+analytic",
+        best_us=winner.min_us, greedy_us=default_result.min_us,
+        n_candidates=len(results), persist=persist)
+    return SchedReport(sched=winner.sched, candidates=tuple(results),
+                       default=default_result, backend=backend,
+                       cache_key=key)
+
+
+def resolve_paged_attn_schedule(cfg: GemminiConfig, b: int, h: int, kvh: int,
+                                d: int, max_context: int, *,
+                                window: Optional[int] = None,
+                                dtype="bf16") -> PagedAttnSchedule:
+    """The page size the serving engine should size its pools with now,
+    honoring ``tune_mode``. Called once at engine startup (the page size is
+    baked into the pool allocation), never on the request path."""
+    mode = _check_mode()
+    if mode == "off":
+        return schedules.default_paged_schedule().effective(max_context)
+    key = schedules.paged_attn_cache_key(cfg, b, h, kvh, d, max_context,
+                                         window=window, dtype=dtype)
+    params = get_cache().lookup_schedule(key, ("page_size",))
+    if params is not None:
+        return PagedAttnSchedule(params["page_size"])
+    if mode == "cached":
+        return schedules.default_paged_schedule().effective(max_context)
+    return tune_paged_attention(cfg, b, h, kvh, d, max_context,
+                                window=window, dtype=dtype).sched
 
 
 def tune_conv(cfg: GemminiConfig, n: int, h: int, w: int, ci: int, co: int,

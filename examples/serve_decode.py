@@ -3,14 +3,22 @@
   PYTHONPATH=src python examples/serve_decode.py
 
 Drives the real serving stack (repro.serving.ServingEngine: paged KV
-cache + continuous batching) for one arch of each family -- dense
-attention, SSM (recurrent state cache), hybrid (both), and multi-codebook
-audio -- and then *gates on correctness*: every request's greedy token
-stream is re-derived through the static reference path
-(prefill_into_cache + decode_step, one request at a time, dense KV cache)
-and the process EXITS NON-ZERO on any mismatch. Per-request numerics are
-batch-invariant and the paged gather mirrors the dense mask/softmax
-exactly, so the comparison is exact equality, not a tolerance.
+cache + continuous batching + chunked prefill) for one arch of each
+family -- dense attention, SSM (recurrent state cache), hybrid (both),
+and multi-codebook audio -- and then *gates on correctness*: every
+request's greedy token stream is re-derived through the static reference
+path (prefill_into_cache + decode_step, one request at a time, dense KV
+cache) and the process EXITS NON-ZERO on any mismatch. Per-request
+numerics are batch-invariant and the paged gather mirrors the dense
+mask/softmax exactly, so the comparison is exact equality, not a
+tolerance.
+
+Chunked prefill is ON (``PREFILL_CHUNK`` cache positions per chunk, sized
+so two of the three prompts split into multiple chunks): the comparison
+therefore also locks in that splitting a prompt across chunk calls --
+self-attention for chunk 0, block-table gather against cache + chunk for
+continuations, resumed conv/SSM state for the recurrent families --
+reproduces the single-pass token stream.
 """
 
 import sys
@@ -27,6 +35,7 @@ from repro.serving import ServingEngine
 ARCHS = ["gemma2-2b", "mamba2-1.3b", "hymba-1.5b", "musicgen-medium"]
 PROMPT_LENS = [11, 16, 7]          # mixed lengths: distinct page counts
 GEN_LENS = [6, 3, 5]               # mixed depths: slots recycle mid-run
+PREFILL_CHUNK = 8                  # < the longer prompts: multi-chunk paths
 
 
 def reference_tokens(model_cfg, params, prompt: np.ndarray,
@@ -59,7 +68,8 @@ def run_arch(arch: str) -> bool:
     # tolerance-close, not bit-identical, in bf16).
     engine = ServingEngine(model_cfg, max_slots=2, max_context=64,
                            page_size=16, n_pages=24, temperature=0.0,
-                           seed=0, backend="xla")
+                           seed=0, backend="xla",
+                           prefill_chunk=PREFILL_CHUNK)
     prompts = []
     for plen, glen in zip(PROMPT_LENS, GEN_LENS):
         shape = (plen, model_cfg.n_codebooks) \
@@ -71,7 +81,9 @@ def run_arch(arch: str) -> bool:
     s = report["summary"]
     print(f"  engine: {int(s['requests'])} reqs, "
           f"{int(s['new_tokens'])} tokens, {s['tokens_per_s']:.1f} tok/s, "
-          f"p50 latency {s['p50_latency_s']*1e3:.0f}ms")
+          f"p50 latency {s['p50_latency_s']*1e3:.0f}ms, "
+          f"{int(s['prefill_chunks'])} prefill chunks "
+          f"(chunk={engine.prefill_chunk})")
 
     ok = True
     for r, prompt, glen in zip(report["requests"], prompts, GEN_LENS):

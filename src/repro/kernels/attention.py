@@ -420,3 +420,142 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
         interpret=interpret,
     )(bt, lens, qg, k_pool, v_pool)
     return out.reshape(b, 1, h, d)
+
+
+# ---------------------------------------------------------------------------
+# paged-attention chunked-prefill kernel: a fresh chunk of queries vs
+# cache pages + itself, gathered via the request's block table
+# ---------------------------------------------------------------------------
+def _paged_prefill_kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_ref, l_ref, acc_ref, *, mp: int, page: int,
+                          block_q: int, tq: int, window: Optional[int],
+                          softcap: Optional[float], scale: float):
+    i = pl.program_id(1)                 # q block within the chunk
+    j = pl.program_id(2)                 # logical page index within the seq
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[0]                 # chunk's first logical position
+    q0 = start + i * block_q
+    k0 = j * page
+    # Shared whole-block predicate: the frontier (start + tq, the chunk's
+    # own KV was scattered before this call) plays the tk padding role, so
+    # never-written logical pages do no MXU work; causal + window terms
+    # skip exactly as in the prefill kernel.
+    live = block_live(k0, q0, block_q=block_q, block_k=page, tk=start + tq,
+                      causal=True, window=window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale           # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (page, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, page), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, page), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == mp - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                            start: jnp.ndarray, *,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            block_q: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Chunked-prefill attention against a *paged* KV cache.
+
+    q: (1, T, H, D), one request's fresh chunk of queries at logical
+    positions [start, start + T); k_pool/v_pool: (KVH, NP, page, D) shared
+    page pools, with the chunk's own KV already scattered in (write first,
+    then attend); block_table: (MP,) int32 page ids for THIS request;
+    start: scalar int32 (traced -- one compile serves every chunk offset).
+
+    The block-table gather of ``paged_decode_attention`` extended to a
+    whole query tile: grid (H, nq, MP) with the page axis innermost, each
+    step's K/V BlockSpec index map reading the scalar-prefetched table to
+    DMA one pool page into VMEM. Dead logical pages (beyond what q block i
+    can see under the causal frontier) clamp their index map to the last
+    visible page so Mosaic's block-revisiting elides the copy, and the
+    shared ``block_live`` predicate skips their compute -- a chunk at
+    position s does O(s + T) page work, not O(MP).
+    """
+    b, tq, h, d = q.shape
+    assert b == 1, "chunked prefill is per-request (one slot per call)"
+    kvh, npool, page, _ = k_pool.shape
+    mp = block_table.shape[0]
+    rep = h // kvh
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(tq, 8))
+    nq = -(-tq // block_q)
+    pad_q = nq * block_q - tq
+    qt = jnp.moveaxis(q[0], 1, 0)                          # (H, T, D)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, pad_q), (0, 0)))
+    bt = block_table.reshape(-1).astype(jnp.int32)
+    start_arr = jnp.asarray(start, jnp.int32).reshape((1,))
+
+    def _page_index(hh, i, j, bt_ref, start_ref):
+        # Clamp dead j to the last page visible from q block i (or the
+        # chunk frontier, whichever is nearer): same block index -> Mosaic
+        # elides the DMA, and the table is never read out of range.
+        qmax = start_ref[0] + (i + 1) * block_q - 1
+        jmax = jnp.minimum(qmax, start_ref[0] + tq - 1) // page
+        return (hh // rep, bt_ref[jnp.minimum(j, jmax)], 0, 0)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, mp=mp, page=page, block_q=block_q, tq=tq,
+        window=window, softcap=softcap, scale=sc)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(h, nq, mp),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d),
+                         lambda hh, i, j, bt_ref, start_ref: (hh, i, 0)),
+            pl.BlockSpec((1, 1, page, d), _page_index),
+            pl.BlockSpec((1, 1, page, d), _page_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, d),
+            lambda hh, i, j, bt_ref, start_ref: (hh, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((h, nq * block_q, d), q.dtype),
+        compiler_params=kernels_pkg.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, start_arr, qt, k_pool, v_pool)
+    return jnp.moveaxis(out[:, :tq], 0, 1)[None]           # (1, T, H, D)

@@ -64,6 +64,22 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
     """C = act(round_shift(A @ B + D)) on the elaborated instance.
 
     a: (M, K), b: (K, N), d: broadcastable (1|M, N) bias at acc dtype.
+
+    backend x GEMMINI_TUNE matrix (``plan`` given short-circuits both):
+
+    ==========  ===========================================================
+    backend     tune_mode=off            tune_mode=cached / full
+    ==========  ===========================================================
+    xla         ``ref.gemm_ref``: plain XLA dot with the fused
+                accumulate/shift/saturate/activation epilogue. Plan-free
+                (no tiling), so the tune flag never enters -- this is the
+                SPMD-partitionable reference the dry-run lowers.
+    pallas /    greedy analytic            persistent plan cache keyed by
+    interpret   ``plan_gemm`` solve,       the GEMM fingerprint; ``full``
+                no tuner import on         measures and populates misses,
+                the hot path               ``cached`` degrades misses to
+                                           the analytic solve
+    ==========  ===========================================================
     """
     m, k = a.shape
     k2, n = b.shape
@@ -89,7 +105,9 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
 
 def matmul(a: jnp.ndarray, b: jnp.ndarray, *, cfg: GemminiConfig,
            backend: Backend = "xla", **kw) -> jnp.ndarray:
-    """Batched-LHS matmul: a may be (..., K); collapsed to 2D for the engine."""
+    """Batched-LHS matmul: a may be (..., K); collapsed to 2D for the
+    engine. Pure shape sugar over :func:`gemm` -- backend and tune-flag
+    behavior are exactly gemm's matrix with M = prod(leading dims)."""
     lead = a.shape[:-1]
     y = gemm(a.reshape(-1, a.shape[-1]), b, cfg=cfg, backend=backend, **kw)
     return y.reshape(*lead, b.shape[-1])
@@ -216,7 +234,24 @@ def flash_attention(q, k, v, *, causal: bool = True,
     ``None`` resolves the schedule through the flag-gated tuner (static
     512/512 defaults under ``GEMMINI_TUNE=off``). ``cfg`` supplies the VMEM
     budgets for schedule legality/fingerprinting (a bf16 engine default is
-    used when omitted). The xla backend is schedule-free and ignores both.
+    used when omitted).
+
+    backend x GEMMINI_TUNE matrix:
+
+    ==========  ===========================================================
+    xla         ``blockwise_attention_xla``: online-softmax scan over
+                1024-key blocks (clamped to a 128-multiple of Tk), exact
+                oracle numerics, differentiable (the train path), ignores
+                block_q/block_k/cfg and the tune flag entirely.
+    pallas /    off: static 512/512        cached/full: ``AttnSchedule``
+    interpret   blocks                     (block_q, block_k) from the
+                                           schema-v2 plan cache, measured
+                                           under ``full``
+    ==========  ===========================================================
+
+    A *traced* window (gemma-style mixed local:global layers scanned as
+    data) cannot parameterize a Mosaic kernel; callers route those to xla
+    (see ``models.attention._route_window``).
     """
     if backend == "xla":
         from repro.models.attention import blockwise_attention_xla
@@ -246,9 +281,21 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
     The *page size* is the tuned schedule here -- it is baked into the pool
     shape when the serving engine sizes its cache arena through
     ``repro.tune.resolve_paged_attn_schedule``, not resolved per call (a
-    pool cannot be re-blocked mid-flight). The xla backend gathers pages
-    explicitly (SPMD-friendly reference); pallas/interpret gather inside
-    the kernel via scalar-prefetched block tables.
+    pool cannot be re-blocked mid-flight).
+
+    backend matrix (``gqa_grouped_decode`` flag applies to xla only):
+
+    ==========  ===========================================================
+    xla         ``paged_decode_attention_xla``: explicit block-table
+                gather, bit-identical to the dense ``decode_attention``
+                under either ``gqa_grouped_decode`` setting (the engine's
+                exact-match contract); SPMD-partitionable.
+    pallas /    ``kernels/attention.paged_decode_attention``: block tables
+    interpret   scalar-prefetched to SMEM, one pool page DMA'd per grid
+                step via the BlockSpec index map; dead pages clamp-elided
+                and compute-skipped (``block_live``). The grouped-decode
+                flag does not apply (the kernel is already grouped).
+    ==========  ===========================================================
     """
     if backend == "xla":
         from repro.models.attention import (PagedKVCache,
@@ -263,10 +310,65 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
         softcap=softcap, scale=scale, interpret=(backend == "interpret"))
 
 
+def paged_prefill_attention(q, k_pool, v_pool, block_table, start, *,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            backend: Backend = "xla"):
+    """Chunked-prefill attention over a paged KV cache: one request's fresh
+    chunk of queries (q: (1, T, H, D), logical positions [start, start+T))
+    attends cache pages + the chunk itself, all through the request's block
+    table (``block_table``: (MP,) int32). The chunk's own KV must already
+    be scattered into the pools (write first, then attend -- the decode
+    discipline); ``start`` may be a traced scalar, so one compile bucket
+    serves every chunk offset of a given chunk length.
+
+    backend matrix (no tunable flags enter here; the page size was baked
+    into the pool shape at engine startup, see :func:`paged_attention`):
+
+    ==========  ===========================================================
+    xla         explicit gather + ``blockwise_attention_xla`` with the same
+                KV blocking anchored at position 0 as the single-pass
+                prefill path -- bit-identical to the whole-prompt pass for
+                the overlapping rows (the serve_decode exact-match gate
+                with chunking enabled relies on this).
+    pallas /    ``kernels/attention.paged_prefill_attention``: block table
+    interpret   scalar-prefetched to SMEM, grid (H, nq, pages), one pool
+                page DMA'd per step via the BlockSpec index map; dead pages
+                beyond the causal frontier are clamp-elided and skipped.
+    ==========  ===========================================================
+    """
+    if backend == "xla":
+        from repro.models.attention import (PagedKVCache,
+                                            paged_prefill_attention_xla)
+        cache = PagedKVCache(k_pool, v_pool, block_table[None],
+                             jnp.zeros((1,), jnp.int32), k_pool.shape[2])
+        return paged_prefill_attention_xla(q, cache, start, window=window,
+                                           softcap=softcap, scale=scale)
+    from repro.kernels import attention as attn_kernel
+    return attn_kernel.paged_prefill_attention(
+        q, k_pool, v_pool, block_table, start, window=window,
+        softcap=softcap, scale=scale, interpret=(backend == "interpret"))
+
+
 # -- mamba2 ssd ---------------------------------------------------------------
 def ssd(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
         backend: Backend = "xla"):
-    """Mamba-2 SSD mixer. See kernels/mamba2.py for the chunked TPU kernel."""
+    """Mamba-2 SSD mixer. See kernels/mamba2.py for the chunked TPU kernel.
+
+    backend matrix (no tunable flags; ``chunk`` is the SSD decomposition
+    granularity, a model hyperparameter rather than a tuned schedule):
+
+    ==========  ===========================================================
+    xla         ``models.ssm.ssd_chunked_xla``: intra-chunk einsums + the
+                inter-chunk ``lax.scan``; the oracle structure and the
+                serving/training reference (supports resumable
+                ``initial_state`` for chunked prefill).
+    pallas /    ``kernels/mamba2.ssd``: the same decomposition with the
+    interpret   intra-chunk GEMMs lowered as Pallas kernels; fusion of the
+                chunk-scan epilogue is an open ROADMAP item.
+    ==========  ===========================================================
+    """
     if backend == "xla":
         from repro.models.ssm import ssd_chunked_xla
         return ssd_chunked_xla(x, dt, a_log, b, c, d_skip=d_skip, chunk=chunk)

@@ -26,17 +26,22 @@ from repro.serving import ServingEngine
 def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
           temperature: float = 1.0, seed: int = 0, eos_id: int = -1,
           policy: str = "continuous", max_slots: int = 0,
-          page_size: int = 0):
+          page_size: int = 0, prefill_chunk: int = 0):
     """Serve ``batch`` random-prompt requests; returns the old static-loop
     schema (tokens (B, gen[, n_q]), t_prefill, t_decode, tok_per_s) plus
-    the engine's full telemetry under ``report``."""
+    the engine's full telemetry under ``report``.
+
+    ``prefill_chunk``: chunked-prefill granularity in cache positions --
+    0 = one page (the default: page-multiple chunks keep chunk boundaries
+    page-aligned), negative = disabled (single-pass prefill)."""
     rng = np.random.default_rng(seed)
     max_slots = max_slots or min(batch, 8)
     max_context = prompt_len + model_cfg.n_meta_tokens + gen_len + 64
     engine = ServingEngine(
         model_cfg, max_slots=max_slots, max_context=max_context,
         page_size=page_size or None, seed=seed, temperature=temperature,
-        policy=policy, warm_prompt_lens=[prompt_len])
+        policy=policy, warm_prompt_lens=[prompt_len],
+        prefill_chunk=None if prefill_chunk < 0 else prefill_chunk)
     if engine.warm_stats is not None:
         from repro import tune
         s = engine.warm_stats
@@ -87,6 +92,11 @@ def main(argv=None):
                     help="decode slots (default: min(batch, 8))")
     ap.add_argument("--page-size", type=int, default=0,
                     help="KV page size (default: tuned or 64)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked-prefill granularity in tokens (cache "
+                         "positions per chunk, interleaved with decode "
+                         "steps). Default 0 = one page; negative disables "
+                         "chunking (single-pass prefill)")
     ap.add_argument("--tune", choices=flags.TUNE_MODES, default=None,
                     help="tile-plan autotuning mode (default: $GEMMINI_TUNE)")
     args = ap.parse_args(argv)
@@ -98,13 +108,16 @@ def main(argv=None):
     out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen, temperature=args.temperature,
                 policy=args.policy, max_slots=args.slots,
-                page_size=args.page_size)
+                page_size=args.page_size, prefill_chunk=args.prefill_chunk)
     s = out["report"]["summary"]
     print(f"[serve] {args.policy}: {int(s['requests'])} reqs, "
           f"{int(s['new_tokens'])} tokens in {s['wall_s']*1e3:.0f}ms "
           f"({out['tok_per_s']:.1f} tok/s), "
           f"p50 latency {s['p50_latency_s']*1e3:.0f}ms, "
           f"p99 {s['p99_latency_s']*1e3:.0f}ms, "
+          f"ITL p50 {s['p50_itl_s']*1e3:.0f}ms / p95 "
+          f"{s['p95_itl_s']*1e3:.0f}ms, "
+          f"{int(s['prefill_chunks'])} prefill chunks, "
           f"preemptions {int(s['preemptions'])}, "
           f"out shape {out['tokens'].shape}")
     return out

@@ -64,16 +64,33 @@ def blockwise_attention_xla(q, k, v, *, causal: bool = True,
                             window: Optional[int] = None,
                             softcap: Optional[float] = None,
                             scale: Optional[float] = None,
-                            block_k: int = 1024) -> jnp.ndarray:
+                            block_k: int = 1024,
+                            q_offset=None,
+                            kv_len=None) -> jnp.ndarray:
     """Online-softmax attention, scanning over KV blocks.
 
     q: (B, Tq, H, D), k/v: (B, Tk, KVH, D). Memory is O(Tq * block_k).
+
+    ``q_offset``: global position of query row 0 (may be traced). The
+    default right-aligns queries against the keys (``Tk - Tq``), which is
+    the train/prefill/cache-backed case; chunked prefill passes the chunk's
+    start position explicitly. ``kv_len``: number of live keys (may be
+    traced); defaults to ``Tk``. Keys at positions >= ``kv_len`` are
+    masked, which makes over-allocated gather buffers (paged tables) safe.
     """
     b, tq, h, d = q.shape
     _, tk, kvh, _ = k.shape
     rep = h // kvh
     sc = scale if scale is not None else 1.0 / math.sqrt(d)
 
+    # Clamp the KV block to a 128-multiple of the actual key length:
+    # serving-scale contexts (tens to hundreds of keys) would otherwise
+    # zero-pad to a full 1024-key block and burn >2x the scores/PV FLOPs
+    # on provably-dead keys. Chunked-vs-single-pass bit-exactness is
+    # preserved whenever both paths round to the same padded length
+    # (equal-length blocks run the identical op sequence; trailing dead
+    # keys are exact no-ops under the online-softmax update).
+    block_k = min(block_k, -(-max(tk, 1) // 128) * 128)
     nb = -(-tk // block_k)
     pad = nb * block_k - tk
     if pad:
@@ -83,7 +100,11 @@ def blockwise_attention_xla(q, k, v, *, causal: bool = True,
     vb = v.reshape(b, nb, block_k, kvh, d)
 
     qf = q.astype(jnp.float32) * sc
-    qpos = jnp.arange(tq) + (tk - tq)                      # global positions
+    if q_offset is None:
+        q_offset = tk - tq                                 # right-aligned
+    if kv_len is None:
+        kv_len = tk
+    qpos = jnp.arange(tq) + q_offset                       # global positions
 
     def body(carry, inp):
         m, l, acc = carry                                  # (B,H,Tq) ,, (B,H,Tq,D)
@@ -94,7 +115,7 @@ def blockwise_attention_xla(q, k, v, *, causal: bool = True,
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kh.astype(jnp.float32))
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
-        mask = kpos[None, :] <= tk - 1                     # in-bounds (padding)
+        mask = kpos[None, :] <= kv_len - 1                 # in-bounds (padding)
         if causal:
             mask = mask & (kpos[None, :] <= qpos[:, None])
         if window is not None:
@@ -262,18 +283,20 @@ def paged_update_decode(cache: PagedKVCache, k_new, v_new,
 
 
 def paged_update_prefill(cache: PagedKVCache, k_new, v_new,
-                         pages: jnp.ndarray) -> PagedKVCache:
-    """Scatter a fresh prompt's KV into the pages allocated for it.
+                         pages: jnp.ndarray, start=0) -> PagedKVCache:
+    """Scatter a prompt (or prompt chunk) KV into the pages allocated for it.
 
     k_new/v_new: (1, T, KVH, D); ``pages``: (MP,) page ids covering logical
-    positions [0, T) (entries past ceil(T/page) unused). Positions past the
-    true prompt length are bucket padding -- they land in allocated pages
-    but decode's length mask keeps them dead forever, and the next decode
-    token overwrites the first of them.
+    positions [0, start + T) (entries past ceil((start+T)/page) unused);
+    ``start``: logical position of the chunk's first token (0 for a fresh
+    whole-prompt prefill; a traced scalar for chunked-prefill continuation
+    chunks). Positions past the true prompt length are bucket padding --
+    they land in allocated pages but decode's length mask keeps them dead
+    forever, and the next decode token overwrites the first of them.
     """
     page = cache.page
     t = k_new.shape[1]
-    pos = jnp.arange(t)
+    pos = start + jnp.arange(t)
     pidx = pages[pos // page]
     off = pos % page
     kt = jnp.moveaxis(k_new[0], 1, 0).astype(cache.k.dtype)      # (KVH, T, D)
@@ -344,6 +367,44 @@ def paged_decode_attention_xla(q, cache: PagedKVCache, *,
     return out.astype(q.dtype)
 
 
+def paged_prefill_attention_xla(q, cache: PagedKVCache, start, *,
+                                window: Optional[int] = None,
+                                softcap: Optional[float] = None,
+                                scale: Optional[float] = None) -> jnp.ndarray:
+    """Chunked-prefill attention over a paged cache, by explicit gather.
+
+    q: (1, T, H, D), the fresh chunk's queries at logical positions
+    [start, start + T); the chunk's own KV must already be scattered into
+    the pool (write first, then attend -- same discipline as decode).
+    ``start`` may be traced (one jit bucket serves every chunk offset).
+
+    Numerics mirror the single-pass prefill: the gathered pages are fed to
+    :func:`blockwise_attention_xla` with the same KV blocking anchored at
+    position 0, so every overlapping (qpos, kpos) pair runs the identical
+    online-softmax op sequence whenever both paths round to the same
+    padded KV width -- here Tk = table capacity (``MP * page``), in the
+    single-pass path Tk = the prompt bucket, and both clamp to a
+    128-multiple, so the widths coincide exactly when both round to the
+    same multiple (always at <=128-token context, the exact-match gate's
+    geometry; at larger geometries with short prompts the two paths can
+    pad to different widths and agree only up to float-reassociation
+    noise). Trailing gathered pages past the chunk frontier are dead under
+    the causal mask, exactly like the reference's pad_k region.
+    """
+    b, tq, h, d = q.shape
+    kvh, _, page, _ = cache.k.shape
+    mp = cache.tables.shape[1]
+    s_ctx = mp * page
+
+    def gather(pool):
+        g = pool[:, cache.tables]
+        return jnp.transpose(g, (1, 2, 3, 0, 4)).reshape(b, s_ctx, kvh, d)
+
+    return blockwise_attention_xla(
+        q, gather(cache.k), gather(cache.v), causal=True, window=window,
+        softcap=softcap, scale=scale, q_offset=start, kv_len=start + tq)
+
+
 # ---------------------------------------------------------------------------
 # routed attention op (the tuned-schedule entry)
 # ---------------------------------------------------------------------------
@@ -392,6 +453,22 @@ def paged_attn_op(engine: Optional[GemminiInstance], q,
     return ops.paged_attention(q, cache.k, cache.v, cache.tables,
                                cache.lengths, window=window, softcap=softcap,
                                scale=scale, backend=backend)
+
+
+def paged_prefill_attn_op(engine: Optional[GemminiInstance], q,
+                          cache: PagedKVCache, start, *, window=None,
+                          softcap: Optional[float] = None,
+                          scale: Optional[float] = None):
+    """Chunked-prefill twin of :func:`paged_attn_op`: the fresh chunk's
+    queries attend cache pages + the chunk itself through
+    ``ops.paged_prefill_attention`` (in-kernel gather on pallas/interpret
+    engines, explicit gather on xla); a traced per-layer window falls back
+    to the gather path, whose masking handles traced scalars."""
+    from repro.kernels import ops
+    window, backend = _route_window(engine, window)
+    return ops.paged_prefill_attention(
+        q, cache.k, cache.v, cache.tables[0], start, window=window,
+        softcap=softcap, scale=scale, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -27,10 +27,16 @@ Params = Dict[str, Any]
 # ---------------------------------------------------------------------------
 # chunked SSD (train / prefill)
 # ---------------------------------------------------------------------------
-def ssd_chunked_xla(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256):
+def ssd_chunked_xla(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
+                    initial_state=None):
     """x:(B,T,H,P) dt:(B,T,H) a_log:(H,) b,c:(B,T,G,N) -> y:(B,T,H,P).
 
     Returns the same result as kernels.ref.ssd_ref (naive recurrence).
+
+    ``initial_state``: (B, H, N, P) f32 recurrent state carried in from a
+    previous segment (chunked prefill resumes here); ``None`` starts from
+    zeros -- bit-identical to passing explicit zeros, since the carried
+    state only enters through the inter-chunk scan's h0.
     """
     bsz, t, h, p = x.shape
     _, _, g, n = b.shape
@@ -81,7 +87,8 @@ def ssd_chunked_xla(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256):
         h_next = h_prev * dec_c[:, :, None, None] + s_c
         return h_next, y_off
 
-    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32) \
+        if initial_state is None else initial_state.astype(jnp.float32)
     inp = (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
            jnp.moveaxis(cf, 1, 0), jnp.moveaxis(seg, 1, 0))
     _, y_off = jax.lax.scan(scan_fn, h0, inp)
@@ -182,11 +189,16 @@ def mamba2_apply(engine: GemminiInstance, p: Params, u: jnp.ndarray, *,
         y = y[:, None]                                           # (B,1,H,P)
         new_cache = SSMCache(new_conv, new_state)
     else:
+        init = cache.state if cache is not None else None
         y = ssd_chunked_xla(xh, dt, p["a_log"], bh, ch,
-                            d_skip=p["d_skip"], chunk=chunk)
+                            d_skip=p["d_skip"], chunk=chunk,
+                            initial_state=init)
         if cache is not None:
-            # prefill: recompute final state for subsequent decode
-            _, final_state = _final_state(xh, dt, p["a_log"], bh, ch)
+            # prefill: recompute final state for subsequent decode (or the
+            # next chunk -- chunked prefill resumes from cache.state, which
+            # a fresh request's caller zeroes)
+            _, final_state = _final_state(xh, dt, p["a_log"], bh, ch,
+                                          initial_state=init)
             new_cache = SSMCache(new_conv, final_state)
         else:
             new_cache = None
@@ -197,8 +209,13 @@ def mamba2_apply(engine: GemminiInstance, p: Params, u: jnp.ndarray, *,
     return layers.project(engine, y, p["out_proj"]), new_cache
 
 
-def _final_state(x, dt, a_log, b, c):
-    """Final SSM state after a full sequence (for prefill->decode handoff)."""
+def _final_state(x, dt, a_log, b, c, initial_state=None):
+    """Final SSM state after a sequence (for prefill->decode handoff).
+
+    ``initial_state``: state carried in from a previous segment; it decays
+    by the whole segment (``exp(seg[-1])``) and adds to the segment's own
+    contribution. ``None`` keeps the fresh-prefill result bit-identical
+    (the decayed-zeros term is an exact no-op)."""
     bsz, t, h, p = x.shape
     g = b.shape[2]
     hpg = h // g
@@ -210,4 +227,7 @@ def _final_state(x, dt, a_log, b, c):
     state = jnp.einsum("bth,bth,bthn,bthp->bhnp",
                        decay_to_end, dt.astype(jnp.float32), bh,
                        x.astype(jnp.float32))
+    if initial_state is not None:
+        state = state + initial_state.astype(jnp.float32) * \
+            jnp.exp(seg[:, -1, :])[:, :, None, None]
     return None, state

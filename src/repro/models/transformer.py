@@ -317,12 +317,16 @@ def _maybe_qknorm(cfg, bp, q, k):
 
 
 def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
-                 cache=None, cache_pos=None, window_static=None):
+                 cache=None, cache_pos=None, window_static=None,
+                 prefill_start=None):
     """window: traced scalar, 0 = global; window_static: the same value as
     a python int when the model is window-uniform (None = unavailable, use
     the traced scalar). Returns (out, new_cache). ``cache`` may be a dense
     :class:`attn.KVCache` (static-batch serving) or a paged
-    :class:`attn.PagedKVCache` (the continuous-batching engine)."""
+    :class:`attn.PagedKVCache` (the continuous-batching engine).
+    ``prefill_start``: traced scalar cache position of a chunked-prefill
+    continuation chunk's first token (None = not a continuation chunk);
+    selects the scatter-at-offset + cache-and-chunk gather attention path."""
     b, t, _ = h.shape
     p = bp["attn"]
     q = layers.project(engine, h, p["wq"], p.get("bq")).reshape(
@@ -339,7 +343,20 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
     eff_window = jnp.where(window > 0, window, jnp.int32(2 ** 30))
     win_arg = window_static if window_static is not None else eff_window
     if isinstance(cache, attn.PagedKVCache):
-        if t == 1:
+        # The continuation-chunk test must PRECEDE the t == 1 decode test:
+        # a final chunk can legally be one token long (recurrent families
+        # never pad, so total % chunk == 1 happens), and routing it to the
+        # decode branch would read the chunk cache's unset active/trash.
+        if prefill_start is not None:
+            # chunked-prefill continuation: scatter the chunk's KV at its
+            # offset, then attend cache pages + the fresh chunk through the
+            # block-table gather path (write first, then attend).
+            cache = attn.paged_update_prefill(cache, k, v, cache.tables[0],
+                                              start=prefill_start)
+            o = attn.paged_prefill_attn_op(engine, q, cache, prefill_start,
+                                           window=win_arg,
+                                           softcap=cfg.attn_softcap)
+        elif t == 1:
             cache = attn.paged_update_decode(cache, k, v, cache.active,
                                              cache.trash)
             o = attn.paged_attn_op(engine, q, cache, window=win_arg,
@@ -373,14 +390,15 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
 def _block_apply(engine, cfg: ModelConfig, bp: Params, h: jnp.ndarray,
                  positions, window, rope_base,
                  kv_cache=None, ssm_cache=None, cache_pos=None,
-                 window_static=None):
+                 window_static=None, prefill_start=None):
     """One decoder block. Returns (h, kv_cache, ssm_cache)."""
     x = layers.rmsnorm(h, bp["ln1"])
     outs = []
     if cfg.has_attn:
         a_out, kv_cache = _attn_branch(engine, cfg, bp, x, positions, window,
                                        rope_base, kv_cache, cache_pos,
-                                       window_static=window_static)
+                                       window_static=window_static,
+                                       prefill_start=prefill_start)
         outs.append(("attn", a_out))
     if cfg.has_ssm:
         s_out, ssm_cache = ssm.mamba2_apply(
@@ -424,10 +442,13 @@ def _block_apply(engine, cfg: ModelConfig, bp: Params, h: jnp.ndarray,
 # embedding frontends (incl. multimodal stubs)
 # ---------------------------------------------------------------------------
 def embed_inputs(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
-                 extra_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                 extra_embeds: Optional[jnp.ndarray] = None, *,
+                 with_meta: bool = True) -> jnp.ndarray:
     """tokens: (B, T) or (B, T, n_q) for audio. extra_embeds: (B, Ti, D)
     precomputed frontend embeddings (VLM patches / audio conditioning),
-    prepended to the token embeddings."""
+    prepended to the token embeddings. ``with_meta=False`` skips the
+    hymba meta-token prefix -- chunked prefill prepends it only on the
+    first chunk (the meta tokens live at cache positions [0, n_meta))."""
     if cfg.n_codebooks > 1:
         # musicgen: sum the per-codebook embeddings
         h = sum(layers.embed_apply(params["embed"][i], tokens[..., i])
@@ -437,7 +458,7 @@ def embed_inputs(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
                                scale_by_sqrt_dim=cfg.embed_scale)
     if extra_embeds is not None:
         h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
-    if cfg.n_meta_tokens:
+    if cfg.n_meta_tokens and with_meta:
         b = h.shape[0]
         meta = jnp.broadcast_to(params["meta_tokens"][None],
                                 (b, cfg.n_meta_tokens, cfg.d_model))
@@ -757,8 +778,13 @@ def init_paged_state(cfg: ModelConfig, slots: int, n_pages: int,
 def paged_prefill(engine: GemminiInstance, params: Params, cfg: ModelConfig,
                   tokens: jnp.ndarray, state: PagedDecodeState,
                   slot: jnp.ndarray, pages: jnp.ndarray, *,
-                  page_size: int) -> Tuple[jnp.ndarray, PagedDecodeState]:
+                  page_size: int, with_logits: bool = True
+                  ) -> Tuple[Optional[jnp.ndarray], PagedDecodeState]:
     """Prefill ONE fresh request into the paged pools.
+
+    ``with_logits=False`` skips the unembed projection (used when this is
+    the FIRST chunk of a multi-chunk prefill: nothing samples until the
+    last chunk).
 
     tokens: (1, P) [or (1, P, n_q)], P bucket-padded by the engine; slot:
     scalar int32 decode slot; pages: (MP,) int32 pages allocated for the
@@ -807,7 +833,78 @@ def paged_prefill(engine: GemminiInstance, params: Params, cfg: ModelConfig,
           state.conv, state.ssm)
     h, caches = jax.lax.scan(body, h, xs)
     kv_k, kv_v, conv, st = caches
-    logits = unembed(engine, cfg, params, h)
+    logits = unembed(engine, cfg, params, h) if with_logits else None
+    return logits, state._replace(kv_k=kv_k, kv_v=kv_v, conv=conv, ssm=st)
+
+
+def paged_prefill_chunk(engine: GemminiInstance, params: Params,
+                        cfg: ModelConfig, tokens: jnp.ndarray,
+                        state: PagedDecodeState, slot: jnp.ndarray,
+                        pages: jnp.ndarray, start: jnp.ndarray, *,
+                        page_size: int, with_logits: bool = True
+                        ) -> Tuple[Optional[jnp.ndarray], PagedDecodeState]:
+    """Prefill a CONTINUATION chunk of a partially-prefilled request.
+
+    tokens: (1, Tc) [or (1, Tc, n_q)] prompt tokens landing at cache
+    positions [start, start + Tc); start: *traced* scalar int32, so one
+    compile bucket serves every chunk offset of a given chunk length (the
+    first chunk -- which prepends meta tokens and attends only itself --
+    goes through :func:`paged_prefill`); pages: (MP,) int32, the slot's
+    full block table so far (the chunk's own pages included).
+
+    Differences from the fresh-prefill path, all chunk-resume semantics:
+    positions and rope run at [start, start+Tc); attention scatters at the
+    offset and then attends cache pages + the fresh chunk via the
+    block-table gather (``ops.paged_prefill_attention``); and the slot's
+    SSM conv/recurrent state is RESUMED, not zeroed -- the recurrent
+    families' exact-length, no-padding discipline extends to chunks (every
+    chunk is exact, only the last may be bucket-padded by the engine for
+    attention-only families). The caller owns table/length updates exactly
+    as for :func:`paged_prefill`.
+
+    ``with_logits=False`` skips the unembed projection and returns
+    ``(None, state)`` -- only the LAST chunk's logits are ever sampled, so
+    intermediate chunks need not pay the vocab GEMM (one compile bucket
+    per (chunk length, with_logits) pair).
+    """
+    h = embed_inputs(cfg, params, tokens, with_meta=False)
+    b, t, _ = h.shape                                  # b == 1
+    positions = jnp.broadcast_to(start + jnp.arange(t)[None], (b, t))
+    win_np = layer_windows(cfg, t)
+    windows = jnp.asarray(win_np)
+    static_win = uniform_window(win_np)
+    bases = jnp.asarray(layer_rope_bases(cfg))
+    zero_len = jnp.zeros((1,), jnp.int32)
+
+    def body(h, xs):
+        bp, win, base, kv_k, kv_v, conv, st = xs
+        kvc = None
+        if kv_k is not None:
+            kvc = attn.PagedKVCache(kv_k, kv_v, pages[None], zero_len,
+                                    page_size)
+        ssc = None
+        if conv is not None:
+            c1 = jax.lax.dynamic_slice_in_dim(conv, slot, 1, 0)
+            s1 = jax.lax.dynamic_slice_in_dim(st, slot, 1, 0)
+            ssc = ssm.SSMCache(c1, s1)
+        h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
+                                   kv_cache=kvc, ssm_cache=ssc,
+                                   window_static=static_win,
+                                   prefill_start=start)
+        new = (kvc.k if kvc else None, kvc.v if kvc else None,
+               jax.lax.dynamic_update_slice_in_dim(
+                   conv, ssc.conv.astype(conv.dtype), slot, 0)
+               if ssc else None,
+               jax.lax.dynamic_update_slice_in_dim(
+                   st, ssc.state.astype(st.dtype), slot, 0)
+               if ssc else None)
+        return h, new
+
+    xs = (params["blocks"], windows, bases, state.kv_k, state.kv_v,
+          state.conv, state.ssm)
+    h, caches = jax.lax.scan(body, h, xs)
+    kv_k, kv_v, conv, st = caches
+    logits = unembed(engine, cfg, params, h) if with_logits else None
     return logits, state._replace(kv_k=kv_k, kv_v=kv_v, conv=conv, ssm=st)
 
 
@@ -824,6 +921,12 @@ def paged_decode_step(engine: GemminiInstance, params: Params,
     so they can never touch pages owned by live requests. Each slot ropes
     and attends at its OWN position (``lengths[slot]``) -- the per-request
     raggedness the static-batch ``decode_step`` cannot express.
+
+    Inactive slots' conv/SSM state is frozen too (the recurrent-state
+    analog of the trash page): a slot mid-way through a *chunked* prefill
+    sits in the decode batch as padding, and letting the padding token
+    advance its recurrent state would corrupt the state the next chunk
+    resumes from.
     """
     if cfg.n_codebooks > 1:
         h = sum(layers.embed_apply(params["embed"][i], tokens[..., i])
@@ -849,7 +952,12 @@ def paged_decode_step(engine: GemminiInstance, params: Params,
                                    kv_cache=kvc, ssm_cache=ssc,
                                    window_static=static_win)
         new = (kvc.k if kvc else None, kvc.v if kvc else None,
-               ssc.conv if ssc else None, ssc.state if ssc else None)
+               jnp.where(active[:, None, None],
+                         ssc.conv.astype(conv.dtype), conv)
+               if ssc else None,
+               jnp.where(active[:, None, None, None],
+                         ssc.state.astype(st.dtype), st)
+               if ssc else None)
         return h, new
 
     xs = (params["blocks"], windows, bases, state.kv_k, state.kv_v,

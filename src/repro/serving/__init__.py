@@ -8,15 +8,19 @@ argues accelerator evaluation must include.
 * :mod:`repro.serving.paged_cache` -- fixed-size-block KV allocator
   (alloc/free/defrag, capacity accounting vs ``GemminiConfig.hbm_bytes``);
 * :mod:`repro.serving.scheduler`   -- admission queue, token-budget
-  prefill/decode interleave, preemption-by-eviction, telemetry;
+  chunk-queue prefill/decode interleave (chunked prefill),
+  preemption-by-eviction, TTFT/ITL telemetry;
 * :mod:`repro.serving.engine`      -- ``ServingEngine``: the jitted paged
-  model steps + the policy loop (``policy="continuous" | "static"``).
+  model steps + the policy loop (``policy="continuous" | "static"``,
+  ``prefill_chunk`` for chunked prefill).
 """
 
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_cache import (PagedKVAllocator, arena_pages,
                                        pages_for)
-from repro.serving.scheduler import ContinuousScheduler, Request, summarize
+from repro.serving.scheduler import (ContinuousScheduler, PrefillChunk,
+                                     Request, summarize)
 
-__all__ = ["ContinuousScheduler", "PagedKVAllocator", "Request",
-           "ServingEngine", "arena_pages", "pages_for", "summarize"]
+__all__ = ["ContinuousScheduler", "PagedKVAllocator", "PrefillChunk",
+           "Request", "ServingEngine", "arena_pages", "pages_for",
+           "summarize"]

@@ -17,6 +17,12 @@ the contention the static batch loop (``policy="static"``: admission
 barrier, no slot recycling) cannot express; ``benchmarks/bench_serving.py``
 measures the two policies against each other on one request trace.
 
+Chunked prefill (``prefill_chunk``) extends the discipline to long
+prompts: fixed-size chunks are their own compile buckets (the traced
+``start`` offset keeps one bucket per chunk *length*), mid-prefill slots
+ride the decode batch as padding with frozen lengths AND frozen recurrent
+state, and only the final chunk samples a token.
+
 Per-request numerics are batch-invariant: projections, norms, and the
 paged attention path are row-independent, so a request decoded alongside
 arbitrary co-tenants produces bit-identical tokens to the same request
@@ -58,16 +64,52 @@ def _jitted_steps(engine, model_cfg, page_size: int):
                 engine, p, model_cfg, tok, st, slot, pages,
                 page_size=page_size),
             donate_argnums=(2,))
+        # Logits-free twins for intermediate chunks: nothing samples until
+        # the last chunk, so they skip the unembed vocab GEMM entirely.
+        prefill_nl = jax.jit(
+            lambda p, tok, st, slot, pages: tf.paged_prefill(
+                engine, p, model_cfg, tok, st, slot, pages,
+                page_size=page_size, with_logits=False),
+            donate_argnums=(2,))
+        chunk = jax.jit(
+            lambda p, tok, st, slot, pages, start: tf.paged_prefill_chunk(
+                engine, p, model_cfg, tok, st, slot, pages, start,
+                page_size=page_size),
+            donate_argnums=(2,))
+        chunk_nl = jax.jit(
+            lambda p, tok, st, slot, pages, start: tf.paged_prefill_chunk(
+                engine, p, model_cfg, tok, st, slot, pages, start,
+                page_size=page_size, with_logits=False),
+            donate_argnums=(2,))
         decode = jax.jit(
             lambda p, tok, st, act: tf.paged_decode_step(
                 engine, p, model_cfg, tok, st, act, page_size=page_size),
             donate_argnums=(2,))
-        _JIT_CACHE[key] = (prefill, decode)
+        _JIT_CACHE[key] = (prefill, prefill_nl, chunk, chunk_nl, decode)
     return _JIT_CACHE[key]
 
 
 class ServingEngine:
-    """Continuous-batching executor for one model on one host."""
+    """Continuous-batching executor for one model on one host.
+
+    Knobs (see docs/serving.md for the policy discussion):
+
+    * ``max_slots`` / ``max_context`` / ``page_size`` / ``n_pages`` --
+      decode batch width and paged-arena geometry. ``page_size=None``
+      resolves the tuned ``PagedAttnSchedule`` page size when
+      ``GEMMINI_TUNE`` is not ``off``, else the static default.
+    * ``backend`` -- ``xla`` (gather reference, exact-match contract),
+      ``interpret`` (Pallas kernel bodies on CPU), ``pallas`` (TPU).
+    * ``prefill_token_budget`` -- prefill cache positions per iteration.
+    * ``prefill_chunk`` -- chunked prefill: ``None`` or negative =
+      single-pass, ``0`` = auto (one page), else the chunk size in cache
+      positions (floored to ``n_meta_tokens + 1``).
+    * ``policy`` -- ``continuous``, or ``static`` (admission barrier, no
+      slot recycling; the bench baseline). The barrier never blocks an
+      in-flight chunked prefill, only new admissions.
+    * ``warm_prompt_lens`` -- pre-resolve every tuned schedule the given
+      prompt lengths will hit (no-op under ``GEMMINI_TUNE=off``).
+    """
 
     def __init__(self, model_cfg, *, max_slots: int = 4,
                  max_context: int = 2048,
@@ -78,6 +120,7 @@ class ServingEngine:
                  params=None, seed: int = 0,
                  temperature: float = 0.0,
                  prefill_token_budget: int = 512,
+                 prefill_chunk: Optional[int] = None,
                  policy: str = "continuous",
                  warm_prompt_lens: Sequence[int] = ()):
         if policy not in ("continuous", "static"):
@@ -124,11 +167,22 @@ class ServingEngine:
         # diverging from the reference path, so those prefill at exact
         # length (one compile per distinct prompt length).
         self.prefill_pad = 1 if model_cfg.has_ssm else self.page_size
+        # Chunked prefill: None or negative = single-pass (classic; the
+        # CLI's -1 convention works here too); 0 = auto (one page, the
+        # natural page-multiple default); positive values are floored to
+        # meta+1 by the scheduler (the first chunk carries the meta-token
+        # prefix).
+        if prefill_chunk is not None and prefill_chunk < 0:
+            prefill_chunk = None
+        elif prefill_chunk == 0:
+            prefill_chunk = self.page_size
         self.sched = ContinuousScheduler(
             self.alloc, max_slots,
             prefill_token_budget=prefill_token_budget,
             extra_tokens_per_prefill=model_cfg.n_meta_tokens,
-            pad_to=self.prefill_pad)
+            pad_to=self.prefill_pad,
+            prefill_chunk=prefill_chunk)
+        self.prefill_chunk = self.sched.prefill_chunk
         if policy == "static":
             # Static batching as a degenerate policy: admit only into an
             # EMPTY engine (group barrier, no slot recycling) and ignore
@@ -146,7 +200,8 @@ class ServingEngine:
                                          self.max_pages_per_seq,
                                          dtype=model_cfg.dtype)
         mc = model_cfg
-        self._jit_prefill, self._jit_decode = _jitted_steps(
+        (self._jit_prefill, self._jit_prefill_nl, self._jit_chunk,
+         self._jit_chunk_nl, self._jit_decode) = _jitted_steps(
             self.engine, mc, self.page_size)
 
         tok_shape = (max_slots,) if mc.n_codebooks == 1 \
@@ -163,20 +218,39 @@ class ServingEngine:
         """Pre-resolve every schedule the engine will launch: prefill GEMM
         and attention shapes per prompt bucket (batch 1), decode GEMMs at
         the slot batch, and the paged-attention page size the pools were
-        sized with -- so no request ever tunes on the request path."""
+        sized with -- so no request ever tunes on the request path.
+
+        With chunked prefill on, the buckets are *chunk lengths*, not
+        prompt buckets: the first chunk prefills like a short fresh prompt
+        (self-attention + GEMMs at the chunk length), continuation chunks
+        launch only GEMMs -- their attention is the block-table gather
+        kernel, whose tuned schedule IS the page size the pools were
+        already sized with."""
         from repro import tune
         totals: Dict[str, int] = {}
         # Prefill really runs at bucket + meta tokens (embed_inputs prepends
         # them), so that is the length to warm -- warming the bare bucket
         # would populate fingerprints the request path never hits.
-        meta = self.model_cfg.n_meta_tokens
-        buckets = sorted({self._bucket(int(p)) + meta for p in prompt_lens})
-        for i, b in enumerate(buckets):
+        first, rest = set(), set()
+        for p in prompt_lens:
+            dummy = Request(rid=-1,
+                            prompt=np.zeros((max(1, int(p)),), np.int32),
+                            max_new_tokens=0)
+            spans = self.sched._chunk_spans(dummy)
+            first.add(spans[0][2])
+            for (s, _e, pe) in spans[1:]:
+                rest.add(pe - s)
+        for i, b in enumerate(sorted(first)):
             st = tune.warm_model_plans(
                 self.engine.cfg, self.model_cfg, 1, b,
                 include_decode=False,
                 paged_slots=self.max_slots if i == 0 else 0,
                 paged_max_context=self.max_context)
+            totals = {k: totals.get(k, 0) + v for k, v in st.items()}
+        for b in sorted(rest - first):
+            st = tune.warm_model_plans(self.engine.cfg, self.model_cfg, 1, b,
+                                       include_decode=False,
+                                       include_attention=False)
             totals = {k: totals.get(k, 0) + v for k, v in st.items()}
         st = tune.warm_model_plans(self.engine.cfg, self.model_cfg,
                                    self.max_slots, 1,
@@ -219,6 +293,9 @@ class ServingEngine:
         req.generated.append(tok if tok.ndim else int(tok))
         if req.t_first_token is None:
             req.t_first_token = now
+        else:
+            req.itl_s.append(now - req.t_last_token)
+        req.t_last_token = now
         self._next_token[req.slot] = tok
         done = req.n_generated >= req.max_new_tokens
         if self.model_cfg.n_codebooks == 1 and int(tok) == req.eos_id:
@@ -251,16 +328,75 @@ class ServingEngine:
             jnp.int32(slot), jnp.asarray(row))
         true_len = len(req.serve_prompt()) + self.model_cfg.n_meta_tokens
         req.cache_len = true_len
+        req.n_chunks += 1
         self.state = self.state._replace(
             lengths=self.state.lengths.at[slot].set(true_len))
         self._sync_tables([slot])
         tok = self._sample(logits[0, true_len - 1])
         self._record_token(req, tok, time.time())
 
+    def _do_prefill_chunk(self, w) -> None:
+        """Execute one scheduler-issued prefill chunk.
+
+        Single-span chunks (``first and last``) take the classic
+        whole-prompt path unchanged. Otherwise: the first chunk runs the
+        fresh ``paged_prefill`` (meta prefix, SSM state reset, self-only
+        attention -- positions [0, chunk) see no cache); continuation
+        chunks run ``paged_prefill_chunk`` (resume SSM state, attend cache
+        pages + chunk at offset ``start``). Only the last chunk samples --
+        its final row is the prompt's last true position -- and only then
+        does the slot's device length go live, flipping it into the decode
+        active set.
+        """
+        req, slot = w.req, w.slot
+        if req.state != "running" or req.slot != slot:
+            # The scheduler finished or preempted this request AFTER
+            # emitting the chunk (sole-runner truncation later in the same
+            # pass): its pages are freed -- executing the chunk would
+            # scatter into a zero table row over pages the allocator may
+            # already have re-issued.
+            return
+        if w.first and w.last:
+            self._do_prefill(req, slot)
+            return
+        meta = self.model_cfg.n_meta_tokens
+        prompt = req.serve_prompt()
+        toks = prompt[max(0, w.start - meta): w.true_end - meta]
+        pad = (w.padded_end - w.true_end)
+        if pad:
+            toks = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1))
+        row = self._table_row(slot)
+        if w.first:
+            fn = self._jit_prefill if w.last else self._jit_prefill_nl
+            logits, self.state = fn(
+                self.params, jnp.asarray(toks[None]), self.state,
+                jnp.int32(slot), jnp.asarray(row))
+        else:
+            fn = self._jit_chunk if w.last else self._jit_chunk_nl
+            logits, self.state = fn(
+                self.params, jnp.asarray(toks[None]), self.state,
+                jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start))
+        req.cache_len = w.true_end
+        req.n_chunks += 1
+        if w.last:
+            # The device table sync can wait until the slot goes live: the
+            # chunk calls carry the table row as an argument, and a
+            # mid-prefill slot never decodes (saves two host->device
+            # dispatches per intermediate chunk).
+            self._sync_tables([slot])
+            true_len = len(prompt) + meta
+            self.state = self.state._replace(
+                lengths=self.state.lengths.at[slot].set(true_len))
+            tok = self._sample(logits[0, (true_len - 1) - w.start])
+            self._record_token(req, tok, time.time())
+
     def _do_decode(self) -> None:
         active_np = np.zeros((self.max_slots,), bool)
-        for slot in self.sched.running:
-            active_np[slot] = True
+        for slot, req in self.sched.running.items():
+            # Mid-prefill slots hold pages but must not decode: inactive
+            # slots write the trash page and keep frozen lengths, so a
+            # partially-prefilled cache can never be touched.
+            active_np[slot] = not req.prefilling
         toks = self._next_token[:, None] \
             if self.model_cfg.n_codebooks == 1 \
             else self._next_token[:, None, :]
@@ -270,15 +406,19 @@ class ServingEngine:
         last = self._sample(logits[:, -1])
         now = time.time()
         for slot, req in list(self.sched.running.items()):
+            if req.prefilling:
+                continue
             req.cache_len += 1
             self._record_token(req, last[slot], now)
 
     def step(self) -> None:
-        """One scheduler iteration: admit/prefill, ensure capacity
-        (preempting by eviction under pressure), decode one token."""
-        if not (self.policy == "static" and self.sched.running):
-            for (req, slot, _pages) in self.sched.admissions():
-                self._do_prefill(req, slot)
+        """One scheduler iteration: prefill (whole prompts, or chunks
+        interleaved at ``prefill_chunk`` granularity), ensure decode
+        capacity (preempting by eviction under pressure), decode one
+        token for every fully-prefilled running slot."""
+        admit_new = not (self.policy == "static" and self.sched.running)
+        for w in self.sched.prefill_schedule(admit_new=admit_new):
+            self._do_prefill_chunk(w)
         for req in self.sched.rejected:
             # Regrew past the arena while preempted: finish truncated.
             self.sched.finish(req, truncated=True)
@@ -286,7 +426,7 @@ class ServingEngine:
         new_pages, _evicted, _truncated = self.sched.ensure_decode_capacity()
         if new_pages:
             self._sync_tables({slot for slot, _ in new_pages})
-        if self.sched.running:
+        if any(not r.prefilling for r in self.sched.running.values()):
             self._do_decode()
 
     def run(self) -> Dict:
@@ -308,12 +448,18 @@ class ServingEngine:
                 "requests": [self._req_report(r) for r in self.requests]}
 
     def _req_report(self, r: Request) -> Dict:
+        itl = np.asarray(r.itl_s) if r.itl_s else None
         return {"rid": r.rid, "prompt_tokens": int(len(r.prompt)),
                 "new_tokens": r.n_generated,
                 "tokens": np.asarray(r.generated),
                 "preempted": r.n_preempted, "truncated": r.truncated,
+                "prefill_chunks": r.n_chunks,
                 "ttft_s": (r.t_first_token - r.submitted_at)
                 if r.t_first_token else None,
+                "itl_p50_s": float(np.percentile(itl, 50))
+                if itl is not None else None,
+                "itl_p95_s": float(np.percentile(itl, 95))
+                if itl is not None else None,
                 "latency_s": (r.t_finished - r.submitted_at)
                 if r.t_finished else None}
 

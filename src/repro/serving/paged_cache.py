@@ -87,6 +87,25 @@ class PagedKVAllocator:
         self._tables[slot] = pages
         return list(pages)
 
+    def grow_slot(self, slot: int, n_tokens: int) -> Optional[List[int]]:
+        """Extend a slot's table to cover logical positions [0, n_tokens):
+        allocates the missing pages (chunked prefill's per-chunk commitment
+        point). Returns the newly allocated page ids ([] when the slot
+        already covers them), or None when the arena or the per-sequence
+        cap cannot hold them -- in which case NOTHING is allocated, so the
+        scheduler can evict and retry atomically."""
+        pages = self._tables.get(slot)
+        if pages is None:
+            raise ValueError(f"slot {slot} holds no pages")
+        need = pages_for(n_tokens, self.page_size) - len(pages)
+        if need <= 0:
+            return []
+        if len(pages) + need > self.max_pages_per_seq or need > len(self._free):
+            return None
+        new = [self._free.pop() for _ in range(need)]
+        pages.extend(new)
+        return new
+
     def extend_slot(self, slot: int) -> Optional[int]:
         """One more page for a growing request (decode crossed a page
         boundary); None when the arena is exhausted or the request is at

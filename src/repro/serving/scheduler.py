@@ -5,13 +5,19 @@ kernel quality only matters under the contention a real serving mix
 creates, and this module is where that mix is shaped. Policy, in order of
 application each engine iteration:
 
-1. **Admission** (prefill side): queued requests are admitted into free
-   decode slots oldest-first, as long as (a) a slot is free, (b) the paged
-   allocator can hold the whole prompt, and (c) the iteration's
+1. **Admission / prefill** (the chunk queue): queued requests are admitted
+   into free decode slots oldest-first, as long as (a) a slot is free,
+   (b) the paged allocator can hold the request, and (c) the iteration's
    *prefill token budget* is not exhausted. The budget is the classic
    continuous-batching knob balancing time-to-first-token of queued
    requests against inter-token latency of running ones: each admitted
-   prompt stalls every running request for one prefill pass.
+   prompt stalls every running request for one prefill pass. With
+   **chunked prefill** (``prefill_chunk``), long prompts split into
+   fixed-size spans executed one-or-more per iteration under the same
+   budget -- continuation chunks for mid-prefill runners go first, then
+   new admissions -- so a single long prompt can no longer stall running
+   decodes for a whole prefill pass (bounded TTFT *and* ITL; the paper's
+   system-level contention argument at its sharpest).
 2. **Decode capacity** (preemption-by-eviction): every running request
    about to cross a page boundary gets one page; when the arena is dry the
    *youngest* running request is evicted -- its pages freed, the request
@@ -57,11 +63,25 @@ class Request:
     submitted_at: float = 0.0
     admitted_seq: int = -1                # admission order (eviction key)
     t_first_token: Optional[float] = None
+    t_last_token: Optional[float] = None
     t_finished: Optional[float] = None
+    # chunked-prefill progress (cache positions written so far / needed);
+    # target 0 means single-pass prefill (never observably "prefilling")
+    prefill_pos: int = 0
+    prefill_target: int = 0
+    n_chunks: int = 0                     # prefill chunk calls executed
+    itl_s: list = dataclasses.field(default_factory=list)
 
     @property
     def n_generated(self) -> int:
         return len(self.generated)
+
+    @property
+    def prefilling(self) -> bool:
+        """Running but not yet fully prefilled: the slot holds pages and
+        (for recurrent families) carried state, but must not decode --
+        the engine keeps it out of the decode active mask."""
+        return self.state == "running" and self.prefill_pos < self.prefill_target
 
     def serve_prompt(self) -> np.ndarray:
         """What prefill must (re)compute: the original prompt plus anything
@@ -70,6 +90,26 @@ class Request:
             return self.prompt
         return np.concatenate([self.prompt, np.asarray(self.generated,
                                                        self.prompt.dtype)])
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One unit of prefill work the scheduler hands the engine.
+
+    Spans are in *cache-position* space (meta tokens ride in the first
+    chunk): this chunk writes positions [start, padded_end), of which
+    [start, true_end) are real tokens and the rest bucket padding (last
+    chunk of attention-only families; recurrent families never pad).
+    ``first and last`` means single-span -- the classic whole-prompt
+    prefill path, byte-for-byte the pre-chunking behavior."""
+
+    req: Request
+    slot: int
+    start: int
+    true_end: int
+    padded_end: int
+    first: bool
+    last: bool
 
 
 class ContinuousScheduler:
@@ -83,7 +123,8 @@ class ContinuousScheduler:
     def __init__(self, allocator: PagedKVAllocator, n_slots: int, *,
                  prefill_token_budget: int = 512,
                  extra_tokens_per_prefill: int = 0,
-                 pad_to: int = 1):
+                 pad_to: int = 1,
+                 prefill_chunk: Optional[int] = None):
         self.alloc = allocator
         self.n_slots = n_slots
         self.prefill_token_budget = prefill_token_budget
@@ -92,6 +133,12 @@ class ContinuousScheduler:
         # the engine bucket-pads prompts (compile caching), so admission
         # must charge the padded cache footprint, not the raw prompt
         self.pad_to = pad_to
+        # chunked prefill: split prompts into prefill_chunk-position spans
+        # interleaved with decode steps (None/0 = single-pass). Must exceed
+        # the meta-token count (the first chunk carries them).
+        if prefill_chunk:
+            prefill_chunk = max(prefill_chunk, extra_tokens_per_prefill + 1)
+        self.prefill_chunk = prefill_chunk or None
         self.queue: List[Request] = []
         self.running: Dict[int, Request] = {}          # slot -> request
         self.rejected: List[Request] = []              # engine drains these
@@ -100,6 +147,31 @@ class ContinuousScheduler:
     def _prefill_need(self, req: Request) -> int:
         plen = len(req.serve_prompt())
         return -(-plen // self.pad_to) * self.pad_to + self.extra_tokens
+
+    def _chunk_spans(self, req: Request) -> List[Tuple[int, int, int]]:
+        """(start, true_end, padded_end) spans covering prompt + meta in
+        cache-position space. Single span (the classic path) when chunking
+        is off or the request fits one chunk; otherwise every span is
+        exactly ``prefill_chunk`` long except the last, which is padded to
+        the engine's compile bucket (``pad_to``; 1 for recurrent families,
+        whose scan state must never absorb padding)."""
+        total = len(req.serve_prompt()) + self.extra_tokens
+        c = self.prefill_chunk
+        if not c or total <= c:
+            return [(0, total, self._prefill_need(req))]
+        spans, s = [], 0
+        # The last span's compile-bucket padding never exceeds the
+        # single-pass footprint (roundup of the total): a request that
+        # fits the arena unchunked must never out-grow it merely because
+        # the chunk size is not page-aligned.
+        cap = -(-total // self.pad_to) * self.pad_to
+        while s < total:
+            e = min(s + c, total)
+            pe = e if e - s == c else \
+                min(s + -(-(e - s) // self.pad_to) * self.pad_to, cap)
+            spans.append((s, e, pe))
+            s = e
+        return spans
 
     # -- submission --------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -149,6 +221,115 @@ class ContinuousScheduler:
             out.append((req, slot, pages))
         return out
 
+    # -- phase 1, chunk-queue form ----------------------------------------
+    def prefill_schedule(self, admit_new: bool = True) -> List[PrefillChunk]:
+        """The iteration's prefill work as a chunk queue.
+
+        ``admit_new=False`` suppresses pass 2 (new admissions) but still
+        emits continuation chunks -- the static policy's group barrier
+        blocks admission, never the completion of an in-flight prefill.
+
+        With chunking off this is exactly :meth:`admissions` (each admitted
+        request becomes one whole-prompt span). With chunking on, the
+        queue is built in two passes under the same prefill token budget
+        (charged in true cache positions; the first item always lands so
+        prefill can never fully starve):
+
+        1. *continuation chunks* for mid-prefill runners, oldest-admitted
+           first -- they hold pages and carried state, so finishing them
+           frees capacity soonest. A chunk whose pages cannot be allocated
+           evicts the youngest strictly-younger runner and retries; if none
+           exists the request stalls this iteration (an older runner will
+           free pages), or -- when it is the sole runner -- finishes
+           truncated (its prompt outgrew the arena and eviction cannot
+           help, the mid-prefill mirror of the sole-runner decode rule).
+        2. *admissions*: first chunks for queued requests, FIFO, as long
+           as a slot is free, the first chunk's pages fit, and budget
+           remains. Unservable requests (recompute prompt regrew past the
+           arena) are rejected exactly as in :meth:`admissions`.
+        """
+        if not self.prefill_chunk:
+            if not admit_new:
+                return []
+            return [PrefillChunk(req, slot, 0, len(req.serve_prompt())
+                                 + self.extra_tokens, self._prefill_need(req),
+                                 True, True)
+                    for (req, slot, _pages) in self.admissions()]
+        out: List[PrefillChunk] = []
+        budget = self.prefill_token_budget
+        # pass 1: continuation chunks, oldest first
+        for req in sorted(list(self.running.values()),
+                          key=lambda r: r.admitted_seq):
+            while req.state == "running" and req.prefilling:
+                if out and budget <= 0:
+                    break
+                w = self._next_chunk(req)
+                if w is None:              # arena pressure
+                    if self._evict_younger_than(req):
+                        continue
+                    if len(self.running) == 1:
+                        self.finish(req, truncated=True)
+                    break
+                budget -= w.true_end - w.start
+                out.append(w)
+                req.prefill_pos = w.true_end
+            if budget <= 0 and out:
+                break
+        # pass 2: new admissions (first chunks)
+        free = self._free_slots() if admit_new else []
+        while self.queue and free and (budget > 0 or not out):
+            req = self.queue[0]
+            need = self._prefill_need(req)
+            cap = min(self.alloc.n_pages, self.alloc.max_pages_per_seq)
+            if pages_for(need, self.alloc.page_size) > cap:
+                self.queue.pop(0)          # can NEVER be admitted
+                self.rejected.append(req)
+                continue
+            s, e, pe = self._chunk_spans(req)[0]
+            if out and e - s > budget:
+                break                      # budget spent; keep FIFO order
+            if not self.alloc.can_admit(pe):
+                break                      # head-of-line blocks: no overtake
+            self.queue.pop(0)
+            slot = free.pop(0)
+            pages = self.alloc.alloc_slot(slot, pe)
+            assert pages is not None       # can_admit just said yes
+            req.state, req.slot = "running", slot
+            req.admitted_seq = self._admit_seq
+            self._admit_seq += 1
+            self.running[slot] = req
+            req.prefill_target = len(req.serve_prompt()) + self.extra_tokens
+            req.prefill_pos = e
+            budget -= e - s
+            out.append(PrefillChunk(req, slot, s, e, pe, True,
+                                    e >= req.prefill_target))
+        return out
+
+    def _next_chunk(self, req: Request) -> Optional[PrefillChunk]:
+        """The continuation chunk at ``req.prefill_pos``, with its pages
+        allocated (the commitment point) -- or None under arena pressure
+        (nothing allocated)."""
+        for (s, e, pe) in self._chunk_spans(req):
+            if s == req.prefill_pos:
+                new = self.alloc.grow_slot(req.slot, pe)
+                if new is None:
+                    return None
+                return PrefillChunk(req, req.slot, s, e, pe, False,
+                                    e >= req.prefill_target)
+        raise AssertionError(f"prefill_pos {req.prefill_pos} off the "
+                             f"chunk lattice for rid {req.rid}")
+
+    def _evict_younger_than(self, req: Request) -> bool:
+        """Preempt the youngest runner strictly younger than ``req`` (so
+        the oldest mid-prefill request always makes progress: livelock-free
+        for the same reason decode eviction is). False when none exists."""
+        cands = [r for r in self.running.values()
+                 if r.admitted_seq > req.admitted_seq]
+        if not cands:
+            return False
+        self.preempt(max(cands, key=lambda r: r.admitted_seq))
+        return True
+
     # -- phase 2: decode capacity / preemption ----------------------------
     def ensure_decode_capacity(self) -> Tuple[List[Tuple[int, int]],
                                               List[Request],
@@ -169,8 +350,8 @@ class ContinuousScheduler:
         truncated: List[Request] = []
         for slot in sorted(self.running):
             req = self.running.get(slot)
-            if req is None:
-                continue
+            if req is None or req.prefilling:
+                continue               # mid-prefill slots do not decode
             while True:
                 if req.cache_len % self.alloc.page_size != 0:
                     break                  # headroom in the current page
@@ -207,10 +388,14 @@ class ContinuousScheduler:
     # -- state transitions -------------------------------------------------
     def preempt(self, req: Request) -> None:
         """Evict a running request: free its pages, requeue for recompute.
-        Generated tokens are kept (they re-prefill as prompt suffix)."""
+        Generated tokens are kept (they re-prefill as prompt suffix); a
+        mid-prefill victim restarts from chunk 0 (its pages and carried
+        recurrent state are gone -- recompute IS the restart mechanism,
+        at chunk granularity)."""
         self.alloc.free_slot(req.slot)
         del self.running[req.slot]
         req.state, req.slot, req.cache_len = "queued", -1, 0
+        req.prefill_pos = req.prefill_target = 0
         req.n_preempted += 1
         self.queue.insert(0, req)          # preempted requests go first
 
@@ -226,12 +411,20 @@ class ContinuousScheduler:
 # telemetry
 # ---------------------------------------------------------------------------
 def summarize(requests: List[Request], wall_s: float) -> Dict[str, float]:
-    """Aggregate per-request telemetry into the BENCH_serving schema."""
+    """Aggregate per-request telemetry into the BENCH_serving schema.
+
+    TTFT and ITL are split out deliberately: TTFT measures queueing +
+    prefill (what the admission policy controls), ITL the gaps *between* a
+    request's tokens (what a co-tenant's prefill stalls -- the distribution
+    chunked prefill exists to tighten). ITL percentiles pool every
+    inter-token gap across requests, so one stalled request cannot hide in
+    a per-request mean."""
     done = [r for r in requests if r.state == "finished"]
     lat = np.asarray([r.t_finished - r.submitted_at for r in done
                       if r.t_finished is not None] or [0.0])
     ttft = np.asarray([r.t_first_token - r.submitted_at for r in done
                        if r.t_first_token is not None] or [0.0])
+    itl = np.asarray([g for r in requests for g in r.itl_s] or [0.0])
     new_tokens = sum(r.n_generated for r in done)
     return {
         "requests": float(len(done)),
@@ -242,6 +435,9 @@ def summarize(requests: List[Request], wall_s: float) -> Dict[str, float]:
         "p99_latency_s": float(np.percentile(lat, 99)),
         "p50_ttft_s": float(np.percentile(ttft, 50)),
         "p99_ttft_s": float(np.percentile(ttft, 99)),
+        "p50_itl_s": float(np.percentile(itl, 50)),
+        "p95_itl_s": float(np.percentile(itl, 95)),
+        "prefill_chunks": float(sum(r.n_chunks for r in requests)),
         "preemptions": float(sum(r.n_preempted for r in requests)),
         "truncated": float(sum(1 for r in requests if r.truncated)),
     }

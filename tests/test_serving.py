@@ -352,6 +352,226 @@ def test_engine_defrag_preserves_live_requests(rng):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: kernel / twin numerics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("start,tq,h,kvh,win", [(16, 8, 4, 2, None),
+                                                (24, 11, 4, 1, 16),
+                                                (0, 7, 8, 8, None)])
+def test_paged_prefill_kernel_vs_oracle(rng, start, tq, h, kvh, win):
+    """The chunked-prefill Pallas kernel (interpret mode) matches the dense
+    oracle on scattered, NaN-poisoned pools: a chunk of queries at
+    [start, start+tq) attends exactly the live prefix, dead pages beyond
+    the frontier are skipped."""
+    d, page, mp = 32, 8, 6
+    lens = np.array([start + tq], np.int32)
+    kc, vc, pk, pv, tables = _scattered_case(rng, 1, h, kvh, d, page, mp,
+                                             lens)
+    q = jnp.asarray(rng.standard_normal((1, tq, h, d)), jnp.float32)
+    y = ak.paged_prefill_attention(q, jnp.asarray(pk), jnp.asarray(pv),
+                                   jnp.asarray(tables[0]), jnp.int32(start),
+                                   window=win, interpret=True)
+    ln = int(lens[0])
+    yr = ref.mha_ref(q, jnp.asarray(kc[:, :ln]), jnp.asarray(vc[:, :ln]),
+                     causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_xla_twin_bitwise(rng):
+    """The explicit-gather XLA twin is bit-identical to the single-pass
+    blockwise path for a continuation chunk's rows: same KV blocking
+    anchored at 0, same op staging (the serve_decode exact-match gate with
+    chunking on rests on this)."""
+    h, kvh, d, page, mp, start, tq = 4, 2, 16, 8, 4, 13, 9
+    lens = np.array([start + tq], np.int32)
+    kc, vc, pk, pv, tables = _scattered_case(rng, 1, h, kvh, d, page, mp,
+                                             lens, poison=0.0)
+    q = jnp.asarray(rng.standard_normal((1, tq, h, d)), jnp.float32)
+    cache = mattn.PagedKVCache(jnp.asarray(pk), jnp.asarray(pv),
+                               jnp.asarray(tables),
+                               jnp.asarray(lens), page)
+    y = mattn.paged_prefill_attention_xla(q, cache, jnp.int32(start),
+                                          window=8)
+    # the single-pass reference: full-prefix blockwise, rows [start, ...)
+    ln = int(lens[0])
+    qfull = jnp.asarray(
+        np.concatenate([rng.standard_normal((1, start, h, d)),
+                        np.asarray(q)], axis=1), jnp.float32)
+    yf = mattn.blockwise_attention_xla(qfull, jnp.asarray(kc[:, :ln]),
+                                       jnp.asarray(vc[:, :ln]), causal=True,
+                                       window=8)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yf[:, start:]))
+
+
+def test_chunked_ssm_state_continuity(rng):
+    """Resuming the SSD recurrent state across chunk boundaries reproduces
+    the single-pass outputs and final state (tolerance: exp-of-sums
+    reassociates across the boundary)."""
+    from repro.models import ssm
+    b, t, h, g, n, p = 2, 24, 4, 2, 8, 16
+    x = jnp.asarray(rng.standard_normal((b, t, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, (b, t, h)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1, 0.5, (h,)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, t, g, n)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, t, g, n)), jnp.float32)
+    y_full = ssm.ssd_chunked_xla(x, dt, a_log, bb, cc, chunk=8)
+    _, s_full = ssm._final_state(x, dt, a_log, bb, cc)
+    state, ys = None, []
+    for lo in (0, 9, 17):                  # non-aligned chunk boundaries
+        hi = {0: 9, 9: 17, 17: t}[lo]
+        sl = slice(lo, hi)
+        ys.append(ssm.ssd_chunked_xla(x[:, sl], dt[:, sl], a_log,
+                                      bb[:, sl], cc[:, sl], chunk=8,
+                                      initial_state=state))
+        _, state = ssm._final_state(x[:, sl], dt[:, sl], a_log, bb[:, sl],
+                                    cc[:, sl], initial_state=state)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, axis=1)),
+                               np.asarray(y_full), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: scheduler chunk queue
+# ---------------------------------------------------------------------------
+def test_prefill_schedule_chunk_queue_budget_and_order():
+    """Continuation chunks come before new admissions; the token budget
+    bounds the iteration's prefill work (first item always lands)."""
+    al = PagedKVAllocator(n_pages=64, page_size=4, max_pages_per_seq=16)
+    sc = ContinuousScheduler(al, n_slots=4, prefill_token_budget=8,
+                             prefill_chunk=8)
+    sc.submit(_mk_req(0, 20))
+    w = sc.prefill_schedule()
+    assert [(c.req.rid, c.start, c.true_end, c.first, c.last)
+            for c in w] == [(0, 0, 8, True, False)]
+    sc.submit(_mk_req(1, 4))
+    w = sc.prefill_schedule()              # rid0's continuation wins the
+    assert [(c.req.rid, c.start) for c in w] == [(0, 8)]   # whole budget
+    # rid0's last chunk charges 4 of the 8-token budget; rid1's 4-token
+    # prompt fits in the remainder and admits in the same iteration
+    w = sc.prefill_schedule()
+    assert [(c.req.rid, c.start, c.first, c.last) for c in w] == \
+        [(0, 16, False, True), (1, 0, True, True)]
+    for c in w:
+        assert not sc.running[c.slot].prefilling
+    assert sc.prefill_schedule() == []
+
+
+def test_prefill_schedule_admit_new_false_still_continues():
+    """The static barrier blocks admissions, never in-flight chunks.
+    Admission always emits just the first chunk; continuations drain on
+    later iterations (under a generous budget, several per iteration)."""
+    al = PagedKVAllocator(n_pages=64, page_size=4, max_pages_per_seq=16)
+    sc = ContinuousScheduler(al, n_slots=2, prefill_token_budget=1 << 20,
+                             prefill_chunk=8)
+    sc.submit(_mk_req(0, 20))
+    w = sc.prefill_schedule()
+    assert [(c.req.rid, c.start, c.first) for c in w] == [(0, 0, True)]
+    sc.submit(_mk_req(1, 20))
+    w = sc.prefill_schedule(admit_new=False)     # barrier: rid0 continues,
+    assert [(c.req.rid, c.start) for c in w] == [(0, 8), (0, 16)]
+    assert sc.prefill_schedule(admit_new=False) == []   # rid1 stays queued
+    assert [(c.req.rid, c.start) for c in sc.prefill_schedule()] == [(1, 0)]
+
+
+def test_chunk_spans_non_aligned_and_short():
+    al = PagedKVAllocator(n_pages=8, page_size=8, max_pages_per_seq=8)
+    sc = ContinuousScheduler(al, n_slots=1, pad_to=8, prefill_chunk=6)
+    # shorter than one chunk: single span, classic bucket padding
+    assert sc._chunk_spans(_mk_req(0, 5)) == [(0, 5, 8)]
+    # non-page-aligned chunks; last span padded to the compile bucket,
+    # capped at the single-pass footprint (roundup(14, 8) = 16, not 20)
+    assert sc._chunk_spans(_mk_req(1, 14)) == [(0, 6, 6), (6, 12, 12),
+                                               (12, 14, 16)]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: engine end-to-end
+# ---------------------------------------------------------------------------
+_TINY_SSM = tf.ModelConfig(name="tiny-serve-ssm", family="ssm", n_layers=2,
+                           d_model=32, vocab=64, d_state=8, ssm_head_dim=8,
+                           ssm_chunk=8, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("chunk,page", [(8, 8), (6, 8)])
+def test_chunked_engine_matches_reference(rng, chunk, page):
+    """Exact token match vs the single-pass static reference with chunking
+    on: prompts shorter than one chunk, exactly one chunk, and multi-chunk
+    -- page-aligned and not."""
+    eng = ServingEngine(_TINY, max_slots=2, max_context=48, page_size=page,
+                        n_pages=16, temperature=0.0, seed=0,
+                        prefill_chunk=chunk)
+    prompts = [rng.integers(0, 64, (n,)).astype(np.int32)
+               for n in (19, 3, chunk, 11)]
+    rep = _run_vs_reference(eng, prompts, [4, 6, 3, 5])
+    by_rid = {r["rid"]: r for r in rep["requests"]}
+    assert by_rid[0]["prefill_chunks"] == -(-19 // chunk)
+    assert by_rid[1]["prefill_chunks"] == 1          # short: classic path
+    assert rep["summary"]["prefill_chunks"] >= 6
+    assert rep["summary"]["p50_itl_s"] >= 0.0
+
+
+def test_chunked_single_token_final_chunk(rng):
+    """A final chunk of exactly ONE token (recurrent families never pad,
+    so total % chunk == 1 happens) must route through the chunk path, not
+    the t == 1 decode branch (whose cache has no active mask here)."""
+    eng = ServingEngine(_TINY, max_slots=2, max_context=48, page_size=8,
+                        n_pages=16, temperature=0.0, seed=0,
+                        prefill_chunk=8)
+    # force pad_to=1 so the last span is exactly one position long
+    eng.sched.pad_to = 1
+    prompts = [rng.integers(0, 64, (17,)).astype(np.int32)]
+    rep = _run_vs_reference(eng, prompts, [4])
+    assert rep["requests"][0]["prefill_chunks"] == 3
+
+
+def test_chunked_engine_ssm_matches_reference(rng):
+    """SSM-family chunked prefill resumes the recurrent state per chunk (no
+    padding, exact-length chunks) and still reproduces the reference
+    stream."""
+    eng = ServingEngine(_TINY_SSM, max_slots=2, max_context=48, page_size=8,
+                        n_pages=16, temperature=0.0, seed=0,
+                        prefill_chunk=7)
+    prompts = [rng.integers(0, 64, (n,)).astype(np.int32)
+               for n in (17, 4, 10)]
+    rep = _run_vs_reference(eng, prompts, [5, 3, 4])
+    assert rep["summary"]["prefill_chunks"] > 3
+
+
+def test_chunked_eviction_mid_prefill_recompute(rng):
+    """A starved arena evicts the youngest runner MID-PREFILL (its pages
+    and carried state are gone); the chunk-zero recompute restart still
+    produces the exact reference stream."""
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=3, temperature=0.0, seed=0,
+                        prefill_chunk=8)
+    prompts = [rng.integers(0, 64, (7,)).astype(np.int32),
+               rng.integers(0, 64, (20,)).astype(np.int32)]
+    rep = _run_vs_reference(eng, prompts, [10, 4])
+    assert rep["summary"]["preemptions"] > 0
+    assert rep["summary"]["truncated"] == 0
+    assert rep["requests"][1]["prefill_chunks"] > 3   # restarted chunks
+
+
+def test_chunked_engine_interpret_backend(rng):
+    """backend="interpret" drives the chunked-prefill Pallas kernel
+    (block-table gather) end-to-end; greedy tokens agree with the xla
+    engine."""
+    prompts = [rng.integers(0, 64, (n,)).astype(np.int32) for n in (13, 4)]
+    reps = {}
+    for backend in ("xla", "interpret"):
+        eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                            n_pages=8, temperature=0.0, seed=0,
+                            backend=backend, prefill_chunk=8)
+        for p in prompts:
+            eng.submit(p, 3)
+        reps[backend] = [np.asarray(r["tokens"])
+                         for r in eng.run()["requests"]]
+    for a, b in zip(reps["xla"], reps["interpret"]):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
 # paged schedule through the tuner
 # ---------------------------------------------------------------------------
 @pytest.fixture

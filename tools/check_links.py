@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Fail CI on broken intra-repo markdown links.
+
+Scans every ``*.md`` under the repo root for inline links/images
+(``[text](target)``) and reference definitions (``[ref]: target``),
+resolves relative targets against the containing file, and exits non-zero
+listing every target that does not exist. External schemes (http/https/
+mailto), pure in-page anchors (``#...``), and autolinks are skipped --
+this is a *repo-consistency* check (docs renaming a module or a bench
+artifact must update every pointer), not a web-link checker.
+
+  python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) and ![alt](target); stops at the first ')' or space
+# (markdown titles like [t](x "title") keep only the path part).
+_INLINE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# [ref]: target definitions at line start
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", ".venv", "node_modules", "__pycache__"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str):
+    broken = []
+    for path in sorted(md_files(root)):
+        text = open(path, encoding="utf-8").read()
+        targets = _INLINE.findall(text) + _REFDEF.findall(text)
+        for t in targets:
+            if t.startswith(_SKIP_SCHEMES) or t.startswith("#"):
+                continue
+            t = t.split("#", 1)[0]         # strip in-file anchors
+            if not t:
+                continue
+            base = root if t.startswith("/") else os.path.dirname(path)
+            resolved = os.path.normpath(os.path.join(base, t.lstrip("/")))
+            if not os.path.exists(resolved):
+                broken.append((os.path.relpath(path, root), t))
+    return broken
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    broken = check(root)
+    for path, target in broken:
+        print(f"BROKEN LINK: {path} -> {target}")
+    if broken:
+        print(f"{len(broken)} broken intra-repo link(s)", file=sys.stderr)
+        return 1
+    n = sum(1 for _ in md_files(root))
+    print(f"check_links: OK ({n} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

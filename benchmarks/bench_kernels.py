@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.config import Dataflow, GemminiConfig
 from repro.core.tiling import plan_gemm
-from repro.kernels import ops
+from repro.core.context import ExecutionContext
 from repro.tune import measure as tmeasure
 
 # The serving-shaped GEMM the tuner targets: skinny M, wide N (a 128-token
@@ -50,9 +50,8 @@ def gemm_rows():
             plan = plan_gemm(cfg, m, n, k)
             a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
             b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
-            f = jax.jit(lambda a, b, cfg=cfg: ops.gemm(a, b, None, cfg=cfg,
-                                                       shift=8,
-                                                       backend="xla"))
+            ctx = ExecutionContext(cfg=cfg, backend="xla")
+            f = jax.jit(lambda a, b, ctx=ctx: ctx.gemm(a, b, None, shift=8))
             t = _time(f, a, b)
             rows.append(dict(
                 name=f"gemm_{df.value}_{m}x{n}x{k}", us=t["mean_us"],
@@ -195,9 +194,9 @@ def conv_rows():
     cfg = GemminiConfig()
     x = jnp.asarray(rng.integers(-64, 64, (n, h, w, ci)), jnp.int8)
     wt = jnp.asarray(rng.integers(-32, 32, (kh, kw, ci, co)), jnp.int8)
-    f = jax.jit(lambda x, wt: ops.conv2d(x, wt, None, cfg=cfg, stride=stride,
-                                         padding=pad, shift=6,
-                                         backend="xla"))
+    ctx = ExecutionContext(cfg=cfg, backend="xla")
+    f = jax.jit(lambda x, wt: ctx.conv2d(x, wt, None, stride=stride,
+                                         padding=pad, shift=6))
     t = _time(f, x, wt, iters=3)
     # Implicit-im2col schedule columns for the static default co_tile.
     ct = default_conv_schedule().effective(co).co_tile

@@ -3,14 +3,18 @@
 ``elaborate(cfg)`` is the analogue of running the Chisel generator: it
 produces a :class:`GemminiInstance` holding
 
-  * ``gemm`` / ``matmul`` / ``conv2d``: the engine entry points (dispatching
-    to the Pallas kernels on TPU or the XLA path for SPMD dry-runs),
+  * ``ctx``: the instance's :class:`repro.core.context.ExecutionContext` --
+    the mesh-aware dispatch value every op launch goes through (and what
+    the model zoo actually consumes; ``gemm``/``matmul``/``conv2d`` here
+    are convenience delegates),
   * ``header``: the "generated header file" of tiling parameters the software
     library compiles against (paper section 2.3),
   * the analytic DMA model used by the DSE.
 
-The model zoo (src/repro/models) takes a GemminiInstance so the paper's
-engine is the compute substrate of every assigned architecture.
+The model zoo (src/repro/models) takes a GemminiInstance *or* a bare
+ExecutionContext so the paper's engine is the compute substrate of every
+assigned architecture; ``with_mesh`` derives an instance whose kernels run
+inside ``shard_map`` with per-device shapes (the jit+GSPMD request path).
 """
 
 from __future__ import annotations
@@ -22,8 +26,8 @@ from typing import Any, Dict, Optional
 import jax.numpy as jnp
 
 from repro.core.config import Activation, Dataflow, GemminiConfig
+from repro.core.context import ExecutionContext
 from repro.core.tiling import TilePlan, plan_gemm
-from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,20 +37,29 @@ class GemminiInstance:
     cfg: GemminiConfig
     backend: str = "xla"   # "pallas" on real TPUs; "xla" for SPMD dry-runs;
                            # "interpret" in kernel tests.
+    mesh: Any = None       # partitioned dispatch: kernels run in shard_map
+    axis: Any = "data"     # mesh axis the batch-like dims shard over
 
-    # -- engine entry points ----------------------------------------------
+    # -- dispatch ----------------------------------------------------------
+    @functools.cached_property
+    def ctx(self) -> ExecutionContext:
+        """The instance's execution context (backend + tune policy +
+        partitioning in one frozen value); all op dispatch routes here."""
+        return ExecutionContext(cfg=self.cfg, backend=self.backend,
+                                mesh=self.mesh, axis=self.axis)
+
+    # -- engine entry points (delegates into ctx) --------------------------
     def gemm(self, a, b, d=None, *, dataflow: Optional[Dataflow] = None,
              shift: int = 0, activation: Activation = Activation.NONE,
              plan: Optional[TilePlan] = None):
-        return ops.gemm(a, b, d, cfg=self.cfg, plan=plan, dataflow=dataflow,
-                        shift=shift, activation=activation,
-                        backend=self.backend)
+        return self.ctx.gemm(a, b, d, plan=plan, dataflow=dataflow,
+                             shift=shift, activation=activation)
 
     def matmul(self, a, b, **kw):
-        return ops.matmul(a, b, cfg=self.cfg, backend=self.backend, **kw)
+        return self.ctx.matmul(a, b, **kw)
 
     def conv2d(self, x, w, b=None, **kw):
-        return ops.conv2d(x, w, b, cfg=self.cfg, backend=self.backend, **kw)
+        return self.ctx.conv2d(x, w, b, **kw)
 
     # -- the generated "header file" ---------------------------------------
     def header(self, m: int, n: int, k: int, *,
@@ -72,6 +85,14 @@ class GemminiInstance:
 
     def with_backend(self, backend: str) -> "GemminiInstance":
         return dataclasses.replace(self, backend=backend)
+
+    def with_mesh(self, mesh, axis: Any = "data") -> "GemminiInstance":
+        """Derive a mesh-aware instance: inside a jit+GSPMD step its
+        pallas/interpret kernels run under ``shard_map`` and resolve
+        schedules at PER-DEVICE shapes (warm with
+        ``tune.warm_model_plans(n_shards=...)``); the xla backend is
+        untouched (GSPMD already partitions it)."""
+        return dataclasses.replace(self, mesh=mesh, axis=axis)
 
 
 def default_engine_backend() -> str:

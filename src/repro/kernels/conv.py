@@ -15,7 +15,7 @@ VMEM across the tap stream (each tap contributes one (OH*OW, CI) x
 (CI, co_t) GEMM), and the epilogue runs on the last tap -- the OS dataflow
 of the GEMM engine, re-applied at the convolution level. ``co_tile`` is the
 kernel's tunable schedule parameter (``tune.schedules.ConvSchedule``);
-``ops.conv2d(fused=True)`` resolves it through the flag-gated tuner.
+``ctx.conv2d(fused=True)`` resolves it through the flag-gated tuner.
 
 Fusion audit note (ROADMAP): the epilogue is fused (the accumulator never
 round-trips HBM -- rescale/saturate/activation run in-kernel on the last

@@ -21,6 +21,16 @@ performs only 2-D dots:
 
 B/C group mapping (G groups shared GQA-style across H heads) is resolved in
 the BlockSpec index maps, so no repeat/gather materializes.
+
+Fusion audit (ROADMAP, mirroring the PR 2 conv/attention audit): the whole
+chunk-scan epilogue is fused in-kernel -- the (N, P) running state lives in
+a VMEM scratch across the sequential chunk axis (never HBM), the per-chunk
+output write already includes the carried-state term AND the ``d_skip``
+residual add (previously a post-kernel XLA pass that round-tripped y
+through HBM), and the final recurrent state is emitted as a second kernel
+output on the last chunk step (previously recomputed by a separate XLA
+pass over the full inputs). The only HBM traffic is the streamed inputs,
+one y write per chunk, and one (N, P) state write per (batch, head).
 """
 
 from __future__ import annotations
@@ -36,8 +46,13 @@ from jax.experimental.pallas import tpu as pltpu
 import repro.kernels as kernels_pkg
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+def _ssd_kernel(x_ref, dt_ref, a_ref, d_ref, b_ref, c_ref, y_ref, *rest,
                 nc: int, chunk: int):
+    # rest = (fs_ref, state_ref) when the caller wants the final state
+    # emitted, else (state_ref,): the fs output buffer only exists when
+    # requested (a pallas output cannot be dead-code-eliminated).
+    fs_ref = rest[0] if len(rest) == 2 else None
+    state_ref = rest[-1]
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
@@ -45,6 +60,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
         state_ref[...] = jnp.zeros_like(state_ref)
 
     a = a_ref[0]                                   # scalar: -exp(a_log)
+    d_skip = d_ref[0]                              # scalar skip weight
     dt = dt_ref[0, 0, 0].astype(jnp.float32)       # (Q,)
     x = x_ref[0, 0, 0].astype(jnp.float32)         # (Q, P)
     b = b_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
@@ -70,7 +86,9 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
     y_off = jax.lax.dot_general(c, state_ref[...], (((1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
     y = y + y_off * jnp.exp(seg)[:, None]
-    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    # fused epilogue: the d_skip residual rides the same f32 accumulator
+    # (zero when the model has no skip weight -- an exact no-op)
+    y_ref[0, 0, 0] = (y + d_skip * x).astype(y_ref.dtype)
 
     # state update: state = exp(seg_Q) * state + sum_j w_j B_j x_j^T
     decay_to_end = jnp.exp(seg[-1] - seg)          # (Q,)
@@ -78,6 +96,14 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
     ds = jax.lax.dot_general(wb, x, (((0,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)  # (N, P)
     state_ref[...] = state_ref[...] * jnp.exp(seg[-1]) + ds
+
+    if fs_ref is not None:
+        @pl.when(ci == nc - 1)
+        def _emit_state():
+            # prefill->decode handoff: the carried VMEM state is the final
+            # recurrent state (dt is zero on padded tail rows, so padding
+            # neither decays nor feeds it) -- no XLA recompute pass.
+            fs_ref[0, 0] = state_ref[...]
 
 
 def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
@@ -107,9 +133,20 @@ def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
     bt = jnp.moveaxis(b, 2, 1).reshape(bsz, g, nc, q, n)
     ct = jnp.moveaxis(c, 2, 1).reshape(bsz, g, nc, q, n)
     a = -jnp.exp(a_log.astype(jnp.float32))        # (H,)
+    # d_skip rides SMEM like a_log; zeros when absent (exact no-op in the
+    # fused f32 epilogue).
+    d = jnp.zeros((h,), jnp.float32) if d_skip is None \
+        else d_skip.astype(jnp.float32)
 
     kernel = functools.partial(_ssd_kernel, nc=nc, chunk=q)
-    y = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, 1, 1, q, p),
+                              lambda bb, hh, cc: (bb, hh, cc, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bsz, h, nc, q, p), x.dtype)]
+    if return_final_state:
+        out_specs.append(pl.BlockSpec((1, 1, n, p),
+                                      lambda bb, hh, cc: (bb, hh, 0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32))
+    out = pl.pallas_call(
         kernel,
         grid=(bsz, h, nc),
         in_specs=[
@@ -117,27 +154,23 @@ def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
             pl.BlockSpec((1, 1, 1, q), lambda bb, hh, cc: (bb, hh, cc, 0)),
             pl.BlockSpec((1,), lambda bb, hh, cc: (hh,),
                          memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1, 1, 1, q, n),
                          lambda bb, hh, cc: (bb, hh // hpg, cc, 0, 0)),
             pl.BlockSpec((1, 1, 1, q, n),
                          lambda bb, hh, cc: (bb, hh // hpg, cc, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, q, p),
-                               lambda bb, hh, cc: (bb, hh, cc, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, h, nc, q, p), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
         compiler_params=kernels_pkg.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(xt, dtt, a, bt, ct)
+    )(xt, dtt, a, d, bt, ct)
 
+    y = out[0]
     y = jnp.moveaxis(y.reshape(bsz, h, tt, p), 1, 2)[:, :t]   # (B,T,H,P)
-    if d_skip is not None:
-        y = (y.astype(jnp.float32) +
-             d_skip[None, None, :, None] * x[:, :t].astype(jnp.float32)
-             ).astype(x.dtype)
     if return_final_state:
-        from repro.models.ssm import _final_state
-        _, fs = _final_state(x[:, :t], dt[:, :t], a_log, b[:, :t], c[:, :t])
-        return y, fs
+        return y, out[1]
     return y

@@ -1,6 +1,14 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Kernel-layer op implementations behind :class:`ExecutionContext`.
 
-Every op takes a ``backend`` argument:
+The canonical dispatch API is ``repro.core.context.ExecutionContext``:
+callers hold one context value (cfg + backend + tune policy + optional
+mesh) and launch ``ctx.gemm(...)``, ``ctx.flash_attention(...)``, ....
+The ``*_impl`` functions here are the kernel-layer entries that registry
+dispatches to; they own shape legalization (zero-padding to the elaborated
+array dimension, exactly as the paper's library zero-pads operands,
+section 3.3), unpadding of results, and flag-gated schedule resolution.
+
+Backends (one per context, no longer per call):
 
 * ``"pallas"``    -- real TPU lowering (Mosaic). Target deployment path.
 * ``"interpret"`` -- pl.pallas_call(interpret=True): executes the kernel body
@@ -9,20 +17,30 @@ Every op takes a ``backend`` argument:
                      SPMD-partition; used by the 512-device multi-pod dry-run,
                      where Mosaic kernels cannot lower on the CPU backend.
 
-The wrappers own shape legalization (zero-padding to the elaborated array
-dimension, exactly as the paper's library zero-pads operands, section 3.3)
-and unpadding of results.
+Under ``ctx.mesh`` the context wraps these impls in ``shard_map``, so the
+shapes they see -- and the schedules ``_resolve_plan`` /
+``_resolve_attn_blocks`` fingerprint -- are PER-DEVICE shapes (what
+``tune.warm_model_plans(n_shards=...)`` warms), not the global logical
+shapes GSPMD would otherwise trace them with.
+
+DEPRECATED: the old public entries ``ops.gemm(..., backend=...)`` etc.
+remain for one release as shims that emit
+:class:`repro.core.context.GemminiDeprecationWarning` and forward to the
+impls; the test suite escalates that warning to an error, so no in-tree
+caller may use them.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import Activation, Dataflow, GemminiConfig
+from repro.core.context import GemminiDeprecationWarning
 from repro.core.tiling import TilePlan, plan_gemm
 from repro.kernels import gemm as gemm_kernel
 from repro.kernels import ref as ref_ops
@@ -42,11 +60,14 @@ def _pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
 
 def _resolve_plan(cfg: GemminiConfig, m: int, n: int, k: int, *,
                   dataflow: Optional[Dataflow], has_bias: bool) -> TilePlan:
-    """Plan for this GEMM, honoring the GEMMINI_TUNE flag.
+    """Plan for this GEMM, honoring the effective tune mode (the process
+    ``GEMMINI_TUNE`` flag, or the dispatching context's ``tune_mode``
+    override scoped around this call).
 
     ``tune_mode=off`` keeps the greedy analytic solver on the hot path with
     no tuner import at all; otherwise the tuner consults (and under ``full``
-    populates) the persistent plan cache.
+    populates) the persistent plan cache. Inside a mesh'd context this runs
+    under ``shard_map`` tracing, so ``m`` is the PER-DEVICE row count.
     """
     from repro.core import flags
     if flags.get("tune_mode") == "off":
@@ -56,16 +77,18 @@ def _resolve_plan(cfg: GemminiConfig, m: int, n: int, k: int, *,
                               has_bias=has_bias)
 
 
-def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
-         cfg: GemminiConfig, plan: Optional[TilePlan] = None,
-         dataflow: Optional[Dataflow] = None, shift: int = 0,
-         activation: Activation = Activation.NONE,
-         backend: Backend = "xla") -> jnp.ndarray:
+def gemm_impl(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None,
+              *, cfg: GemminiConfig, plan: Optional[TilePlan] = None,
+              dataflow: Optional[Dataflow] = None, shift: int = 0,
+              activation: Activation = Activation.NONE,
+              backend: Backend = "xla") -> jnp.ndarray:
     """C = act(round_shift(A @ B + D)) on the elaborated instance.
 
     a: (M, K), b: (K, N), d: broadcastable (1|M, N) bias at acc dtype.
+    Reached as ``ctx.gemm(a, b, d, ...)``; the context supplies ``cfg``
+    and ``backend`` and (under a mesh) shards M.
 
-    backend x GEMMINI_TUNE matrix (``plan`` given short-circuits both):
+    backend x tune-mode matrix (``plan`` given short-circuits both):
 
     ==========  ===========================================================
     backend     tune_mode=off            tune_mode=cached / full
@@ -73,12 +96,15 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
     xla         ``ref.gemm_ref``: plain XLA dot with the fused
                 accumulate/shift/saturate/activation epilogue. Plan-free
                 (no tiling), so the tune flag never enters -- this is the
-                SPMD-partitionable reference the dry-run lowers.
+                SPMD-partitionable reference the dry-run lowers (GSPMD,
+                not shard_map, partitions it; ``ctx.mesh`` is ignored).
     pallas /    greedy analytic            persistent plan cache keyed by
     interpret   ``plan_gemm`` solve,       the GEMM fingerprint; ``full``
                 no tuner import on         measures and populates misses,
                 the hot path               ``cached`` degrades misses to
-                                           the analytic solve
+                                           the analytic solve.
+                Under ``ctx.mesh`` both columns resolve at the PER-DEVICE
+                M (the shard_map-local shape).
     ==========  ===========================================================
     """
     m, k = a.shape
@@ -103,22 +129,25 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray] = None, *,
     return out[:m, :n]
 
 
-def matmul(a: jnp.ndarray, b: jnp.ndarray, *, cfg: GemminiConfig,
-           backend: Backend = "xla", **kw) -> jnp.ndarray:
+def matmul_impl(a: jnp.ndarray, b: jnp.ndarray, *, cfg: GemminiConfig,
+                backend: Backend = "xla", **kw) -> jnp.ndarray:
     """Batched-LHS matmul: a may be (..., K); collapsed to 2D for the
-    engine. Pure shape sugar over :func:`gemm` -- backend and tune-flag
-    behavior are exactly gemm's matrix with M = prod(leading dims)."""
+    engine. Pure shape sugar over :func:`gemm_impl` -- backend and
+    tune-mode behavior are exactly gemm's matrix with
+    M = prod(leading dims)."""
     lead = a.shape[:-1]
-    y = gemm(a.reshape(-1, a.shape[-1]), b, cfg=cfg, backend=backend, **kw)
+    y = gemm_impl(a.reshape(-1, a.shape[-1]), b, cfg=cfg, backend=backend,
+                  **kw)
     return y.reshape(*lead, b.shape[-1])
 
 
 # -- conv2d -------------------------------------------------------------------
 def _resolve_conv_co_tile(cfg: GemminiConfig, x, w, *, has_bias: bool,
                           stride: int, padding: int) -> int:
-    """co_tile for this conv, honoring the GEMMINI_TUNE flag (the conv twin
-    of ``_resolve_plan``): ``off`` keeps the kernel's static default with no
-    tuner import; otherwise the tuner consults the persistent cache."""
+    """co_tile for this conv, honoring the effective tune mode (the conv
+    twin of ``_resolve_plan``): ``off`` keeps the kernel's static default
+    with no tuner import; otherwise the tuner consults the persistent
+    cache."""
     from repro.core import flags
     if flags.get("tune_mode") == "off":
         # schedules is import-light (no measurement machinery): off mode
@@ -133,12 +162,13 @@ def _resolve_conv_co_tile(cfg: GemminiConfig, x, w, *, has_bias: bool,
         has_bias=has_bias).co_tile
 
 
-def conv2d(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
-           padding: int = 0, shift: int = 0,
-           activation: Activation = Activation.NONE,
-           backend: Backend = "xla", fused: bool = False,
-           co_tile: Optional[int] = None):
-    """Conv2D on the GEMM engine.
+def conv2d_impl(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
+                padding: int = 0, shift: int = 0,
+                activation: Activation = Activation.NONE,
+                backend: Backend = "xla", fused: bool = False,
+                co_tile: Optional[int] = None):
+    """Conv2D on the GEMM engine. Reached as ``ctx.conv2d(x, w, b, ...)``;
+    under a mesh the image batch N is sharded.
 
     backend x fused matrix:
 
@@ -158,7 +188,7 @@ def conv2d(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
 
     ``co_tile``: explicit output-channel tile for the fused kernel;
     ``None`` resolves it through the flag-gated tuner (static default 128
-    under ``GEMMINI_TUNE=off``).
+    under ``tune_mode=off``).
     """
     if backend == "xla":
         # fused=True intentionally routes here too (there is no separate
@@ -182,8 +212,9 @@ def conv2d(x, w, b=None, *, cfg: GemminiConfig, stride: int = 1,
     oh = (h + 2 * padding - kh) // stride + 1
     ow = (wd + 2 * padding - kw) // stride + 1
     a = ref_ops.im2col(x, kh, kw, stride, padding)   # host-side im2col
-    y = gemm(a, w.reshape(-1, co), None if b is None else b[None, :],
-             cfg=cfg, shift=shift, activation=activation, backend=backend)
+    y = gemm_impl(a, w.reshape(-1, co), None if b is None else b[None, :],
+                  cfg=cfg, shift=shift, activation=activation,
+                  backend=backend)
     return y.reshape(n, oh, ow, co)
 
 
@@ -204,8 +235,10 @@ def _attn_engine_cfg() -> GemminiConfig:
 
 def _resolve_attn_blocks(cfg: Optional[GemminiConfig], q, k, *, causal: bool,
                          window: Optional[int]) -> "tuple[int, int]":
-    """(block_q, block_k) for this attention, honoring the GEMMINI_TUNE
-    flag (the attention twin of ``_resolve_plan``)."""
+    """(block_q, block_k) for this attention, honoring the effective tune
+    mode (the attention twin of ``_resolve_plan``). Inside a mesh'd
+    context this runs under ``shard_map`` tracing, so the fingerprinted
+    batch is the PER-DEVICE batch."""
     from repro.core import flags
     if flags.get("tune_mode") == "off":
         from repro.tune.schedules import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q
@@ -219,39 +252,43 @@ def _resolve_attn_blocks(cfg: Optional[GemminiConfig], q, k, *, causal: bool,
     return sched.block_q, sched.block_k
 
 
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None,
-                    softcap: Optional[float] = None,
-                    scale: Optional[float] = None,
-                    block_q: Optional[int] = None,
-                    block_k: Optional[int] = None,
-                    cfg: Optional[GemminiConfig] = None,
-                    backend: Backend = "xla"):
+def flash_attention_impl(q, k, v, *, causal: bool = True,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None,
+                         block_q: Optional[int] = None,
+                         block_k: Optional[int] = None,
+                         cfg: Optional[GemminiConfig] = None,
+                         backend: Backend = "xla"):
     """Blockwise-softmax attention. See kernels/attention.py for the TPU
-    kernel.
+    kernel. Reached as ``ctx.flash_attention(q, k, v, ...)``; under a
+    mesh the batch B is sharded.
 
     ``block_q``/``block_k``: explicit blocking for the Pallas kernel;
     ``None`` resolves the schedule through the flag-gated tuner (static
-    512/512 defaults under ``GEMMINI_TUNE=off``). ``cfg`` supplies the VMEM
+    512/512 defaults under ``tune_mode=off``). ``cfg`` supplies the VMEM
     budgets for schedule legality/fingerprinting (a bf16 engine default is
-    used when omitted).
+    used when omitted -- the value every launcher elaborates with, so
+    context-supplied and defaulted cfgs fingerprint identically today).
 
-    backend x GEMMINI_TUNE matrix:
+    backend x tune-mode matrix:
 
     ==========  ===========================================================
     xla         ``blockwise_attention_xla``: online-softmax scan over
                 1024-key blocks (clamped to a 128-multiple of Tk), exact
                 oracle numerics, differentiable (the train path), ignores
-                block_q/block_k/cfg and the tune flag entirely.
+                block_q/block_k/cfg and the tune mode entirely.
     pallas /    off: static 512/512        cached/full: ``AttnSchedule``
     interpret   blocks                     (block_q, block_k) from the
                                            schema-v2 plan cache, measured
-                                           under ``full``
+                                           under ``full``; fingerprinted
+                                           at the per-device batch when
+                                           the context carries a mesh
     ==========  ===========================================================
 
     A *traced* window (gemma-style mixed local:global layers scanned as
-    data) cannot parameterize a Mosaic kernel; callers route those to xla
-    (see ``models.attention._route_window``).
+    data) cannot parameterize a Mosaic kernel; callers route those to an
+    xla-backend context (see ``models.attention._route_window``).
     """
     if backend == "xla":
         from repro.models.attention import blockwise_attention_xla
@@ -269,14 +306,16 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 
 # -- paged attention ---------------------------------------------------------
-def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
-                    window: Optional[int] = None,
-                    softcap: Optional[float] = None,
-                    scale: Optional[float] = None,
-                    backend: Backend = "xla"):
+def paged_attention_impl(q, k_pool, v_pool, block_tables, lengths, *,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None,
+                         backend: Backend = "xla"):
     """Single-token decode over a paged KV cache (the serving engine's hot
     loop). q: (B, 1, H, D); k_pool/v_pool: (KVH, NP, page, D); block_tables:
     (B, MP) int32; lengths: (B,) int32 live tokens incl. the current one.
+    Reached as ``ctx.paged_attention(...)``; under a mesh the decode slots
+    (B) are sharded against replicated pools.
 
     The *page size* is the tuned schedule here -- it is baked into the pool
     shape when the serving engine sizes its cache arena through
@@ -310,21 +349,36 @@ def paged_attention(q, k_pool, v_pool, block_tables, lengths, *,
         softcap=softcap, scale=scale, interpret=(backend == "interpret"))
 
 
-def paged_prefill_attention(q, k_pool, v_pool, block_table, start, *,
-                            window: Optional[int] = None,
-                            softcap: Optional[float] = None,
-                            scale: Optional[float] = None,
-                            backend: Backend = "xla"):
+def paged_prefill_attention_impl(q, k_pool, v_pool, block_table, start, *,
+                                 window: Optional[int] = None,
+                                 softcap: Optional[float] = None,
+                                 scale: Optional[float] = None,
+                                 kv_pages: Optional[int] = None,
+                                 backend: Backend = "xla"):
     """Chunked-prefill attention over a paged KV cache: one request's fresh
     chunk of queries (q: (1, T, H, D), logical positions [start, start+T))
     attends cache pages + the chunk itself, all through the request's block
     table (``block_table``: (MP,) int32). The chunk's own KV must already
     be scattered into the pools (write first, then attend -- the decode
     discipline); ``start`` may be a traced scalar, so one compile bucket
-    serves every chunk offset of a given chunk length.
+    serves every chunk offset of a given chunk length. Reached as
+    ``ctx.paged_prefill_attention(...)``; per-request (B == 1), so a mesh
+    never shards it.
+
+    ``kv_pages``: STATIC upper bound on the table prefix that can hold
+    live keys -- the admission-time bound the serving engine derives from
+    the request's full (padded) prompt length. The table is sliced to its
+    first ``kv_pages`` entries before either backend runs, so the xla
+    gather twin contracts ``kv_pages * page`` keys instead of the full
+    table capacity ``MP * page`` (dead-key MACs cut for short prompts on
+    long-context engines) and the kernel grid walks ``kv_pages`` logical
+    pages. The caller must guarantee ``kv_pages * page >= start + T`` for
+    every chunk of the request (the engine uses the whole-prompt padded
+    footprint, which bounds every chunk frontier). ``None`` keeps the full
+    table.
 
     backend matrix (no tunable flags enter here; the page size was baked
-    into the pool shape at engine startup, see :func:`paged_attention`):
+    into the pool shape at engine startup, see :func:`paged_attention_impl`):
 
     ==========  ===========================================================
     xla         explicit gather + ``blockwise_attention_xla`` with the same
@@ -338,6 +392,8 @@ def paged_prefill_attention(q, k_pool, v_pool, block_table, start, *,
                 beyond the causal frontier are clamp-elided and skipped.
     ==========  ===========================================================
     """
+    if kv_pages is not None and kv_pages < block_table.shape[0]:
+        block_table = block_table[:kv_pages]
     if backend == "xla":
         from repro.models.attention import (PagedKVCache,
                                             paged_prefill_attention_xla)
@@ -352,9 +408,16 @@ def paged_prefill_attention(q, k_pool, v_pool, block_table, start, *,
 
 
 # -- mamba2 ssd ---------------------------------------------------------------
-def ssd(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
-        backend: Backend = "xla"):
+def ssd_impl(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
+             initial_state=None, return_final_state: bool = False,
+             backend: Backend = "xla"):
     """Mamba-2 SSD mixer. See kernels/mamba2.py for the chunked TPU kernel.
+    Reached as ``ctx.ssd(...)``; under a mesh the batch B is sharded.
+
+    ``initial_state``: (B, H, N, P) f32 recurrent state carried in from a
+    previous segment (chunked prefill resumes here); ``return_final_state``
+    additionally returns the (B, H, N, P) post-sequence state (the
+    prefill->decode handoff).
 
     backend matrix (no tunable flags; ``chunk`` is the SSD decomposition
     granularity, a model hyperparameter rather than a tuned schedule):
@@ -365,13 +428,54 @@ def ssd(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
                 serving/training reference (supports resumable
                 ``initial_state`` for chunked prefill).
     pallas /    ``kernels/mamba2.ssd``: the same decomposition with the
-    interpret   intra-chunk GEMMs lowered as Pallas kernels; fusion of the
-                chunk-scan epilogue is an open ROADMAP item.
+    interpret   intra-chunk GEMMs lowered as Pallas kernels and the whole
+                chunk-scan epilogue fused in-kernel (d_skip add + final
+                state emitted from the VMEM state scratch -- no
+                accumulator HBM round-trip). A non-None ``initial_state``
+                demotes to the xla path: the kernel's VMEM scan always
+                starts from zeros (resume is the serving reference's job,
+                like the traced-window demotion in attention).
     ==========  ===========================================================
     """
-    if backend == "xla":
-        from repro.models.ssm import ssd_chunked_xla
-        return ssd_chunked_xla(x, dt, a_log, b, c, d_skip=d_skip, chunk=chunk)
+    if backend == "xla" or initial_state is not None:
+        from repro.models.ssm import _final_state, ssd_chunked_xla
+        y = ssd_chunked_xla(x, dt, a_log, b, c, d_skip=d_skip, chunk=chunk,
+                            initial_state=initial_state)
+        if not return_final_state:
+            return y
+        _, fs = _final_state(x, dt, a_log, b, c, initial_state=initial_state)
+        return y, fs
     from repro.kernels import mamba2 as m2
     return m2.ssd(x, dt, a_log, b, c, d_skip=d_skip, chunk=chunk,
-                  interpret=(backend == "interpret"))
+                  interpret=(backend == "interpret"),
+                  return_final_state=return_final_state)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims (one release): the old per-call backend= API
+# ---------------------------------------------------------------------------
+def _deprecated_shim(name: str, impl):
+    @functools.wraps(impl)
+    def shim(*args, **kw):
+        warnings.warn(
+            f"ops.{name}(..., backend=...) is deprecated; dispatch through "
+            f"repro.core.context.ExecutionContext (ctx.{name})",
+            GemminiDeprecationWarning, stacklevel=2)
+        return impl(*args, **kw)
+
+    shim.__name__ = name
+    shim.__qualname__ = name
+    shim.__doc__ = (f"DEPRECATED shim for :func:`{impl.__name__}` -- use "
+                    f"``ExecutionContext.{name}`` (repro.core.context).\n\n"
+                    + (impl.__doc__ or ""))
+    return shim
+
+
+gemm = _deprecated_shim("gemm", gemm_impl)
+matmul = _deprecated_shim("matmul", matmul_impl)
+conv2d = _deprecated_shim("conv2d", conv2d_impl)
+flash_attention = _deprecated_shim("flash_attention", flash_attention_impl)
+paged_attention = _deprecated_shim("paged_attention", paged_attention_impl)
+paged_prefill_attention = _deprecated_shim("paged_prefill_attention",
+                                           paged_prefill_attention_impl)
+ssd = _deprecated_shim("ssd", ssd_impl)

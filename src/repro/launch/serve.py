@@ -26,14 +26,18 @@ from repro.serving import ServingEngine
 def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
           temperature: float = 1.0, seed: int = 0, eos_id: int = -1,
           policy: str = "continuous", max_slots: int = 0,
-          page_size: int = 0, prefill_chunk: int = 0):
+          page_size: int = 0, prefill_chunk: int = 0,
+          backend: str = "", admission_policy: str = "fifo"):
     """Serve ``batch`` random-prompt requests; returns the old static-loop
     schema (tokens (B, gen[, n_q]), t_prefill, t_decode, tok_per_s) plus
     the engine's full telemetry under ``report``.
 
     ``prefill_chunk``: chunked-prefill granularity in cache positions --
     0 = one page (the default: page-multiple chunks keep chunk boundaries
-    page-aligned), negative = disabled (single-pass prefill)."""
+    page-aligned), negative = disabled (single-pass prefill).
+    ``backend``: the engine ``ExecutionContext`` backend (empty = host
+    default: pallas on TPU, xla elsewhere); ``admission_policy``:
+    fifo | priority | deadline (scheduler admission order)."""
     rng = np.random.default_rng(seed)
     max_slots = max_slots or min(batch, 8)
     max_context = prompt_len + model_cfg.n_meta_tokens + gen_len + 64
@@ -41,7 +45,8 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
         model_cfg, max_slots=max_slots, max_context=max_context,
         page_size=page_size or None, seed=seed, temperature=temperature,
         policy=policy, warm_prompt_lens=[prompt_len],
-        prefill_chunk=None if prefill_chunk < 0 else prefill_chunk)
+        prefill_chunk=None if prefill_chunk < 0 else prefill_chunk,
+        backend=backend or None, admission_policy=admission_policy)
     if engine.warm_stats is not None:
         from repro import tune
         s = engine.warm_stats
@@ -99,6 +104,14 @@ def main(argv=None):
                          "chunking (single-pass prefill)")
     ap.add_argument("--tune", choices=flags.TUNE_MODES, default=None,
                     help="tile-plan autotuning mode (default: $GEMMINI_TUNE)")
+    ap.add_argument("--backend", choices=("xla", "pallas", "interpret"),
+                    default="",
+                    help="engine ExecutionContext backend (default: pallas "
+                         "on TPU hosts, xla elsewhere)")
+    ap.add_argument("--admission", choices=("fifo", "priority", "deadline"),
+                    default="fifo",
+                    help="scheduler admission order (priority/deadline use "
+                         "Request.priority / Request.deadline)")
     args = ap.parse_args(argv)
     # Always re-set: set_flag validates, so a typo'd $GEMMINI_TUNE fails at
     # startup instead of (maybe never) at the first plan resolution.
@@ -108,7 +121,8 @@ def main(argv=None):
     out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                 gen_len=args.gen, temperature=args.temperature,
                 policy=args.policy, max_slots=args.slots,
-                page_size=args.page_size, prefill_chunk=args.prefill_chunk)
+                page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+                backend=args.backend, admission_policy=args.admission)
     s = out["report"]["summary"]
     print(f"[serve] {args.policy}: {int(s['requests'])} reqs, "
           f"{int(s['new_tokens'])} tokens in {s['wall_s']*1e3:.0f}ms "

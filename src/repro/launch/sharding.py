@@ -140,9 +140,17 @@ def opt_state_specs(params_shape, mesh) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 # activation / batch / cache rules
 # ---------------------------------------------------------------------------
-def batch_spec(mesh) -> P:
+def data_axis(mesh):
+    """The mesh axis (name or tuple of names) batch-like dims shard over:
+    what an ``ExecutionContext``/``GemminiInstance.with_mesh`` partitions
+    its kernels' leading dims by (the same axes every batch rule below
+    uses)."""
     dp = mesh_lib.data_axes(mesh)
-    return P(dp if len(dp) > 1 else dp[0])
+    return dp if len(dp) > 1 else dp[0]
+
+
+def batch_spec(mesh) -> P:
+    return P(data_axis(mesh))
 
 
 def tokens_spec(mesh, batch: int, ndim: int = 2) -> P:

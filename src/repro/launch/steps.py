@@ -4,6 +4,13 @@ These are the functions the launcher jits and the dry-run lowers: one
 train_step (fwd + bwd + AdamW/ZeRO-1 update) and one serve_step (single-token
 decode against a sharded KV/SSM cache). Grad accumulation and the elastic /
 fault-tolerance wrappers live in launch/train.py and runtime/.
+
+``engine`` throughout is the dispatch value (an elaborated
+:class:`GemminiInstance` or a bare
+:class:`repro.core.context.ExecutionContext`); give it a mesh
+(``with_mesh``) and the pallas/interpret kernels inside these jitted steps
+run under shard_map with per-device shapes, which is what makes tuned
+Pallas kernels legal in a GSPMD-partitioned step.
 """
 
 from __future__ import annotations

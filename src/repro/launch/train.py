@@ -82,9 +82,15 @@ class RunResult:
 
 def train_once(args, model_cfg, pods: int) -> RunResult:
     mesh = pick_mesh(args.tp)
+    # Mesh-aware dispatch (ExecutionContext under the hood): on a pallas/
+    # interpret engine every op runs in shard_map and resolves its tuned
+    # schedule at the PER-DEVICE shapes -- the same shapes the shard-aware
+    # warm below populates. The xla backend (CPU CI) ignores the mesh and
+    # stays on the GSPMD-partitioned plan-free reference.
     engine = elaborate(GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
                                      output_dtype="bf16"),
-                       default_engine_backend())
+                       default_engine_backend()
+                       ).with_mesh(mesh, axis=shd.data_axis(mesh))
     opt_cfg = adamw.AdamWConfig(lr=args.lr)
     batch, seq = args.batch, args.seq
 
@@ -94,7 +100,7 @@ def train_once(args, model_cfg, pods: int) -> RunResult:
         # over the mesh's data axis, so each device launches the per-device
         # M -- warming the global M would populate entries no kernel hits.
         from repro import tune
-        data_shards = int(dict(mesh.shape).get("data", 1))
+        data_shards = engine.ctx.n_shards
         stats = tune.warm_model_plans(engine.cfg, model_cfg, batch, seq,
                                       include_decode=False,
                                       n_shards=data_shards)
@@ -155,36 +161,44 @@ def train_once(args, model_cfg, pods: int) -> RunResult:
         detector = StragglerDetector()
         losses, stragglers = [], 0
         step = start_step
-        while step < args.steps:
-            if args.fail_at is not None and step == args.fail_at \
-                    and not os.environ.get("_REPRO_FAILED"):
-                os.environ["_REPRO_FAILED"] = "1"
-                raise RuntimeError(f"injected failure at step {step}")
-            t0 = time.time()
-            batch_dict = make_global_batch(gen, step, tok_sharding)
-            if model_cfg.modality == "vlm":
-                batch_dict = make_global_batch(
-                    gen, step, tok_sharding,
-                    extra_embed_dim=model_cfg.d_model,
-                    extra_tokens=steps_lib.N_VLM_TOKENS)
-            state, metrics = train_step(state, batch_dict)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            if detector.observe(dt):
-                stragglers += 1
-                print(f"[train] step {step}: straggler ({dt*1e3:.0f}ms)")
-            losses.append(loss)
-            if step % args.log_every == 0:
-                print(f"[train] step {step:5d} loss={loss:.4f} "
-                      f"({dt*1e3:.0f}ms)")
-            step += 1
-            if mgr is not None and step % args.ckpt_every == 0:
-                mgr.save_async(step, state,
-                               extra_meta={"arch": model_cfg.name})
-        if mgr is not None:
-            mgr.save(step, state, extra_meta={"arch": model_cfg.name})
-        return RunResult(step, losses[-1] if losses else float("nan"),
-                         losses, stragglers)
+        try:
+            while step < args.steps:
+                if args.fail_at is not None and step == args.fail_at \
+                        and not os.environ.get("_REPRO_FAILED"):
+                    os.environ["_REPRO_FAILED"] = "1"
+                    raise RuntimeError(f"injected failure at step {step}")
+                t0 = time.time()
+                batch_dict = make_global_batch(gen, step, tok_sharding)
+                if model_cfg.modality == "vlm":
+                    batch_dict = make_global_batch(
+                        gen, step, tok_sharding,
+                        extra_embed_dim=model_cfg.d_model,
+                        extra_tokens=steps_lib.N_VLM_TOKENS)
+                state, metrics = train_step(state, batch_dict)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                if detector.observe(dt):
+                    stragglers += 1
+                    print(f"[train] step {step}: straggler ({dt*1e3:.0f}ms)")
+                losses.append(loss)
+                if step % args.log_every == 0:
+                    print(f"[train] step {step:5d} loss={loss:.4f} "
+                          f"({dt*1e3:.0f}ms)")
+                step += 1
+                if mgr is not None and step % args.ckpt_every == 0:
+                    mgr.save_async(step, state,
+                                   extra_meta={"arch": model_cfg.name})
+            if mgr is not None:
+                mgr.save(step, state, extra_meta={"arch": model_cfg.name})
+            return RunResult(step, losses[-1] if losses else float("nan"),
+                             losses, stragglers)
+        finally:
+            # Flush any in-flight async checkpoint before this attempt
+            # unwinds: an in-process restart (run_with_restarts) builds a
+            # fresh manager and calls restore_latest immediately -- racing
+            # the daemon writer would make it restart from step 0.
+            if mgr is not None:
+                mgr.wait()
 
 
 def main(argv=None):

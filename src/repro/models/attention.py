@@ -408,67 +408,69 @@ def paged_prefill_attention_xla(q, cache: PagedKVCache, start, *,
 # ---------------------------------------------------------------------------
 # routed attention op (the tuned-schedule entry)
 # ---------------------------------------------------------------------------
-def _route_window(engine: Optional[GemminiInstance], window):
+def _route_window(engine, window):
     """Shared routing policy for the op-layer attention entries: returns
-    (window, backend). A static int window is normalized (0 encodes
-    "global" -> None) and keeps the engine's backend; a *traced* per-layer
-    scalar (gemma-style local:global interleave scanned as data, 0/2^30
-    encoding) cannot parameterize a Mosaic kernel, so it demotes the call
-    to the XLA path, whose mask arithmetic handles traced scalars."""
-    backend = engine.backend if engine is not None else "xla"
+    (window, ctx). ``engine`` may be a :class:`GemminiInstance`, a bare
+    :class:`ExecutionContext`, or None (the XLA reference context). A
+    static int window is normalized (0 encodes "global" -> None) and keeps
+    the engine's context; a *traced* per-layer scalar (gemma-style
+    local:global interleave scanned as data, 0/2^30 encoding) cannot
+    parameterize a Mosaic kernel, so it demotes the context to the XLA
+    backend, whose mask arithmetic handles traced scalars."""
+    from repro.core import context
+    ctx = context.as_context(engine)
     static_window = (window is None or isinstance(window, (int, np.integer)))
     if static_window and window is not None:
         window = int(window) or None
-    if not static_window:
-        backend = "xla"
-    return window, backend
+    if not static_window and ctx.backend != "xla":
+        ctx = ctx.with_backend("xla")
+    return window, ctx
 
 
-def attn_op(engine: Optional[GemminiInstance], q, k, v, *,
+def attn_op(engine, q, k, v, *,
             causal: bool = True, window=None, softcap: Optional[float] = None,
             scale: Optional[float] = None):
-    """Model-zoo attention, routed through ``ops.flash_attention`` so the
-    engine's backend -- not the call site -- picks the lowering, and the
-    Pallas path resolves its tuned ``(block_q, block_k)`` schedule (the
-    ROADMAP "attn_apply uses the XLA blockwise path everywhere" gap).
+    """Model-zoo attention, routed through ``ctx.flash_attention`` so the
+    engine's context -- not the call site -- picks the lowering, and the
+    Pallas path resolves its tuned ``(block_q, block_k)`` schedule (under
+    a mesh'd context: inside shard_map, at per-device shapes).
     ``transformer`` passes a static window whenever the model's layers are
     window-uniform; see :func:`_route_window` for the traced-window rule.
     """
-    from repro.kernels import ops
-    window, backend = _route_window(engine, window)
-    return ops.flash_attention(q, k, v, causal=causal, window=window,
-                               softcap=softcap, scale=scale, backend=backend)
+    window, ctx = _route_window(engine, window)
+    return ctx.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale)
 
 
-def paged_attn_op(engine: Optional[GemminiInstance], q,
-                  cache: PagedKVCache, *, window=None,
+def paged_attn_op(engine, q, cache: PagedKVCache, *, window=None,
                   softcap: Optional[float] = None,
                   scale: Optional[float] = None):
     """Paged-decode twin of :func:`attn_op`: routes through
-    ``ops.paged_attention`` (in-kernel gather on pallas/interpret engines,
+    ``ctx.paged_attention`` (in-kernel gather on pallas/interpret engines,
     explicit gather on xla); a traced per-layer window falls back to the
     gather path, whose masking handles traced scalars."""
-    from repro.kernels import ops
-    window, backend = _route_window(engine, window)
-    return ops.paged_attention(q, cache.k, cache.v, cache.tables,
+    window, ctx = _route_window(engine, window)
+    return ctx.paged_attention(q, cache.k, cache.v, cache.tables,
                                cache.lengths, window=window, softcap=softcap,
-                               scale=scale, backend=backend)
+                               scale=scale)
 
 
-def paged_prefill_attn_op(engine: Optional[GemminiInstance], q,
-                          cache: PagedKVCache, start, *, window=None,
-                          softcap: Optional[float] = None,
-                          scale: Optional[float] = None):
+def paged_prefill_attn_op(engine, q, cache: PagedKVCache, start, *,
+                          window=None, softcap: Optional[float] = None,
+                          scale: Optional[float] = None,
+                          kv_pages: Optional[int] = None):
     """Chunked-prefill twin of :func:`paged_attn_op`: the fresh chunk's
     queries attend cache pages + the chunk itself through
-    ``ops.paged_prefill_attention`` (in-kernel gather on pallas/interpret
+    ``ctx.paged_prefill_attention`` (in-kernel gather on pallas/interpret
     engines, explicit gather on xla); a traced per-layer window falls back
-    to the gather path, whose masking handles traced scalars."""
-    from repro.kernels import ops
-    window, backend = _route_window(engine, window)
-    return ops.paged_prefill_attention(
+    to the gather path, whose masking handles traced scalars. ``kv_pages``
+    is the engine's STATIC admission-time bound on live table entries
+    (dead-key MAC elision for short prompts; see
+    ``ops.paged_prefill_attention_impl``)."""
+    window, ctx = _route_window(engine, window)
+    return ctx.paged_prefill_attention(
         q, cache.k, cache.v, cache.tables[0], start, window=window,
-        softcap=softcap, scale=scale, backend=backend)
+        softcap=softcap, scale=scale, kv_pages=kv_pages)
 
 
 # ---------------------------------------------------------------------------

@@ -78,9 +78,15 @@ def rope(x: jnp.ndarray, positions: jnp.ndarray, *, base: float = 10000.0,
 # ---------------------------------------------------------------------------
 # engine-backed projections
 # ---------------------------------------------------------------------------
-def project(engine: GemminiInstance, x: jnp.ndarray, w: jnp.ndarray,
+def project(engine, x: jnp.ndarray, w: jnp.ndarray,
             b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """y = x @ w (+ b) on the Gemmini engine; x: (..., d_in), w: (d_in, d_out)."""
+    """y = x @ w (+ b) on the Gemmini engine; x: (..., d_in), w: (d_in, d_out).
+
+    ``engine`` is the dispatch value: an elaborated
+    :class:`GemminiInstance` or a bare
+    :class:`repro.core.context.ExecutionContext` -- both expose
+    ``backend`` and ``matmul``, and a mesh'd context runs the engine
+    kernel in shard_map at per-device M."""
     if engine.backend == "xla":
         # Float LM path: keep XLA free to fuse/partition; numerics equal to
         # the engine's float datapath (fp32 accumulate).

@@ -123,8 +123,12 @@ def ssd_decode_step(state, x_t, dt_t, a_log, b_t, c_t, *, d_skip=None):
 # full Mamba-2 mixer (in_proj -> conv -> SSD -> gate -> out_proj)
 # ---------------------------------------------------------------------------
 class SSMCache(NamedTuple):
-    conv: jnp.ndarray     # (B, K-1, conv_dim)
-    state: jnp.ndarray    # (B, H, N, P)
+    conv: jnp.ndarray              # (B, K-1, conv_dim)
+    # (B, H, N, P) carried recurrent state, or None for a FRESH prefill
+    # (semantically zeros; the None spelling lets dispatch route fresh
+    # prefills to the SSD kernel, whose VMEM scan starts from zeros,
+    # while a resumed chunk's array state demotes to the xla reference).
+    state: Optional[jnp.ndarray]
 
 
 def mamba2_init(key, d_model: int, *, d_inner: int, n_heads: int,
@@ -183,25 +187,34 @@ def mamba2_apply(engine: GemminiInstance, p: Params, u: jnp.ndarray, *,
     ch = c.reshape(bsz, t, n_groups, d_state)
 
     if cache is not None and t == 1:
+        st0 = cache.state
+        if st0 is None:                      # 1-token fresh prefill
+            st0 = jnp.zeros((bsz, n_heads, d_state, p_dim), jnp.float32)
         y, new_state = ssd_decode_step(
-            cache.state, xh[:, 0], dt[:, 0], p["a_log"], bh[:, 0], ch[:, 0],
+            st0, xh[:, 0], dt[:, 0], p["a_log"], bh[:, 0], ch[:, 0],
             d_skip=p["d_skip"])
         y = y[:, None]                                           # (B,1,H,P)
         new_cache = SSMCache(new_conv, new_state)
+    elif cache is not None:
+        # Prefill (inference): route through the context so pallas/
+        # interpret engines run the chunked SSD kernel with its FUSED
+        # epilogue -- d_skip add and the prefill->decode handoff state
+        # both emitted in-kernel (no XLA recompute pass). A continuation
+        # chunk (cache.state carried in as an array) demotes to the xla
+        # reference inside ssd_impl (the kernel's VMEM scan starts from
+        # zeros); a fresh prefill spells its zero state as None.
+        from repro.core import context
+        y, final_state = context.as_context(engine).ssd(
+            xh, dt, p["a_log"], bh, ch, d_skip=p["d_skip"], chunk=chunk,
+            initial_state=cache.state, return_final_state=True)
+        new_cache = SSMCache(new_conv, final_state)
     else:
-        init = cache.state if cache is not None else None
+        # Train/forward route: the SSD kernel has no VJP, so this stays on
+        # the differentiable XLA reference on every backend (the same rule
+        # transformer.forward applies to attention).
         y = ssd_chunked_xla(xh, dt, p["a_log"], bh, ch,
-                            d_skip=p["d_skip"], chunk=chunk,
-                            initial_state=init)
-        if cache is not None:
-            # prefill: recompute final state for subsequent decode (or the
-            # next chunk -- chunked prefill resumes from cache.state, which
-            # a fresh request's caller zeroes)
-            _, final_state = _final_state(xh, dt, p["a_log"], bh, ch,
-                                          initial_state=init)
-            new_cache = SSMCache(new_conv, final_state)
-        else:
-            new_cache = None
+                            d_skip=p["d_skip"], chunk=chunk)
+        new_cache = None
 
     y = y.reshape(bsz, t, d_inner)
     y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),

@@ -200,7 +200,7 @@ def _block_init(key, cfg: ModelConfig) -> Params:
 # Param names that are engine-backed (d_in, d_out) projection weights.
 # MoE expert stacks (4D: layers x experts x d x d_ff) are excluded: their
 # per-expert GEMMs run through einsum in models/moe.py, not through
-# ops.gemm, so they never resolve a tile plan. (The MoE router and shared
+# ctx.gemm, so they never resolve a tile plan. (The MoE router and shared
 # MLP do route through the engine and are covered.)
 _PROJ_KEYS = frozenset({"wq", "wk", "wv", "wo", "wi", "wg", "router",
                         "in_proj", "out_proj", "unembed", "heads"})
@@ -318,7 +318,7 @@ def _maybe_qknorm(cfg, bp, q, k):
 
 def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
                  cache=None, cache_pos=None, window_static=None,
-                 prefill_start=None):
+                 prefill_start=None, kv_pages=None):
     """window: traced scalar, 0 = global; window_static: the same value as
     a python int when the model is window-uniform (None = unavailable, use
     the traced scalar). Returns (out, new_cache). ``cache`` may be a dense
@@ -326,7 +326,9 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
     :class:`attn.PagedKVCache` (the continuous-batching engine).
     ``prefill_start``: traced scalar cache position of a chunked-prefill
     continuation chunk's first token (None = not a continuation chunk);
-    selects the scatter-at-offset + cache-and-chunk gather attention path."""
+    selects the scatter-at-offset + cache-and-chunk gather attention path.
+    ``kv_pages``: static bound on live block-table entries for that path
+    (the serving engine's admission-time prompt footprint)."""
     b, t, _ = h.shape
     p = bp["attn"]
     q = layers.project(engine, h, p["wq"], p.get("bq")).reshape(
@@ -355,7 +357,8 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
                                               start=prefill_start)
             o = attn.paged_prefill_attn_op(engine, q, cache, prefill_start,
                                            window=win_arg,
-                                           softcap=cfg.attn_softcap)
+                                           softcap=cfg.attn_softcap,
+                                           kv_pages=kv_pages)
         elif t == 1:
             cache = attn.paged_update_decode(cache, k, v, cache.active,
                                              cache.trash)
@@ -390,7 +393,7 @@ def _attn_branch(engine, cfg, bp, h, positions, window, rope_base,
 def _block_apply(engine, cfg: ModelConfig, bp: Params, h: jnp.ndarray,
                  positions, window, rope_base,
                  kv_cache=None, ssm_cache=None, cache_pos=None,
-                 window_static=None, prefill_start=None):
+                 window_static=None, prefill_start=None, kv_pages=None):
     """One decoder block. Returns (h, kv_cache, ssm_cache)."""
     x = layers.rmsnorm(h, bp["ln1"])
     outs = []
@@ -398,7 +401,8 @@ def _block_apply(engine, cfg: ModelConfig, bp: Params, h: jnp.ndarray,
         a_out, kv_cache = _attn_branch(engine, cfg, bp, x, positions, window,
                                        rope_base, kv_cache, cache_pos,
                                        window_static=window_static,
-                                       prefill_start=prefill_start)
+                                       prefill_start=prefill_start,
+                                       kv_pages=kv_pages)
         outs.append(("attn", a_out))
     if cfg.has_ssm:
         s_out, ssm_cache = ssm.mamba2_apply(
@@ -613,7 +617,10 @@ def prefill_into_cache(engine: GemminiInstance, params: Params,
     def body(h, xs):
         bp, win, base, kv_k, kv_v, conv, st = xs
         kvc = attn.KVCache(kv_k, kv_v) if kv_k is not None else None
-        ssc = ssm.SSMCache(conv, st) if conv is not None else None
+        # state=None: a FRESH whole-prompt prefill (init_decode_state's
+        # zeros carry no history) -- routes the SSD to the fused kernel
+        # on pallas/interpret engines (see ssm.SSMCache).
+        ssc = ssm.SSMCache(conv, None) if conv is not None else None
         h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
                                    kv_cache=kvc, ssm_cache=ssc,
                                    cache_pos=write_pos,
@@ -814,9 +821,11 @@ def paged_prefill(engine: GemminiInstance, params: Params, cfg: ModelConfig,
                                     page_size)
         ssc = None
         if conv is not None:
+            # Fresh request: conv state zeroed, recurrent state spelled
+            # None (fresh-prefill marker -- a retired tenant's state must
+            # not leak in, and the SSD kernel path starts from zeros).
             c1 = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(conv, slot, 1, 0))
-            s1 = jnp.zeros_like(jax.lax.dynamic_slice_in_dim(st, slot, 1, 0))
-            ssc = ssm.SSMCache(c1, s1)
+            ssc = ssm.SSMCache(c1, None)
         h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
                                    kv_cache=kvc, ssm_cache=ssc,
                                    window_static=static_win)
@@ -841,7 +850,8 @@ def paged_prefill_chunk(engine: GemminiInstance, params: Params,
                         cfg: ModelConfig, tokens: jnp.ndarray,
                         state: PagedDecodeState, slot: jnp.ndarray,
                         pages: jnp.ndarray, start: jnp.ndarray, *,
-                        page_size: int, with_logits: bool = True
+                        page_size: int, with_logits: bool = True,
+                        kv_pages: Optional[int] = None
                         ) -> Tuple[Optional[jnp.ndarray], PagedDecodeState]:
     """Prefill a CONTINUATION chunk of a partially-prefilled request.
 
@@ -866,6 +876,12 @@ def paged_prefill_chunk(engine: GemminiInstance, params: Params,
     ``(None, state)`` -- only the LAST chunk's logits are ever sampled, so
     intermediate chunks need not pay the vocab GEMM (one compile bucket
     per (chunk length, with_logits) pair).
+
+    ``kv_pages``: STATIC bound on live block-table entries, derived by the
+    engine from the request's admission-time (padded) prompt footprint --
+    the gather attention then contracts ``kv_pages * page`` keys instead
+    of the full table capacity (one compile bucket per (chunk length,
+    kv_pages) pair; ``None`` keeps the capacity-wide gather).
     """
     h = embed_inputs(cfg, params, tokens, with_meta=False)
     b, t, _ = h.shape                                  # b == 1
@@ -890,7 +906,7 @@ def paged_prefill_chunk(engine: GemminiInstance, params: Params,
         h, kvc, ssc = _block_apply(engine, cfg, bp, h, positions, win, base,
                                    kv_cache=kvc, ssm_cache=ssc,
                                    window_static=static_win,
-                                   prefill_start=start)
+                                   prefill_start=start, kv_pages=kv_pages)
         new = (kvc.k if kvc else None, kvc.v if kvc else None,
                jax.lax.dynamic_update_slice_in_dim(
                    conv, ssc.conv.astype(conv.dtype), slot, 0)

@@ -41,7 +41,8 @@ import numpy as np
 
 from repro.core import flags
 from repro.core.config import GemminiConfig
-from repro.core.generator import default_engine_backend, elaborate
+from repro.core.context import ExecutionContext
+from repro.core.generator import default_engine_backend
 from repro.models import transformer as tf
 from repro.serving.paged_cache import PagedKVAllocator, arena_pages
 from repro.serving.scheduler import ContinuousScheduler, Request, summarize
@@ -56,8 +57,8 @@ from repro.serving.scheduler import ContinuousScheduler, Request, summarize
 _JIT_CACHE: Dict = {}
 
 
-def _jitted_steps(engine, model_cfg, page_size: int):
-    key = (engine.cfg, engine.backend, model_cfg, page_size)
+def _jitted_steps(engine: ExecutionContext, model_cfg, page_size: int):
+    key = (engine, model_cfg, page_size)
     if key not in _JIT_CACHE:
         prefill = jax.jit(
             lambda p, tok, st, slot, pages: tf.paged_prefill(
@@ -71,16 +72,22 @@ def _jitted_steps(engine, model_cfg, page_size: int):
                 engine, p, model_cfg, tok, st, slot, pages,
                 page_size=page_size, with_logits=False),
             donate_argnums=(2,))
+        # Continuation chunks additionally carry the STATIC kv_pages bound
+        # (admission-time prompt footprint in pages): one compile bucket
+        # per (chunk length, kv_pages) pair, and the gather attention only
+        # contracts the table prefix that can ever hold live keys.
         chunk = jax.jit(
-            lambda p, tok, st, slot, pages, start: tf.paged_prefill_chunk(
+            lambda p, tok, st, slot, pages, start, kv_pages:
+            tf.paged_prefill_chunk(
                 engine, p, model_cfg, tok, st, slot, pages, start,
-                page_size=page_size),
-            donate_argnums=(2,))
+                page_size=page_size, kv_pages=kv_pages),
+            donate_argnums=(2,), static_argnums=(6,))
         chunk_nl = jax.jit(
-            lambda p, tok, st, slot, pages, start: tf.paged_prefill_chunk(
+            lambda p, tok, st, slot, pages, start, kv_pages:
+            tf.paged_prefill_chunk(
                 engine, p, model_cfg, tok, st, slot, pages, start,
-                page_size=page_size, with_logits=False),
-            donate_argnums=(2,))
+                page_size=page_size, with_logits=False, kv_pages=kv_pages),
+            donate_argnums=(2,), static_argnums=(6,))
         decode = jax.jit(
             lambda p, tok, st, act: tf.paged_decode_step(
                 engine, p, model_cfg, tok, st, act, page_size=page_size),
@@ -107,8 +114,18 @@ class ServingEngine:
     * ``policy`` -- ``continuous``, or ``static`` (admission barrier, no
       slot recycling; the bench baseline). The barrier never blocks an
       in-flight chunked prefill, only new admissions.
+    * ``admission_policy`` -- queue order for new admissions: ``fifo``
+      (default, unchanged), ``priority`` (highest ``Request.priority``
+      first, deadline then age break ties), or ``deadline``
+      (earliest-deadline-first). See ``scheduler.ContinuousScheduler``.
     * ``warm_prompt_lens`` -- pre-resolve every tuned schedule the given
       prompt lengths will hit (no-op under ``GEMMINI_TUNE=off``).
+
+    Dispatch is an :class:`ExecutionContext` (``self.engine``): cfg +
+    backend + tune policy in one frozen value handed to the jitted model
+    steps. A mesh-aware context (``ExecutionContext.with_mesh``) is the
+    multi-host path once the page arena itself is sequence-sharded
+    (ROADMAP).
     """
 
     def __init__(self, model_cfg, *, max_slots: int = 4,
@@ -122,6 +139,7 @@ class ServingEngine:
                  prefill_token_budget: int = 512,
                  prefill_chunk: Optional[int] = None,
                  policy: str = "continuous",
+                 admission_policy: str = "fifo",
                  warm_prompt_lens: Sequence[int] = ()):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
@@ -133,7 +151,8 @@ class ServingEngine:
         cfg = engine_cfg or GemminiConfig(input_dtype="bf16",
                                           acc_dtype="fp32",
                                           output_dtype="bf16")
-        self.engine = elaborate(cfg, backend or default_engine_backend())
+        self.engine = ExecutionContext(
+            cfg=cfg, backend=backend or default_engine_backend())
 
         # -- page geometry: the tuned schedule is the page size ------------
         if page_size is None:
@@ -181,7 +200,8 @@ class ServingEngine:
             prefill_token_budget=prefill_token_budget,
             extra_tokens_per_prefill=model_cfg.n_meta_tokens,
             pad_to=self.prefill_pad,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk,
+            admission_policy=admission_policy)
         self.prefill_chunk = self.sched.prefill_chunk
         if policy == "static":
             # Static batching as a degenerate policy: admit only into an
@@ -263,7 +283,11 @@ class ServingEngine:
         return -(-max(1, n) // self.prefill_pad) * self.prefill_pad
 
     def submit(self, prompt, max_new_tokens: int, *,
-               eos_id: int = -1) -> Request:
+               eos_id: int = -1, priority: int = 0,
+               deadline: Optional[float] = None) -> Request:
+        """``priority``/``deadline`` feed the scheduler's admission order
+        (no-ops under the default FIFO policy); ``deadline`` is an
+        absolute ``time.time()`` timestamp."""
         prompt = np.asarray(prompt, np.int32)
         need = self._bucket(len(prompt)) + self.model_cfg.n_meta_tokens
         cap = min(self.max_pages_per_seq,
@@ -273,7 +297,8 @@ class ServingEngine:
                              f"admitted (cache capacity {cap} tokens, "
                              f"max_context={self.max_context})")
         req = Request(rid=self._rid, prompt=prompt,
-                      max_new_tokens=max_new_tokens, eos_id=eos_id)
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      priority=priority, deadline=deadline)
         self._rid += 1
         self.requests.append(req)
         self.sched.submit(req)
@@ -372,10 +397,16 @@ class ServingEngine:
                 self.params, jnp.asarray(toks[None]), self.state,
                 jnp.int32(slot), jnp.asarray(row))
         else:
+            # Static dead-key bound for the gather attention: the scheduler
+            # stamps each continuation chunk with the pages the whole
+            # (padded) prompt will ever occupy (PrefillChunk.kv_pages) --
+            # table entries past it can never hold live keys and need not
+            # be contracted.
             fn = self._jit_chunk if w.last else self._jit_chunk_nl
             logits, self.state = fn(
                 self.params, jnp.asarray(toks[None]), self.state,
-                jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start))
+                jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start),
+                w.kv_pages or None)
         req.cache_len = w.true_end
         req.n_chunks += 1
         if w.last:

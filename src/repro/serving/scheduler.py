@@ -6,7 +6,10 @@ creates, and this module is where that mix is shaped. Policy, in order of
 application each engine iteration:
 
 1. **Admission / prefill** (the chunk queue): queued requests are admitted
-   into free decode slots oldest-first, as long as (a) a slot is free,
+   into free decode slots in *admission-policy* order -- FIFO by default,
+   or the ``priority`` / ``deadline`` (EDF) SLO-aware orders, preempted
+   requests always first (see ``_order_queue``) -- as long as (a) a slot
+   is free,
    (b) the paged allocator can hold the request, and (c) the iteration's
    *prefill token budget* is not exhausted. The budget is the classic
    continuous-batching knob balancing time-to-first-token of queued
@@ -52,6 +55,11 @@ class Request:
     prompt: np.ndarray                    # (P,) int32 [or (P, n_q)]
     max_new_tokens: int
     eos_id: int = -1                      # -1: never emitted
+    # admission-policy inputs (ignored under FIFO): higher priority admits
+    # first; deadline is an absolute time.time() SLO timestamp (None =
+    # best-effort, sorts after every deadlined request).
+    priority: int = 0
+    deadline: Optional[float] = None
 
     # runtime (engine/scheduler owned)
     state: str = "queued"                 # queued | running | finished
@@ -101,7 +109,13 @@ class PrefillChunk:
     [start, true_end) are real tokens and the rest bucket padding (last
     chunk of attention-only families; recurrent families never pad).
     ``first and last`` means single-span -- the classic whole-prompt
-    prefill path, byte-for-byte the pre-chunking behavior."""
+    prefill path, byte-for-byte the pre-chunking behavior.
+
+    ``kv_pages``: STATIC bound on block-table entries that can ever hold
+    this request's live keys (its whole padded prompt footprint in pages
+    -- every chunk frontier lives inside it). The scheduler owns it so
+    the padding policy has one owner; the engine passes it verbatim to
+    the gather attention (dead-key elision; 0 = unbounded)."""
 
     req: Request
     slot: int
@@ -110,6 +124,7 @@ class PrefillChunk:
     padded_end: int
     first: bool
     last: bool
+    kv_pages: int = 0
 
 
 class ContinuousScheduler:
@@ -120,11 +135,18 @@ class ContinuousScheduler:
     model. The engine executes the actions it returns.
     """
 
+    ADMISSION_POLICIES = ("fifo", "priority", "deadline")
+
     def __init__(self, allocator: PagedKVAllocator, n_slots: int, *,
                  prefill_token_budget: int = 512,
                  extra_tokens_per_prefill: int = 0,
                  pad_to: int = 1,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 admission_policy: str = "fifo"):
+        if admission_policy not in self.ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission_policy "
+                             f"{admission_policy!r}; have "
+                             f"{self.ADMISSION_POLICIES}")
         self.alloc = allocator
         self.n_slots = n_slots
         self.prefill_token_budget = prefill_token_budget
@@ -139,6 +161,11 @@ class ContinuousScheduler:
         if prefill_chunk:
             prefill_chunk = max(prefill_chunk, extra_tokens_per_prefill + 1)
         self.prefill_chunk = prefill_chunk or None
+        # admission order: "fifo" admits in submission order (unchanged
+        # default); "priority"/"deadline" re-sort the queue each
+        # iteration (the SLO-aware policy drop-in the scheduler was
+        # designed for -- see _order_queue).
+        self.admission_policy = admission_policy
         self.queue: List[Request] = []
         self.running: Dict[int, Request] = {}          # slot -> request
         self.rejected: List[Request] = []              # engine drains these
@@ -147,6 +174,13 @@ class ContinuousScheduler:
     def _prefill_need(self, req: Request) -> int:
         plen = len(req.serve_prompt())
         return -(-plen // self.pad_to) * self.pad_to + self.extra_tokens
+
+    def _kv_pages(self, req: Request) -> int:
+        """Static live-key page bound for ``req``'s gather attention: the
+        pages its whole padded prompt will ever occupy (>= every chunk's
+        ``padded_end``), capped at the per-sequence table width."""
+        return min(self.alloc.max_pages_per_seq,
+                   pages_for(self._prefill_need(req), self.alloc.page_size))
 
     def _chunk_spans(self, req: Request) -> List[Tuple[int, int, int]]:
         """(start, true_end, padded_end) spans covering prompt + meta in
@@ -179,6 +213,32 @@ class ContinuousScheduler:
         req.submitted_at = req.submitted_at or time.time()
         self.queue.append(req)
 
+    def _order_queue(self) -> None:
+        """Apply the admission policy: re-sort the wait queue in place
+        before each admission pass. FIFO is the identity (submission
+        order, preempted requests re-inserted at the front by
+        :meth:`preempt`). The sorted policies are stable, and preempted
+        requests keep absolute precedence under every policy -- they hold
+        recompute debt, and re-admitting them first preserves the
+        youngest-evicted/oldest-progresses livelock-freedom argument.
+
+        * ``priority``: highest ``Request.priority`` first; deadline then
+          submission time break ties.
+        * ``deadline``: earliest-deadline-first (EDF); deadline-less
+          requests are best-effort and sort last by submission time.
+        """
+        if self.admission_policy == "fifo" or len(self.queue) < 2:
+            return
+        inf = float("inf")
+
+        def key(r: Request):
+            dl = r.deadline if r.deadline is not None else inf
+            if self.admission_policy == "priority":
+                return (r.n_preempted == 0, -r.priority, dl, r.submitted_at)
+            return (r.n_preempted == 0, dl, r.submitted_at)
+
+        self.queue.sort(key=key)
+
     @property
     def has_work(self) -> bool:
         return bool(self.queue or self.running)
@@ -192,6 +252,7 @@ class ContinuousScheduler:
         allocated here (the commitment point); the engine only executes."""
         out: List[Tuple[Request, int, List[int]]] = []
         budget = self.prefill_token_budget
+        self._order_queue()
         free = self._free_slots()
         while self.queue and free:
             req = self.queue[0]
@@ -276,6 +337,7 @@ class ContinuousScheduler:
             if budget <= 0 and out:
                 break
         # pass 2: new admissions (first chunks)
+        self._order_queue()
         free = self._free_slots() if admit_new else []
         while self.queue and free and (budget > 0 or not out):
             req = self.queue[0]
@@ -315,7 +377,8 @@ class ContinuousScheduler:
                 if new is None:
                     return None
                 return PrefillChunk(req, req.slot, s, e, pe, False,
-                                    e >= req.prefill_target)
+                                    e >= req.prefill_target,
+                                    kv_pages=self._kv_pages(req))
         raise AssertionError(f"prefill_pos {req.prefill_pos} off the "
                              f"chunk lattice for rid {req.rid}")
 

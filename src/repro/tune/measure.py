@@ -132,7 +132,7 @@ def measure_paged_schedule(cfg: GemminiConfig, sched, b: int, h: int,
     XLA gather path, which DOES see the page size (its gather/reshape
     granularity), so candidates genuinely measure differently even on CI.
     """
-    from repro.kernels import ops
+    from repro.core.context import ExecutionContext
     from repro.tune.schedules import schedule_dtype
 
     backend = backend or measurement_backend()
@@ -145,11 +145,13 @@ def measure_paged_schedule(cfg: GemminiConfig, sched, b: int, h: int,
     v_pool = jnp.zeros((kvh, n_pages + 1, page, d), dt)
     tables = jnp.arange(b * mp, dtype=jnp.int32).reshape(b, mp)
     lengths = jnp.full((b,), max_context, jnp.int32)
-    op_backend = "pallas" if backend == "pallas" else "xla"
+    ctx = ExecutionContext(
+        cfg=cfg, backend="pallas" if backend == "pallas" else "xla",
+        tune_mode="off")   # measuring: never recurse into the tuner
 
     def run(q, k_pool, v_pool):
-        return ops.paged_attention(q, k_pool, v_pool, tables, lengths,
-                                   window=window, backend=op_backend)
+        return ctx.paged_attention(q, k_pool, v_pool, tables, lengths,
+                                   window=window)
 
     return time_callable(jax.jit(run), q, k_pool, v_pool, iters=iters,
                          warmup=warmup)

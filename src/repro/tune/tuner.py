@@ -1,10 +1,13 @@
 """Empirical kernel-schedule autotuner (GEMM, attention, conv).
 
 The ``resolve_*`` functions are the single entries the kernels' dispatch
-layer consults on every un-planned launch: ``resolve_plan`` for
-``ops.gemm``, ``resolve_attn_schedule`` for ``ops.flash_attention``,
-``resolve_conv_schedule`` for ``ops.conv2d(fused=True)``. All three honor
-the same flag:
+layer (``ExecutionContext`` -> ``kernels.ops`` impls) consults on every
+un-planned launch: ``resolve_plan`` for ``ctx.gemm``,
+``resolve_attn_schedule`` for ``ctx.flash_attention``,
+``resolve_conv_schedule`` for ``ctx.conv2d(fused=True)``. All three honor
+the same flag (or the dispatching context's scoped ``tune_mode``
+override), and under a mesh'd context they run inside ``shard_map``
+tracing -- the shapes they fingerprint are per-device shapes:
 
 * ``tune_mode="off"``    -- static schedule (greedy analytic plan for GEMM,
                             the kernels' shipped block-size defaults for

@@ -8,7 +8,8 @@ import pytest
 
 from repro.core.config import Activation, GemminiConfig
 from repro.kernels import conv as ck
-from repro.kernels import ops, ref
+from repro.core.context import ExecutionContext
+from repro.kernels import ref
 
 CASES = [
     # n, h, w, ci, co, kh, kw, stride, pad
@@ -57,12 +58,11 @@ def test_ops_conv_host_im2col_matches_fused(rng):
     cfg = GemminiConfig()
     x = jnp.asarray(rng.integers(-64, 64, (1, 10, 10, 8)), jnp.int8)
     wt = jnp.asarray(rng.integers(-32, 32, (3, 3, 8, 16)), jnp.int8)
-    y_host = ops.conv2d(x, wt, None, cfg=cfg, stride=1, padding=1, shift=6,
-                        activation=Activation.RELU, backend="interpret",
-                        fused=False)
-    y_fused = ops.conv2d(x, wt, None, cfg=cfg, stride=1, padding=1, shift=6,
-                         activation=Activation.RELU, backend="interpret",
-                         fused=True)
+    ctx = ExecutionContext(cfg=cfg, backend="interpret")
+    y_host = ctx.conv2d(x, wt, None, stride=1, padding=1, shift=6,
+                        activation=Activation.RELU, fused=False)
+    y_fused = ctx.conv2d(x, wt, None, stride=1, padding=1, shift=6,
+                         activation=Activation.RELU, fused=True)
     assert bool(jnp.all(y_host == y_fused))
 
 
@@ -95,11 +95,12 @@ def test_ops_conv_fused_xla_routes_to_fused_equivalent_ref(rng):
     x = jnp.asarray(rng.integers(-64, 64, (1, 10, 10, 8)), jnp.int8)
     wt = jnp.asarray(rng.integers(-32, 32, (3, 3, 8, 16)), jnp.int8)
     b = jnp.asarray(rng.integers(-500, 500, (16,)), jnp.int32)
-    y_xla = ops.conv2d(x, wt, b, cfg=cfg, stride=1, padding=1, shift=6,
-                       activation=Activation.RELU, backend="xla", fused=True)
-    y_fused = ops.conv2d(x, wt, b, cfg=cfg, stride=1, padding=1, shift=6,
-                         activation=Activation.RELU, backend="interpret",
-                         fused=True)
+    y_xla = ExecutionContext(cfg=cfg, backend="xla").conv2d(
+        x, wt, b, stride=1, padding=1, shift=6,
+        activation=Activation.RELU, fused=True)
+    y_fused = ExecutionContext(cfg=cfg, backend="interpret").conv2d(
+        x, wt, b, stride=1, padding=1, shift=6,
+        activation=Activation.RELU, fused=True)
     assert bool(jnp.all(y_xla == y_fused))
 
 

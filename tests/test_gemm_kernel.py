@@ -14,7 +14,12 @@ except ImportError:                       # container has no hypothesis
 
 from repro.core.config import Activation, Dataflow, GemminiConfig
 from repro.core.generator import elaborate
-from repro.kernels import ops, ref
+from repro.core.context import ExecutionContext
+from repro.kernels import ref
+
+
+def _ctx(cfg, backend="interpret"):
+    return ExecutionContext(cfg=cfg, backend=backend)
 
 
 def _ints(rng, shape, lo=-128, hi=128, dtype=jnp.int8):
@@ -35,8 +40,7 @@ def test_int8_gemm_bitexact(rng, df, shape, bias):
     a = _ints(rng, (m, k))
     b = _ints(rng, (k, n))
     d = _ints(rng, (1, n), -1000, 1000, jnp.int32) if bias else None
-    y = ops.gemm(a, b, d, cfg=cfg, shift=8, activation=Activation.RELU,
-                 backend="interpret")
+    y = _ctx(cfg).gemm(a, b, d, shift=8, activation=Activation.RELU)
     yr = ref.gemm_ref(a, b, d, acc_dtype=jnp.int32, out_dtype=jnp.int8,
                       shift=8, activation=Activation.RELU)
     assert y.dtype == jnp.int8
@@ -51,7 +55,7 @@ def test_float_gemm_allclose(rng, df, in_dt, acc_dt, out_dt):
                         output_dtype=out_dt)
     a = _floats(rng, (160, 96)).astype(cfg.input_jnp)
     b = _floats(rng, (96, 224)).astype(cfg.input_jnp)
-    y = ops.gemm(a, b, None, cfg=cfg, backend="interpret")
+    y = _ctx(cfg).gemm(a, b, None)
     yr = ref.gemm_ref(a, b, None, acc_dtype=cfg.acc_jnp,
                       out_dtype=cfg.output_jnp)
     np.testing.assert_allclose(np.asarray(y, np.float32),
@@ -69,7 +73,7 @@ def test_int8_gemm_property(m, n, k, df, shift):
     cfg = GemminiConfig(dataflow=df)
     a = _ints(rng, (m, k))
     b = _ints(rng, (k, n))
-    y = ops.gemm(a, b, None, cfg=cfg, shift=shift, backend="interpret")
+    y = _ctx(cfg).gemm(a, b, None, shift=shift)
     yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.int32, out_dtype=jnp.int8,
                       shift=shift)
     assert bool(jnp.all(y == yr))
@@ -81,10 +85,10 @@ def test_os_ws_agree(rng):
     a = _ints(rng, (256, 192))
     b = _ints(rng, (192, 320))
     d = _ints(rng, (1, 320), -500, 500, jnp.int32)
-    y_os = ops.gemm(a, b, d, cfg=cfg, dataflow=Dataflow.OS, shift=7,
-                    activation=Activation.RELU6, backend="interpret")
-    y_ws = ops.gemm(a, b, d, cfg=cfg, dataflow=Dataflow.WS, shift=7,
-                    activation=Activation.RELU6, backend="interpret")
+    y_os = _ctx(cfg).gemm(a, b, d, dataflow=Dataflow.OS, shift=7,
+                          activation=Activation.RELU6)
+    y_ws = _ctx(cfg).gemm(a, b, d, dataflow=Dataflow.WS, shift=7,
+                          activation=Activation.RELU6)
     assert bool(jnp.all(y_os == y_ws))
 
 
@@ -92,10 +96,8 @@ def test_pipeline_depth_1_same_numerics(rng):
     """Design point 6 ("fully combinational"): schedule changes, math not."""
     a = _ints(rng, (256, 128))
     b = _ints(rng, (128, 128))
-    y2 = ops.gemm(a, b, None, cfg=GemminiConfig(pipeline_depth=2),
-                  shift=4, backend="interpret")
-    y1 = ops.gemm(a, b, None, cfg=GemminiConfig(pipeline_depth=1),
-                  shift=4, backend="interpret")
+    y2 = _ctx(GemminiConfig(pipeline_depth=2)).gemm(a, b, None, shift=4)
+    y1 = _ctx(GemminiConfig(pipeline_depth=1)).gemm(a, b, None, shift=4)
     assert bool(jnp.all(y1 == y2))
 
 
@@ -104,10 +106,8 @@ def test_xla_backend_matches_interpret(rng):
     cfg = GemminiConfig()
     a = _ints(rng, (130, 70))
     b = _ints(rng, (70, 36))
-    yi = ops.gemm(a, b, None, cfg=cfg, shift=6, activation=Activation.RELU,
-                  backend="interpret")
-    yx = ops.gemm(a, b, None, cfg=cfg, shift=6, activation=Activation.RELU,
-                  backend="xla")
+    yi = _ctx(cfg).gemm(a, b, None, shift=6, activation=Activation.RELU)
+    yx = _ctx(cfg, "xla").gemm(a, b, None, shift=6, activation=Activation.RELU)
     assert bool(jnp.all(yi == yx))
 
 

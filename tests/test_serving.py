@@ -2,6 +2,7 @@
 continuous-batching engine vs the static reference path, and the paged
 schedule's ride through the tuner cache."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -244,6 +245,66 @@ def test_sole_runner_truncates_at_capacity():
     req.cache_len = 8
     _, evicted, truncated = sc.ensure_decode_capacity()
     assert truncated == [req] and not evicted
+
+
+def test_admission_policy_priority_order():
+    """priority admits highest class first (deadline, then age tiebreak);
+    FIFO (default) is untouched."""
+    al = PagedKVAllocator(n_pages=64, page_size=4, max_pages_per_seq=16)
+    sc = ContinuousScheduler(al, n_slots=4, prefill_token_budget=1 << 20,
+                             admission_policy="priority")
+    r0, r1, r2 = _mk_req(0, 4), _mk_req(1, 4), _mk_req(2, 4)
+    r1.priority, r2.priority = 5, 5
+    r2.deadline = 10.0                       # same class, tighter SLO
+    for r in (r0, r1, r2):
+        sc.submit(r)
+    assert [r.rid for (r, _, _) in sc.admissions()] == [2, 1, 0]
+
+
+def test_admission_policy_deadline_edf_and_preempted_first():
+    """deadline = earliest-deadline-first, deadline-less requests last;
+    a preempted request outranks every queued one under any policy."""
+    al = PagedKVAllocator(n_pages=64, page_size=4, max_pages_per_seq=16)
+    sc = ContinuousScheduler(al, n_slots=4, prefill_token_budget=1 << 20,
+                             admission_policy="deadline")
+    r0, r1, r2 = _mk_req(0, 4), _mk_req(1, 4), _mk_req(2, 4)
+    r0.deadline, r1.deadline = 50.0, 20.0    # r2: best-effort
+    for r in (r0, r1, r2):
+        sc.submit(r)
+    (a, _, _), (b, _, _), (c, _, _) = sc.admissions()
+    assert [a.rid, b.rid, c.rid] == [1, 0, 2]
+    sc.preempt(c)                            # best-effort, but holds debt
+    order = sc.admissions()
+    assert [r.rid for (r, _, _) in order] == [2]
+
+
+def test_admission_policy_unknown_rejected():
+    al = PagedKVAllocator(n_pages=8, page_size=4, max_pages_per_seq=4)
+    with pytest.raises(ValueError):
+        ContinuousScheduler(al, n_slots=2, admission_policy="sjf")
+
+
+def test_engine_priority_admission_end_to_end(rng):
+    """Under a 1-slot engine a high-priority late submission decodes first
+    and produces exactly the same tokens as its FIFO run (admission order
+    changes scheduling, never numerics)."""
+    params = tf.init_params(jax.random.PRNGKey(3), _TINY)
+    prompts = [rng.integers(0, _TINY.vocab, (12,)).astype(np.int32)
+               for _ in range(3)]
+    by_policy = {}
+    for policy in ("fifo", "priority"):
+        eng = ServingEngine(_TINY, max_slots=1, max_context=64,
+                            page_size=8, params=params,
+                            admission_policy=policy)
+        reqs = [eng.submit(p, 4, priority=i) for i, p in enumerate(prompts)]
+        eng.run()
+        by_policy[policy] = {r.rid: list(np.asarray(r.generated).ravel())
+                             for r in reqs}
+        if policy == "priority":
+            # highest priority (last submitted) finished first
+            finish = sorted(reqs, key=lambda r: r.t_finished)
+            assert [r.rid for r in finish] == [2, 1, 0]
+    assert by_policy["fifo"] == by_policy["priority"]
 
 
 # ---------------------------------------------------------------------------
@@ -563,6 +624,29 @@ def test_chunked_engine_interpret_backend(rng):
         eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
                             n_pages=8, temperature=0.0, seed=0,
                             backend=backend, prefill_chunk=8)
+        for p in prompts:
+            eng.submit(p, 3)
+        reps[backend] = [np.asarray(r["tokens"])
+                         for r in eng.run()["requests"]]
+    for a, b in zip(reps["xla"], reps["interpret"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_ssm_interpret_backend_fused_kernel(rng):
+    """backend="interpret" drives the fused SSD kernel on the SSM-family
+    fresh-prefill path (d_skip + final recurrent state emitted in-kernel;
+    SSMCache(conv, None) fresh marker); greedy tokens agree with the xla
+    engine. The engine cfg is pinned f32 end-to-end so the two backends
+    differ only by the kernel's (1e-7-level) reassociation -- the default
+    bf16 engine would round every projection on the interpret path."""
+    f32 = GemminiConfig(input_dtype="fp32", acc_dtype="fp32",
+                        output_dtype="fp32")
+    prompts = [rng.integers(0, 64, (n,)).astype(np.int32) for n in (9, 5)]
+    reps = {}
+    for backend in ("xla", "interpret"):
+        eng = ServingEngine(_TINY_SSM, max_slots=2, max_context=32,
+                            page_size=8, n_pages=8, temperature=0.0,
+                            seed=0, backend=backend, engine_cfg=f32)
         for p in prompts:
             eng.submit(p, 3)
         reps[backend] = [np.asarray(r["tokens"])

@@ -122,16 +122,18 @@ def test_ragged_snap_never_overpads_past_dim_rounding(shape, df):
 
 
 def test_ragged_ops_gemm_agrees_with_plan(rng):
-    """ops.gemm's padding legalization and the plan agree on ragged shapes
+    """ctx.gemm's padding legalization and the plan agree on ragged shapes
     (the interpret kernel would shape-error on any mismatch)."""
     import jax.numpy as jnp
-    from repro.kernels import ops, ref
+    from repro.core.context import ExecutionContext
+    from repro.kernels import ref
     m, n, k = 100, 4000, 1000
     for df in (Dataflow.OS, Dataflow.WS):
         cfg = GemminiConfig(dataflow=df)
         a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
         b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
-        y = ops.gemm(a, b, None, cfg=cfg, shift=8, backend="interpret")
+        y = ExecutionContext(cfg=cfg, backend="interpret").gemm(
+            a, b, None, shift=8)
         yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.int32,
                           out_dtype=jnp.int8, shift=8)
         assert y.shape == (m, n)

@@ -15,7 +15,8 @@ from repro.core import flags
 from repro.core.config import Activation, Dataflow, GemminiConfig
 from repro.core.tiling import enumerate_plans, make_plan, plan_gemm
 from repro.kernels import gemm as gemm_kernel
-from repro.kernels import ops, ref
+from repro.core.context import ExecutionContext
+from repro.kernels import ref
 from repro.tune import cache as tcache
 from repro.tune import measure, tuner
 
@@ -192,7 +193,7 @@ def test_resolve_full_tunes_once_then_hits(tmp_cache, monkeypatch):
 
 
 def test_ops_gemm_consults_tuner(tmp_cache):
-    """ops.gemm (the model layers' entry) picks the cached tuned plan."""
+    """ctx.gemm (the model layers' entry) picks the cached tuned plan."""
     cfg = GemminiConfig(dataflow=Dataflow.WS)
     seeded = make_plan(cfg, 128, 512, 256, 128, 512, 128,
                        dataflow=Dataflow.WS)
@@ -201,7 +202,8 @@ def test_ops_gemm_consults_tuner(tmp_cache):
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.integers(-128, 128, (128, 256)), jnp.int8)
     b = jnp.asarray(rng.integers(-128, 128, (256, 512)), jnp.int8)
-    y = ops.gemm(a, b, None, cfg=cfg, shift=8, backend="interpret")
+    y = ExecutionContext(cfg=cfg, backend="interpret").gemm(
+        a, b, None, shift=8)
     yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.int32, out_dtype=jnp.int8,
                       shift=8)
     assert bool(jnp.all(y == yr))
@@ -248,8 +250,8 @@ def test_fused_ws_multistep_k_bitexact(rng, bias):
     b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
     d = jnp.asarray(rng.integers(-1000, 1000, (1, n)), jnp.int32) \
         if bias else None
-    y = ops.gemm(a, b, d, cfg=cfg, shift=8, activation=Activation.RELU6,
-                 backend="interpret")
+    y = ExecutionContext(cfg=cfg, backend="interpret").gemm(
+        a, b, d, shift=8, activation=Activation.RELU6)
     yr = ref.gemm_ref(a, b, d, acc_dtype=jnp.int32, out_dtype=jnp.int8,
                       shift=8, activation=Activation.RELU6)
     assert y.dtype == jnp.int8
@@ -262,7 +264,7 @@ def test_fused_ws_bf16_multistep_k(rng):
                         max_tile_m=128, max_tile_n=128, max_tile_k=128)
     a = jnp.asarray(rng.standard_normal((160, 384)), jnp.bfloat16)
     b = jnp.asarray(rng.standard_normal((384, 224)), jnp.bfloat16)
-    y = ops.gemm(a, b, None, cfg=cfg, backend="interpret")
+    y = ExecutionContext(cfg=cfg, backend="interpret").gemm(a, b, None)
     yr = ref.gemm_ref(a, b, None, acc_dtype=jnp.float32,
                       out_dtype=jnp.bfloat16)
     np.testing.assert_allclose(np.asarray(y, np.float32),
@@ -482,7 +484,7 @@ def test_resolve_conv_full_tunes_once_then_hits(tmp_cache, monkeypatch):
 
 
 def test_ops_flash_attention_consults_tuner_ragged(tmp_cache):
-    """ops.flash_attention resolves a tuned (block_q, block_k) from the
+    """ctx.flash_attention resolves a tuned (block_q, block_k) from the
     cache and matches the oracle on a ragged tq != tk shape."""
     from repro.kernels import ref as kref
     from repro.tune import schedules
@@ -498,8 +500,8 @@ def test_ops_flash_attention_consults_tuner_ragged(tmp_cache):
     v = jnp.asarray(rng.standard_normal((b, tk, kvh, d)), jnp.float32)
     pc = tcache.get_cache()
     hits0 = pc.hits
-    y = ops.flash_attention(q, k, v, causal=True, cfg=cfg,
-                            backend="interpret")
+    y = ExecutionContext(cfg=cfg, backend="interpret").flash_attention(
+        q, k, v, causal=True)
     assert pc.hits == hits0 + 1          # resolved from the seeded entry
     yr = kref.mha_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
@@ -507,7 +509,7 @@ def test_ops_flash_attention_consults_tuner_ragged(tmp_cache):
 
 
 def test_ops_conv_consults_tuner_ragged_co(tmp_cache):
-    """ops.conv2d(fused=True) resolves a tuned co_tile from the cache and
+    """ctx.conv2d(fused=True) resolves a tuned co_tile from the cache and
     matches the oracle with co % co_tile != 0."""
     from repro.kernels import ref as kref
     from repro.core.config import Activation
@@ -524,9 +526,9 @@ def test_ops_conv_consults_tuner_ragged_co(tmp_cache):
     bias = jnp.asarray(rng.integers(-500, 500, (co,)), jnp.int32)
     pc = tcache.get_cache()
     hits0 = pc.hits
-    y = ops.conv2d(x, wt, bias, cfg=cfg, stride=1, padding=1, shift=7,
-                   activation=Activation.RELU, backend="interpret",
-                   fused=True)
+    y = ExecutionContext(cfg=cfg, backend="interpret").conv2d(
+        x, wt, bias, stride=1, padding=1, shift=7,
+        activation=Activation.RELU, fused=True)
     assert pc.hits == hits0 + 1
     yr = kref.conv2d_ref(x, wt, bias, stride=1, padding=1,
                          acc_dtype=jnp.int32, out_dtype=jnp.int8, shift=7,
@@ -573,7 +575,8 @@ def test_warm_then_serve_zero_misses(tmp_cache):
                                          model_cfg.head_dim)), jnp.bfloat16)
     kv = jnp.asarray(rng.standard_normal((2, 16, model_cfg.n_kv_heads,
                                           model_cfg.head_dim)), jnp.bfloat16)
-    ops.flash_attention(q, kv, kv, causal=True, cfg=cfg, backend="interpret")
+    ExecutionContext(cfg=cfg, backend="interpret").flash_attention(
+        q, kv, kv, causal=True)
     assert pc.misses == m0, "request path missed a warmed schedule"
     assert pc.hits > h0
 

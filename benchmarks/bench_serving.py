@@ -137,7 +137,13 @@ def main(csv: bool = True, repeats: int = 3) -> List[Dict]:
             p50_latency_s=s["p50_latency_s"],
             p99_latency_s=s["p99_latency_s"],
             p50_ttft_s=s["p50_ttft_s"], p99_ttft_s=s["p99_ttft_s"],
+            # Robustness counters (identically 0 on these fault-free
+            # traces -- the trend chart alarms if a regression makes the
+            # engine retry/fall back/shed on the happy path).
             preemptions=int(s["preemptions"]),
+            retries=int(s["retries"]), fallbacks=int(s["fallbacks"]),
+            shed=int(s["shed"]),
+            straggler_steps=int(s["straggler_steps"]),
             slots=MAX_SLOTS, page_size=PAGE_SIZE))
     speedup = (summaries["continuous"]["tokens_per_s"]
                / max(summaries["static"]["tokens_per_s"], 1e-9))
@@ -179,6 +185,8 @@ def main(csv: bool = True, repeats: int = 3) -> List[Dict]:
             p50_ttft_s=s["p50_ttft_s"], p99_ttft_s=s["p99_ttft_s"],
             prefill_chunks=int(s["prefill_chunks"]),
             preemptions=int(s["preemptions"]),
+            retries=int(s["retries"]), fallbacks=int(s["fallbacks"]),
+            shed=int(s["shed"]),
             prefill_chunk=chunk or 0, prefill_budget=LONG_BUDGET,
             slots=MAX_SLOTS, page_size=PAGE_SIZE))
     # Ratios of per-arm NOISE FLOORS (the long_best rows above): each arm

@@ -83,7 +83,17 @@ def _restore_dtype(block: np.ndarray, dtype) -> np.ndarray:
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
                     extra_meta: Optional[Dict] = None) -> str:
-    """Synchronous save. Returns the committed directory path."""
+    """Synchronous save. Returns the committed directory path.
+
+    Consults the process-global fault injector (``ckpt_io`` specs, site
+    ``checkpoint``): an injected write failure raises OSError *before*
+    anything touches disk -- exactly the failure class the tmp-dir +
+    ``_COMMITTED`` + rename protocol and ``run_with_restarts`` exist to
+    absorb, now provokable deterministically."""
+    from repro.runtime import faults as _faults
+    _inj = _faults.active()
+    if _inj is not None and _inj.ckpt_fails():
+        raise OSError(f"injected checkpoint-write failure at step {step}")
     host = jax.process_index()
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"

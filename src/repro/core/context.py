@@ -12,8 +12,16 @@ frozen value:
   * ``cfg``       -- the elaborated :class:`GemminiConfig` the kernels
                      tile against (``None`` is legal for the attention
                      ops, which fall back to the bf16 engine default);
-  * ``backend``   -- ``pallas`` | ``interpret`` | ``xla``, chosen once
-                     instead of per call;
+  * ``backend``   -- ``pallas`` | ``interpret`` | ``xla`` | ``xla_twin``,
+                     chosen once instead of per call.  ``xla_twin`` is the
+                     degraded-mode backend: every *kernel* dispatches its
+                     plan-free XLA twin (bit-identical to the Pallas body,
+                     no tuned schedule involved), but the model layers
+                     still see a non-``xla`` backend and keep routing
+                     projections through the engine datapath -- so a step
+                     re-run on the twin after a fault is bit-exact against
+                     the faulted engine's own step, which the plain
+                     ``xla`` backend (float-LM projection path) is not;
   * ``tune_mode`` -- per-context override of the ``GEMMINI_TUNE`` flag
                      (``None`` inherits the process flag), scoped around
                      each dispatch so two contexts with different tune
@@ -62,7 +70,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 from repro.core import flags
 from repro.core.config import GemminiConfig
 
-BACKENDS = ("xla", "pallas", "interpret")
+BACKENDS = ("xla", "pallas", "interpret", "xla_twin")
 
 
 class GemminiDeprecationWarning(DeprecationWarning):
@@ -163,11 +171,20 @@ class ExecutionContext:
         return n
 
     @property
+    def impl_backend(self) -> str:
+        """The kernel-impl dispatch string: ``xla_twin`` lowers every op
+        to its plan-free XLA twin (``backend="xla"`` at the impl layer)
+        while remaining a distinct *model-level* backend -- see the class
+        docstring for why the twin must not take the float-LM projection
+        shortcut."""
+        return "xla" if self.backend == "xla_twin" else self.backend
+
+    @property
     def sharded(self) -> bool:
         """True when dispatch wraps kernels in shard_map: a mesh is set
-        AND the backend runs real kernel bodies (the xla reference is
-        already SPMD-partitionable; GSPMD owns it)."""
-        return self.mesh is not None and self.backend != "xla" \
+        AND the backend runs real kernel bodies (the xla reference and
+        the xla_twin are already SPMD-partitionable; GSPMD owns them)."""
+        return self.mesh is not None and self.impl_backend != "xla" \
             and self.n_shards > 1
 
     # -- dispatch ----------------------------------------------------------
@@ -225,7 +242,48 @@ class ExecutionContext:
             raise AttributeError(
                 f"ExecutionContext has no op {name!r}; registered ops: "
                 f"{registered_ops()}")
-        return functools.partial(_OPS[name], self)
+        fn = functools.partial(_OPS[name], self)
+        inj = _fault_injector()
+        return fn if inj is None else _faulted_op(name, fn, inj)
+
+
+def _fault_injector():
+    """The process-global fault injector, if one is installed (see
+    :mod:`repro.runtime.faults`). Lazy import: core must not depend on
+    runtime at import time, and the common case (no faults) costs one
+    None check per dispatch."""
+    try:
+        from repro.runtime import faults
+    except ImportError:                       # pragma: no cover - stub envs
+        return None
+    return faults.active()
+
+
+def _faulted_op(name: str, fn: Callable, inj) -> Callable:
+    """Wrap one op dispatch with the injector's op-boundary hooks at site
+    ``op:<name>``: a transient spec raises before the call, a poison spec
+    NaN/Inf-fills the (first) output after it.
+
+    Injection applies only to EAGER calls. Under a jit trace the wrapper
+    is a pass-through: a fault injected at trace time would be baked into
+    the compiled function -- permanent, unseedable, and invisible to the
+    engine's host-level guards -- so traced ops fault at the engine's
+    step boundaries instead (see ServingEngine._run_guarded)."""
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        import jax
+        clean = getattr(jax.core, "trace_state_clean", None)
+        if clean is not None and not clean():
+            return fn(*args, **kw)
+        site = f"op:{name}"
+        inj.check_transient(site)
+        out = fn(*args, **kw)
+        if isinstance(out, tuple):
+            return (inj.poison(site, out[0]),) + out[1:]
+        return inj.poison(site, out)
+
+    return wrapped
 
 
 @functools.lru_cache(maxsize=1)
@@ -278,7 +336,7 @@ def _gemm(ctx: ExecutionContext, a, b, d=None, **kw):
             # before the context existed.
             return ctx._shard_call(
                 lambda aa, bb: ops.gemm_impl(aa, bb, d, cfg=cfg,
-                                             backend=ctx.backend, **kw),
+                                             backend=ctx.impl_backend, **kw),
                 (a, b), (True, False))
         import jax.numpy as jnp
         # Sharded + biased: a broadcast (1, N) bias row cannot shard over
@@ -288,7 +346,7 @@ def _gemm(ctx: ExecutionContext, a, b, d=None, **kw):
         db = jnp.broadcast_to(d, (m, b.shape[1]))
         return ctx._shard_call(
             lambda aa, bb, dd: ops.gemm_impl(aa, bb, dd, cfg=cfg,
-                                             backend=ctx.backend, **kw),
+                                             backend=ctx.impl_backend, **kw),
             (a, b, db), (True, False, True))
 
 
@@ -312,7 +370,7 @@ def _conv2d(ctx: ExecutionContext, x, w, b=None, **kw):
     with ctx._tune_scope():
         return ctx._shard_call(
             lambda xx: ops.conv2d_impl(xx, w, b, cfg=cfg,
-                                       backend=ctx.backend, **kw),
+                                       backend=ctx.impl_backend, **kw),
             (x,), (True,))
 
 
@@ -326,7 +384,7 @@ def _flash_attention(ctx: ExecutionContext, q, k, v, **kw):
     with ctx._tune_scope():
         return ctx._shard_call(
             lambda qq, kk, vv: ops.flash_attention_impl(
-                qq, kk, vv, cfg=ctx.cfg, backend=ctx.backend, **kw),
+                qq, kk, vv, cfg=ctx.cfg, backend=ctx.impl_backend, **kw),
             (q, k, v), (True, True, True))
 
 
@@ -341,7 +399,7 @@ def _paged_attention(ctx: ExecutionContext, q, k_pool, v_pool, block_tables,
     with ctx._tune_scope():
         return ctx._shard_call(
             lambda qq, bt, ln: ops.paged_attention_impl(
-                qq, k_pool, v_pool, bt, ln, backend=ctx.backend, **kw),
+                qq, k_pool, v_pool, bt, ln, backend=ctx.impl_backend, **kw),
             (q, block_tables, lengths), (True, True, True))
 
 
@@ -356,7 +414,7 @@ def _paged_prefill_attention(ctx: ExecutionContext, q, k_pool, v_pool,
     from repro.kernels import ops
     with ctx._tune_scope():
         return ops.paged_prefill_attention_impl(
-            q, k_pool, v_pool, block_table, start, backend=ctx.backend, **kw)
+            q, k_pool, v_pool, block_table, start, backend=ctx.impl_backend, **kw)
 
 
 @register_op("ssd")
@@ -375,9 +433,9 @@ def _ssd(ctx: ExecutionContext, x, dt, a_log, b, c, **kw):
             return ctx._shard_call(
                 lambda xx, dd, bb, cc, ii: ops.ssd_impl(
                     xx, dd, a_log, bb, cc, initial_state=ii,
-                    backend=ctx.backend, **kw),
+                    backend=ctx.impl_backend, **kw),
                 (x, dt, b, c, init), (True,) * 5, out_batched)
         return ctx._shard_call(
             lambda xx, dd, bb, cc: ops.ssd_impl(
-                xx, dd, a_log, bb, cc, backend=ctx.backend, **kw),
+                xx, dd, a_log, bb, cc, backend=ctx.impl_backend, **kw),
             (x, dt, b, c), (True,) * 4, out_batched)

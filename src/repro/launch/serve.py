@@ -27,7 +27,9 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
           temperature: float = 1.0, seed: int = 0, eos_id: int = -1,
           policy: str = "continuous", max_slots: int = 0,
           page_size: int = 0, prefill_chunk: int = 0,
-          backend: str = "", admission_policy: str = "fifo"):
+          backend: str = "", admission_policy: str = "fifo",
+          faults: str = "", enforce_deadlines: bool = False,
+          deadline_s: float = 0.0):
     """Serve ``batch`` random-prompt requests; returns the old static-loop
     schema (tokens (B, gen[, n_q]), t_prefill, t_decode, tok_per_s) plus
     the engine's full telemetry under ``report``.
@@ -37,7 +39,13 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
     page-aligned), negative = disabled (single-pass prefill).
     ``backend``: the engine ``ExecutionContext`` backend (empty = host
     default: pallas on TPU, xla elsewhere); ``admission_policy``:
-    fifo | priority | deadline (scheduler admission order)."""
+    fifo | priority | deadline (scheduler admission order).
+
+    Robustness knobs (docs/serving.md#robustness): ``faults`` is a
+    ``GEMMINI_FAULTS``-grammar spec string (empty = env/off);
+    ``enforce_deadlines`` sheds expired requests instead of serving
+    them; ``deadline_s`` stamps every submitted request with a relative
+    per-request SLO (0 = best-effort)."""
     rng = np.random.default_rng(seed)
     max_slots = max_slots or min(batch, 8)
     max_context = prompt_len + model_cfg.n_meta_tokens + gen_len + 64
@@ -46,7 +54,8 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
         page_size=page_size or None, seed=seed, temperature=temperature,
         policy=policy, warm_prompt_lens=[prompt_len],
         prefill_chunk=None if prefill_chunk < 0 else prefill_chunk,
-        backend=backend or None, admission_policy=admission_policy)
+        backend=backend or None, admission_policy=admission_policy,
+        faults=faults or None, enforce_deadlines=enforce_deadlines)
     if engine.warm_stats is not None:
         from repro import tune
         s = engine.warm_stats
@@ -60,17 +69,22 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
 
     tok_shape = (prompt_len, model_cfg.n_codebooks) \
         if model_cfg.n_codebooks > 1 else (prompt_len,)
+    deadline = (time.time() + deadline_s) if deadline_s > 0 else None
     for _ in range(batch):
         prompt = rng.integers(0, model_cfg.vocab, tok_shape).astype(np.int32)
-        engine.submit(prompt, gen_len, eos_id=eos_id)
+        engine.submit(prompt, gen_len, eos_id=eos_id, deadline=deadline)
     t0 = time.time()
     report = engine.run()
     wall = time.time() - t0
 
-    # Old static-loop output schema: (B, gen) tokens, frozen-at-0 past EOS.
+    # Old static-loop output schema: (B, gen) tokens, frozen-at-0 past EOS
+    # (shed requests contribute their exact partial stream, zero-padded).
+    full_shape = (gen_len, model_cfg.n_codebooks) \
+        if model_cfg.n_codebooks > 1 else (gen_len,)
     outs = []
     for r in report["requests"]:
-        toks = np.asarray(r["tokens"], np.int32)
+        toks = np.asarray(r["tokens"], np.int32).reshape(
+            (-1,) + full_shape[1:])
         pad_shape = (gen_len - toks.shape[0],) + toks.shape[1:]
         outs.append(np.concatenate([toks, np.zeros(pad_shape, np.int32)]))
     toks = np.stack(outs)
@@ -112,6 +126,18 @@ def main(argv=None):
                     default="fifo",
                     help="scheduler admission order (priority/deadline use "
                          "Request.priority / Request.deadline)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault-injection spec "
+                         "(GEMMINI_FAULTS grammar, e.g. "
+                         "'seed=7;nan@decode:p=0.2,max=2'); empty = "
+                         "$GEMMINI_FAULTS / off")
+    ap.add_argument("--enforce-deadlines", action="store_true",
+                    help="shed requests whose deadline passed "
+                         "(terminal deadline_missed status) instead of "
+                         "serving them to completion")
+    ap.add_argument("--deadline", type=float, default=0.0, metavar="S",
+                    help="per-request SLO: stamp every request with "
+                         "submit-time + S seconds (0 = best-effort)")
     args = ap.parse_args(argv)
     # Always re-set: set_flag validates, so a typo'd $GEMMINI_TUNE fails at
     # startup instead of (maybe never) at the first plan resolution.
@@ -122,7 +148,10 @@ def main(argv=None):
                 gen_len=args.gen, temperature=args.temperature,
                 policy=args.policy, max_slots=args.slots,
                 page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-                backend=args.backend, admission_policy=args.admission)
+                backend=args.backend, admission_policy=args.admission,
+                faults=args.faults,
+                enforce_deadlines=args.enforce_deadlines,
+                deadline_s=args.deadline)
     s = out["report"]["summary"]
     print(f"[serve] {args.policy}: {int(s['requests'])} reqs, "
           f"{int(s['new_tokens'])} tokens in {s['wall_s']*1e3:.0f}ms "
@@ -134,6 +163,14 @@ def main(argv=None):
           f"{int(s['prefill_chunks'])} prefill chunks, "
           f"preemptions {int(s['preemptions'])}, "
           f"out shape {out['tokens'].shape}")
+    if s["injected_faults"] or s["retries"] or s["fallbacks"] or s["shed"]:
+        faults_seen = out["report"].get("faults", {})
+        print(f"[serve] robustness: {int(s['injected_faults'])} injected "
+              f"({faults_seen}), {int(s['retries'])} retries, "
+              f"{int(s['fallbacks'])} xla fallbacks, "
+              f"{int(s['shed'])} shed, "
+              f"{int(s['straggler_steps'])} straggler steps, "
+              f"quarantined {out['report']['quarantined'] or 'none'}")
     return out
 
 

@@ -89,7 +89,10 @@ def project(engine, x: jnp.ndarray, w: jnp.ndarray,
     kernel in shard_map at per-device M."""
     if engine.backend == "xla":
         # Float LM path: keep XLA free to fuse/partition; numerics equal to
-        # the engine's float datapath (fp32 accumulate).
+        # the engine's float datapath (fp32 accumulate). "xla_twin"
+        # deliberately does NOT take this shortcut: the degraded-mode twin
+        # must round through the same engine datapath as the kernel
+        # backends (ctx.matmul lowers it to plain XLA ops anyway).
         y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         y = y.astype(x.dtype)

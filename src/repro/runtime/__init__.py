@@ -1,13 +1,17 @@
-from repro.runtime.ft import (HeartbeatMonitor, StragglerDetector,
-                              RestartPolicy, run_with_restarts)
+from repro.runtime.ft import (HeartbeatMonitor, StepWatchdog,
+                              StragglerDetector, RestartPolicy,
+                              run_with_restarts)
+from repro.runtime.faults import (FaultInjector, FaultPlan, FaultSpec,
+                                  TransientOpError)
 from repro.runtime.compression import (topk_compress, topk_decompress,
                                        ErrorFeedbackState,
                                        compress_grads_with_feedback,
                                        int8_compress, int8_decompress)
 
 __all__ = [
-    "HeartbeatMonitor", "StragglerDetector", "RestartPolicy",
-    "run_with_restarts", "topk_compress", "topk_decompress",
-    "ErrorFeedbackState", "compress_grads_with_feedback",
-    "int8_compress", "int8_decompress",
+    "FaultInjector", "FaultPlan", "FaultSpec", "TransientOpError",
+    "HeartbeatMonitor", "StepWatchdog", "StragglerDetector",
+    "RestartPolicy", "run_with_restarts", "topk_compress",
+    "topk_decompress", "ErrorFeedbackState",
+    "compress_grads_with_feedback", "int8_compress", "int8_decompress",
 ]

@@ -11,6 +11,9 @@ the control-plane pieces the launcher composes:
 * :class:`StragglerDetector` -- EWMA + variance of step times; a step whose
   z-score exceeds the threshold flags a straggler so the launcher can log,
   exclude, or re-shard around the slow host.
+* :class:`StepWatchdog` -- the serving-loop composition of the two:
+  per-step latency telemetry + straggler flags + liveness beats
+  (``ServingEngine.run`` drives it once per iteration).
 * :func:`run_with_restarts` -- the restart loop: run the training callable;
   on failure restore the latest committed checkpoint and re-enter, possibly
   on a *shrunk* mesh (elastic scaling: lose a pod -> continue on the
@@ -26,14 +29,40 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 class HeartbeatMonitor:
+    """Per-host liveness marks over an injectable clock.
+
+    Membership is explicit: hosts are declared at construction (or via
+    :meth:`register`), and a beat from an undeclared host raises by
+    default. The silent-register alternative is a liveness hole -- a
+    typo'd host id in the beat path would keep "h0-typo" alive forever
+    while the real ``h0`` quietly times out and nothing names it dead.
+    ``strict=False`` downgrades the raise to a flag: the beat is dropped
+    (never counted as liveness) and the offender lands in
+    ``unknown_beats`` for the launcher to log.
+    """
+
     def __init__(self, hosts: List[str], timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 strict: bool = True):
         self.timeout = timeout_s
         self.clock = clock
+        self.strict = strict
         now = clock()
         self.last: Dict[str, float] = {h: now for h in hosts}
+        self.unknown_beats: Dict[str, int] = {}
+
+    def register(self, host: str) -> None:
+        """Declare a new member host (its clock starts now)."""
+        self.last[host] = self.clock()
 
     def beat(self, host: str):
+        if host not in self.last:
+            if self.strict:
+                raise KeyError(
+                    f"heartbeat from unknown host {host!r}; known hosts: "
+                    f"{sorted(self.last)} (register() it first)")
+            self.unknown_beats[host] = self.unknown_beats.get(host, 0) + 1
+            return
         self.last[host] = self.clock()
 
     def dead(self) -> List[str]:
@@ -82,6 +111,47 @@ class StragglerDetector:
         self.mean = (1 - a) * self.mean + a * dt
         self.var = (1 - a) * self.var + a * (dt - self.mean) ** 2
         return is_straggler
+
+
+class StepWatchdog:
+    """Serving-loop step watchdog: per-step latency telemetry plus the
+    straggler/liveness machinery above, composed for the engine.
+
+    ``ServingEngine.run`` calls :meth:`observe` once per iteration with
+    the step's wall time: the detector flags straggler steps (injected or
+    real), an optional :class:`HeartbeatMonitor` gets a beat for this
+    host (so an external supervisor watching the monitor sees a wedged
+    serving loop go dead), and :meth:`stats` folds p50/p95 step latency
+    into the run summary.
+    """
+
+    def __init__(self, detector: Optional[StragglerDetector] = None,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 host: str = "serve"):
+        self.detector = detector or StragglerDetector()
+        self.monitor = monitor
+        self.host = host
+        if monitor is not None and host not in monitor.last:
+            monitor.register(host)
+        self.step_times: List[float] = []
+        self.straggler_steps = 0
+
+    def observe(self, dt: float) -> bool:
+        """Record one engine step; True if it was flagged a straggler."""
+        self.step_times.append(dt)
+        if self.monitor is not None:
+            self.monitor.beat(self.host)
+        flagged = self.detector.observe(dt)
+        if flagged:
+            self.straggler_steps += 1
+        return flagged
+
+    def stats(self) -> Dict[str, float]:
+        import numpy as np
+        dts = np.asarray(self.step_times or [0.0])
+        return {"straggler_steps": float(self.straggler_steps),
+                "step_p50_s": float(np.percentile(dts, 50)),
+                "step_p95_s": float(np.percentile(dts, 95))}
 
 
 @dataclasses.dataclass

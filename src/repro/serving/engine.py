@@ -44,6 +44,8 @@ from repro.core.config import GemminiConfig
 from repro.core.context import ExecutionContext
 from repro.core.generator import default_engine_backend
 from repro.models import transformer as tf
+from repro.runtime import faults as rfaults
+from repro.runtime.ft import StepWatchdog
 from repro.serving.paged_cache import PagedKVAllocator, arena_pages
 from repro.serving.scheduler import ContinuousScheduler, Request, summarize
 
@@ -57,21 +59,31 @@ from repro.serving.scheduler import ContinuousScheduler, Request, summarize
 _JIT_CACHE: Dict = {}
 
 
-def _jitted_steps(engine: ExecutionContext, model_cfg, page_size: int):
-    key = (engine, model_cfg, page_size)
+def _jitted_steps(engine: ExecutionContext, model_cfg, page_size: int,
+                  donate: bool = True):
+    """The five jitted model steps, keyed by name.
+
+    ``donate=False`` keeps the state argument alive across a call: the
+    NaN/Inf-guard path re-runs the *same pre-call state* on the XLA twin
+    after the primary backend produced non-finite logits, which is only
+    sound if the primary call did not consume the buffer. Guarded engines
+    therefore trade one extra in-flight state copy for an exact degraded
+    mode; unguarded engines (the default) keep the donating fast path."""
+    key = (engine, model_cfg, page_size, donate)
     if key not in _JIT_CACHE:
+        dn = (2,) if donate else ()
         prefill = jax.jit(
             lambda p, tok, st, slot, pages: tf.paged_prefill(
                 engine, p, model_cfg, tok, st, slot, pages,
                 page_size=page_size),
-            donate_argnums=(2,))
+            donate_argnums=dn)
         # Logits-free twins for intermediate chunks: nothing samples until
         # the last chunk, so they skip the unembed vocab GEMM entirely.
         prefill_nl = jax.jit(
             lambda p, tok, st, slot, pages: tf.paged_prefill(
                 engine, p, model_cfg, tok, st, slot, pages,
                 page_size=page_size, with_logits=False),
-            donate_argnums=(2,))
+            donate_argnums=dn)
         # Continuation chunks additionally carry the STATIC kv_pages bound
         # (admission-time prompt footprint in pages): one compile bucket
         # per (chunk length, kv_pages) pair, and the gather attention only
@@ -81,18 +93,20 @@ def _jitted_steps(engine: ExecutionContext, model_cfg, page_size: int):
             tf.paged_prefill_chunk(
                 engine, p, model_cfg, tok, st, slot, pages, start,
                 page_size=page_size, kv_pages=kv_pages),
-            donate_argnums=(2,), static_argnums=(6,))
+            donate_argnums=dn, static_argnums=(6,))
         chunk_nl = jax.jit(
             lambda p, tok, st, slot, pages, start, kv_pages:
             tf.paged_prefill_chunk(
                 engine, p, model_cfg, tok, st, slot, pages, start,
                 page_size=page_size, with_logits=False, kv_pages=kv_pages),
-            donate_argnums=(2,), static_argnums=(6,))
+            donate_argnums=dn, static_argnums=(6,))
         decode = jax.jit(
             lambda p, tok, st, act: tf.paged_decode_step(
                 engine, p, model_cfg, tok, st, act, page_size=page_size),
-            donate_argnums=(2,))
-        _JIT_CACHE[key] = (prefill, prefill_nl, chunk, chunk_nl, decode)
+            donate_argnums=dn)
+        _JIT_CACHE[key] = {"prefill": prefill, "prefill_nl": prefill_nl,
+                           "chunk": chunk, "chunk_nl": chunk_nl,
+                           "decode": decode}
     return _JIT_CACHE[key]
 
 
@@ -120,6 +134,17 @@ class ServingEngine:
       (earliest-deadline-first). See ``scheduler.ContinuousScheduler``.
     * ``warm_prompt_lens`` -- pre-resolve every tuned schedule the given
       prompt lengths will hit (no-op under ``GEMMINI_TUNE=off``).
+    * ``faults`` / ``nan_guard`` / ``max_step_retries`` /
+      ``retry_backoff_s`` / ``enforce_deadlines`` -- the robustness
+      envelope (docs/serving.md#robustness): deterministic fault
+      injection (``faults=None`` consults ``$GEMMINI_FAULTS``; off by
+      default), post-step NaN/Inf guard with retry-on-the-XLA-twin +
+      schedule quarantine (defaults to on iff faults are on), bounded
+      retry-with-backoff for transient step failures, and SLO
+      enforcement (shed expired deadlines instead of serving them).
+    * ``watchdog`` -- a :class:`repro.runtime.StepWatchdog` (default: a
+      fresh one) observing every engine iteration: straggler flags +
+      step-latency percentiles in the run summary, optional heartbeat.
 
     Dispatch is an :class:`ExecutionContext` (``self.engine``): cfg +
     backend + tune policy in one frozen value handed to the jitted model
@@ -140,7 +165,13 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = None,
                  policy: str = "continuous",
                  admission_policy: str = "fifo",
-                 warm_prompt_lens: Sequence[int] = ()):
+                 warm_prompt_lens: Sequence[int] = (),
+                 faults=None,
+                 nan_guard: Optional[bool] = None,
+                 max_step_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 enforce_deadlines: bool = False,
+                 watchdog: Optional[StepWatchdog] = None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         self.model_cfg = model_cfg
@@ -148,6 +179,21 @@ class ServingEngine:
         self.temperature = temperature
         self.max_slots = max_slots
         self.max_context = max_context
+        # -- robustness envelope (docs/serving.md#robustness) --------------
+        # faults: None consults $GEMMINI_FAULTS (usually: off); a spec
+        # string / FaultPlan / FaultInjector turns deterministic fault
+        # injection on for THIS engine only. nan_guard defaults to
+        # "on iff faults are on": the guard host-checks every step's
+        # logits, and the fault-free fast path must stay byte-identical
+        # to PR 5 (donating jits, no per-step isfinite sync).
+        self.faults = rfaults.as_injector(faults)
+        self.nan_guard = (self.faults is not None) if nan_guard is None \
+            else nan_guard
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.counters: Dict[str, int] = {"retries": 0, "fallbacks": 0}
+        self.quarantined: List[str] = []
+        self.watchdog = watchdog or StepWatchdog()
         cfg = engine_cfg or GemminiConfig(input_dtype="bf16",
                                           acc_dtype="fp32",
                                           output_dtype="bf16")
@@ -201,7 +247,8 @@ class ServingEngine:
             extra_tokens_per_prefill=model_cfg.n_meta_tokens,
             pad_to=self.prefill_pad,
             prefill_chunk=prefill_chunk,
-            admission_policy=admission_policy)
+            admission_policy=admission_policy,
+            enforce_deadlines=enforce_deadlines)
         self.prefill_chunk = self.sched.prefill_chunk
         if policy == "static":
             # Static batching as a degenerate policy: admit only into an
@@ -220,9 +267,21 @@ class ServingEngine:
                                          self.max_pages_per_seq,
                                          dtype=model_cfg.dtype)
         mc = model_cfg
-        (self._jit_prefill, self._jit_prefill_nl, self._jit_chunk,
-         self._jit_chunk_nl, self._jit_decode) = _jitted_steps(
-            self.engine, mc, self.page_size)
+        # Guarded engines use non-donating jits (see _jitted_steps: the
+        # XLA-twin retry needs the pre-call state buffer alive).
+        self._steps = _jitted_steps(self.engine, mc, self.page_size,
+                                    donate=not self.nan_guard)
+        self._fb_steps = None        # XLA-twin fallbacks, built on demand
+        # The tuned schedule the decode path launches, for quarantine on a
+        # guard trip: the same key resolve_paged_attn_schedule resolved the
+        # page size under. None when tuning is off or the family has no
+        # attention (nothing tuned to quarantine).
+        self._paged_sched_key: Optional[str] = None
+        if mc.has_attn and flags.get("tune_mode") != "off":
+            from repro.tune import schedules as tsched
+            self._paged_sched_key = tsched.paged_attn_cache_key(
+                cfg, max_slots, mc.n_heads, mc.n_kv_heads, mc.head_dim,
+                max_context, window=None, dtype=mc.dtype)
 
         tok_shape = (max_slots,) if mc.n_codebooks == 1 \
             else (max_slots, mc.n_codebooks)
@@ -341,6 +400,80 @@ class ServingEngine:
             tables = tables.at[slot].set(jnp.asarray(self._table_row(slot)))
         self.state = self.state._replace(tables=tables)
 
+    # -- robustness envelope ----------------------------------------------
+    def _fallback_steps(self):
+        """The bit-exact XLA twins of the jitted steps (PR 3/4's exactness
+        contract is what makes degraded mode *exact*): same model, same
+        paged state, same engine datapath for every projection -- only the
+        kernel lowerings swap for their plan-free XLA twins
+        (``backend="xla_twin"``; the plain ``xla`` backend would also flip
+        the model onto the float-LM projection path and the re-run would
+        drift off the faulted stream at bf16-rounding level). An engine
+        already lowering to XLA (``xla`` or ``xla_twin``) has no tuned
+        schedule to blame, so its fallback is a clean re-run of the same
+        backend (donate=False variant)."""
+        if self._fb_steps is None:
+            fb = self.engine.backend if self.engine.impl_backend == "xla" \
+                else "xla_twin"
+            self._fb_steps = _jitted_steps(
+                self.engine.with_backend(fb), self.model_cfg,
+                self.page_size, donate=False)
+        return self._fb_steps
+
+    def _quarantine(self, site: str) -> None:
+        """Bar the tuned schedule behind a guard trip from future
+        resolution (PlanCache.quarantine). Only the decode path maps 1:1
+        to one tuned schedule (the paged-attention key the page size was
+        resolved under); prefill trips still fall back + count, but have
+        no single schedule to blame."""
+        key = self._paged_sched_key if site == "decode" else None
+        if key is None or key in self.quarantined:
+            return
+        from repro import tune
+        tune.get_cache().quarantine(key)
+        self.quarantined.append(key)
+
+    def _run_guarded(self, site: str, which: str, args: tuple):
+        """One jitted model step under the robustness envelope.
+
+        Order of events: (1) injected transient failures raise *before*
+        the call and retry with bounded exponential backoff -- state is
+        untouched, so a retry is a plain re-dispatch; (2) the injector may
+        poison the returned logits (host-level: compiled functions stay
+        byte-identical to the fault-free run); (3) with ``nan_guard`` on,
+        non-finite logits trigger one retry of the SAME step on the XLA
+        twin from the SAME pre-call state (non-donating jits keep it
+        alive), the tuned schedule is quarantined, and the fallback is
+        counted in telemetry. A twin that still produces non-finite
+        logits means the model itself diverged -- that raises, because
+        sampling from NaN logits would silently emit garbage tokens.
+        """
+        inj = self.faults
+        for attempt in range(self.max_step_retries + 1):
+            try:
+                if inj is not None:
+                    inj.check_transient(site)
+                logits, state = self._steps[which](*args)
+                break
+            except rfaults.TransientOpError:
+                self.counters["retries"] += 1
+                if attempt == self.max_step_retries:
+                    raise
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
+        if inj is not None and logits is not None:
+            logits = inj.poison(site, logits)
+        if self.nan_guard and logits is not None and \
+                not bool(np.isfinite(np.asarray(logits)).all()):
+            self.counters["fallbacks"] += 1
+            self._quarantine(site)
+            logits, state = self._fallback_steps()[which](*args)
+            if not bool(np.isfinite(np.asarray(logits)).all()):
+                raise FloatingPointError(
+                    f"non-finite logits at {site!r} survived the XLA "
+                    f"fallback: model divergence, not a kernel fault")
+        return logits, state
+
     def _do_prefill(self, req: Request, slot: int) -> None:
         prompt = req.serve_prompt()
         pad = self._bucket(len(prompt)) - len(prompt)
@@ -348,9 +481,10 @@ class ServingEngine:
             prompt = np.pad(prompt, ((0, pad),) + ((0, 0),)
                             * (prompt.ndim - 1))
         row = self._table_row(slot)
-        logits, self.state = self._jit_prefill(
-            self.params, jnp.asarray(prompt[None]), self.state,
-            jnp.int32(slot), jnp.asarray(row))
+        logits, self.state = self._run_guarded(
+            "prefill", "prefill",
+            (self.params, jnp.asarray(prompt[None]), self.state,
+             jnp.int32(slot), jnp.asarray(row)))
         true_len = len(req.serve_prompt()) + self.model_cfg.n_meta_tokens
         req.cache_len = true_len
         req.n_chunks += 1
@@ -392,21 +526,23 @@ class ServingEngine:
             toks = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1))
         row = self._table_row(slot)
         if w.first:
-            fn = self._jit_prefill if w.last else self._jit_prefill_nl
-            logits, self.state = fn(
-                self.params, jnp.asarray(toks[None]), self.state,
-                jnp.int32(slot), jnp.asarray(row))
+            which = "prefill" if w.last else "prefill_nl"
+            logits, self.state = self._run_guarded(
+                "prefill", which,
+                (self.params, jnp.asarray(toks[None]), self.state,
+                 jnp.int32(slot), jnp.asarray(row)))
         else:
             # Static dead-key bound for the gather attention: the scheduler
             # stamps each continuation chunk with the pages the whole
             # (padded) prompt will ever occupy (PrefillChunk.kv_pages) --
             # table entries past it can never hold live keys and need not
             # be contracted.
-            fn = self._jit_chunk if w.last else self._jit_chunk_nl
-            logits, self.state = fn(
-                self.params, jnp.asarray(toks[None]), self.state,
-                jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start),
-                w.kv_pages or None)
+            which = "chunk" if w.last else "chunk_nl"
+            logits, self.state = self._run_guarded(
+                "chunk", which,
+                (self.params, jnp.asarray(toks[None]), self.state,
+                 jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start),
+                 w.kv_pages or None))
         req.cache_len = w.true_end
         req.n_chunks += 1
         if w.last:
@@ -431,9 +567,10 @@ class ServingEngine:
         toks = self._next_token[:, None] \
             if self.model_cfg.n_codebooks == 1 \
             else self._next_token[:, None, :]
-        logits, self.state = self._jit_decode(
-            self.params, jnp.asarray(toks), self.state,
-            jnp.asarray(active_np))
+        logits, self.state = self._run_guarded(
+            "decode", "decode",
+            (self.params, jnp.asarray(toks), self.state,
+             jnp.asarray(active_np)))
         last = self._sample(logits[:, -1])
         now = time.time()
         for slot, req in list(self.sched.running.items()):
@@ -443,29 +580,53 @@ class ServingEngine:
             self._record_token(req, last[slot], now)
 
     def step(self) -> None:
-        """One scheduler iteration: prefill (whole prompts, or chunks
-        interleaved at ``prefill_chunk`` granularity), ensure decode
-        capacity (preempting by eviction under pressure), decode one
-        token for every fully-prefilled running slot."""
-        admit_new = not (self.policy == "static" and self.sched.running)
-        for w in self.sched.prefill_schedule(admit_new=admit_new):
-            self._do_prefill_chunk(w)
-        for req in self.sched.rejected:
-            # Regrew past the arena while preempted: finish truncated.
-            self.sched.finish(req, truncated=True)
-        self.sched.rejected = []
-        new_pages, _evicted, _truncated = self.sched.ensure_decode_capacity()
-        if new_pages:
-            self._sync_tables({slot for slot, _ in new_pages})
-        if any(not r.prefilling for r in self.sched.running.values()):
-            self._do_decode()
+        """One scheduler iteration: shed expired deadlines (admission
+        boundary), prefill (whole prompts, or chunks interleaved at
+        ``prefill_chunk`` granularity), ensure decode capacity (preempting
+        by eviction under pressure), shed expired deadlines again (decode
+        boundary), decode one token for every fully-prefilled running
+        slot. With faults on, the injector runs first: straggler sleeps
+        and one iteration's worth of arena pressure (pages withheld for
+        the whole step, so the scheduler's can_admit-then-alloc protocol
+        stays consistent, then released)."""
+        inj = self.faults
+        held = 0
+        if inj is not None:
+            inj.straggle("step")
+            k = inj.arena_pressure()
+            if k:
+                held = self.alloc.hold_pages(k)
+        try:
+            self.sched.shed_expired()
+            admit_new = not (self.policy == "static" and self.sched.running)
+            for w in self.sched.prefill_schedule(admit_new=admit_new):
+                self._do_prefill_chunk(w)
+            for req in self.sched.rejected:
+                # Regrew past the arena while preempted: finish truncated.
+                self.sched.finish(req, truncated=True)
+            self.sched.rejected = []
+            new_pages, _evicted, _trunc = self.sched.ensure_decode_capacity()
+            if new_pages:
+                self._sync_tables({slot for slot, _ in new_pages})
+            self.sched.shed_expired()
+            if any(not r.prefilling for r in self.sched.running.values()):
+                self._do_decode()
+        finally:
+            if held:
+                self.alloc.release_held()
 
     def run(self) -> Dict:
-        """Drain the queue; returns {summary, requests} telemetry."""
+        """Drain the queue; returns {summary, requests} telemetry.
+
+        Every submitted request reaches a terminal status before this
+        returns: ``finished`` (possibly ``truncated``) or ``shed`` --
+        the no-silent-loss invariant the chaos suite asserts."""
         t0 = time.time()
         iters = 0
         while self.sched.has_work:
+            ts = time.time()
             self.step()
+            self.watchdog.observe(time.time() - ts)
             iters += 1
             if iters > 100_000:
                 raise RuntimeError("serving loop did not converge")
@@ -475,14 +636,26 @@ class ServingEngine:
         # continuous batching's win IS fewer engine iterations for the same
         # token count (slot recycling), independent of host noise.
         summary["iterations"] = float(iters)
-        return {"summary": summary,
-                "requests": [self._req_report(r) for r in self.requests]}
+        # Robustness counters (all 0 on a fault-free engine) + step-latency
+        # percentiles from the watchdog: the BENCH_serving robustness row.
+        summary["retries"] = float(self.counters["retries"])
+        summary["fallbacks"] = float(self.counters["fallbacks"])
+        summary["injected_faults"] = float(
+            self.faults.total_injected if self.faults else 0)
+        summary.update(self.watchdog.stats())
+        report = {"summary": summary,
+                  "requests": [self._req_report(r) for r in self.requests],
+                  "quarantined": list(self.quarantined)}
+        if self.faults is not None:
+            report["faults"] = self.faults.report()
+        return report
 
     def _req_report(self, r: Request) -> Dict:
         itl = np.asarray(r.itl_s) if r.itl_s else None
         return {"rid": r.rid, "prompt_tokens": int(len(r.prompt)),
                 "new_tokens": r.n_generated,
                 "tokens": np.asarray(r.generated),
+                "status": r.state, "shed_reason": r.shed_reason,
                 "preempted": r.n_preempted, "truncated": r.truncated,
                 "prefill_chunks": r.n_chunks,
                 "ttft_s": (r.t_first_token - r.submitted_at)

@@ -49,6 +49,7 @@ class PagedKVAllocator:
         # can observe reuse deterministically and the hot arena stays small.
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
         self._tables: Dict[int, List[int]] = {}      # slot -> page ids
+        self._held: List[int] = []                   # withheld (see hold_pages)
 
     # -- capacity accounting ----------------------------------------------
     @property
@@ -125,6 +126,35 @@ class PagedKVAllocator:
         self._free.extend(reversed(pages))
         return len(pages)
 
+    # -- pressure / reservation -------------------------------------------
+    @property
+    def held_pages(self) -> int:
+        return len(self._held)
+
+    def hold_pages(self, k: int) -> int:
+        """Withhold up to ``k`` free pages from allocation; returns how
+        many were actually held (bounded by the free list).
+
+        Held pages count as used -- ``can_admit``/``alloc_slot``/
+        ``grow_slot``/``extend_slot`` cannot see them -- which is how the
+        fault injector applies *consistent* arena-exhaustion pressure for
+        one scheduler iteration: pressure applied mid-iteration (e.g. by
+        failing individual allocations) would break the scheduler's
+        can_admit-then-alloc commitment protocol. Calls stack; pair with
+        :meth:`release_held`.
+        """
+        k = max(0, min(k, len(self._free)))
+        for _ in range(k):
+            self._held.append(self._free.pop())
+        return k
+
+    def release_held(self) -> int:
+        """Return every held page to the free list; returns how many."""
+        n = len(self._held)
+        self._free.extend(reversed(self._held))
+        self._held = []
+        return n
+
     # -- defrag ------------------------------------------------------------
     def defrag(self) -> np.ndarray:
         """Compact live pages to the front of the arena.
@@ -136,7 +166,13 @@ class PagedKVAllocator:
         this allocator rewrites its tables in place. Paging makes defrag
         unnecessary for correctness -- it exists so a long-lived engine can
         shrink its arena (checkpoint/offload the contiguous free tail).
+
+        Held pages (:meth:`hold_pages`) are released first: defrag rebuilds
+        the free list wholesale, and a hold surviving it would alias pages
+        the rebuild already re-issued. Holds are per-iteration pressure;
+        the injector simply re-applies them on the next step.
         """
+        self.release_held()
         live = [p for slot in sorted(self._tables)
                 for p in self._tables[slot]]
         perm = np.full((self.n_pages,), -1, np.int64)

@@ -32,6 +32,13 @@ application each engine iteration:
 3. **Decode**: one token for every running slot (the engine's single
    static-shape ``paged_decode_step``).
 
+With ``enforce_deadlines=True`` the scheduler additionally *sheds* any
+request whose absolute deadline has passed -- terminal ``deadline_missed``
+status at the admission and decode-step boundaries (:meth:`shed_expired`)
+-- so expired SLOs stop consuming prefill/decode budget. Off by default:
+``admission_policy="deadline"`` without enforcement remains a pure
+ordering policy (PR 5 behavior).
+
 Telemetry is per-request (TTFT, end-to-end latency, preemption count) and
 aggregated to the p50/p99 + tokens/s numbers BENCH_serving.json tracks.
 """
@@ -40,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -62,7 +69,7 @@ class Request:
     deadline: Optional[float] = None
 
     # runtime (engine/scheduler owned)
-    state: str = "queued"                 # queued | running | finished
+    state: str = "queued"                 # queued | running | finished | shed
     slot: int = -1
     generated: list = dataclasses.field(default_factory=list)
     cache_len: int = 0                    # cached tokens (prompt+meta+gen)
@@ -79,6 +86,9 @@ class Request:
     prefill_target: int = 0
     n_chunks: int = 0                     # prefill chunk calls executed
     itl_s: list = dataclasses.field(default_factory=list)
+    # terminal-shed bookkeeping (state == "shed"): why the scheduler
+    # dropped it ("deadline_missed" is the only producer today)
+    shed_reason: Optional[str] = None
 
     @property
     def n_generated(self) -> int:
@@ -142,7 +152,9 @@ class ContinuousScheduler:
                  extra_tokens_per_prefill: int = 0,
                  pad_to: int = 1,
                  prefill_chunk: Optional[int] = None,
-                 admission_policy: str = "fifo"):
+                 admission_policy: str = "fifo",
+                 enforce_deadlines: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
         if admission_policy not in self.ADMISSION_POLICIES:
             raise ValueError(f"unknown admission_policy "
                              f"{admission_policy!r}; have "
@@ -166,6 +178,14 @@ class ContinuousScheduler:
         # iteration (the SLO-aware policy drop-in the scheduler was
         # designed for -- see _order_queue).
         self.admission_policy = admission_policy
+        # SLO *enforcement* (off by default -- "deadline" as a pure
+        # admission ORDER stays available without it): when on, a request
+        # whose absolute deadline has passed is shed -- terminal
+        # "deadline_missed" status, pages freed -- at the admission and
+        # decode-step boundaries (shed_expired) instead of consuming
+        # prefill/decode budget to produce tokens nobody can use.
+        self.enforce_deadlines = enforce_deadlines
+        self.clock = clock or time.time
         self.queue: List[Request] = []
         self.running: Dict[int, Request] = {}          # slot -> request
         self.rejected: List[Request] = []              # engine drains these
@@ -210,7 +230,7 @@ class ContinuousScheduler:
     # -- submission --------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.state = "queued"
-        req.submitted_at = req.submitted_at or time.time()
+        req.submitted_at = req.submitted_at or self.clock()
         self.queue.append(req)
 
     def _order_queue(self) -> None:
@@ -256,6 +276,12 @@ class ContinuousScheduler:
         free = self._free_slots()
         while self.queue and free:
             req = self.queue[0]
+            if self._expired(req):
+                # Deadline passed while waiting: shed at admission rather
+                # than spend a prefill pass on a missed SLO.
+                self.queue.pop(0)
+                self.shed(req)
+                continue
             need = self._prefill_need(req)
             cap = min(self.alloc.n_pages, self.alloc.max_pages_per_seq)
             if pages_for(need, self.alloc.page_size) > cap:
@@ -341,6 +367,10 @@ class ContinuousScheduler:
         free = self._free_slots() if admit_new else []
         while self.queue and free and (budget > 0 or not out):
             req = self.queue[0]
+            if self._expired(req):
+                self.queue.pop(0)          # shed at admission (see above)
+                self.shed(req)
+                continue
             need = self._prefill_need(req)
             cap = min(self.alloc.n_pages, self.alloc.max_pages_per_seq)
             if pages_for(need, self.alloc.page_size) > cap:
@@ -467,7 +497,45 @@ class ContinuousScheduler:
         self.running.pop(req.slot, None)
         req.state = "finished"
         req.truncated = truncated
-        req.t_finished = time.time()
+        req.t_finished = self.clock()
+
+    # -- SLO enforcement ---------------------------------------------------
+    def _expired(self, req: Request, now: Optional[float] = None) -> bool:
+        return (self.enforce_deadlines and req.deadline is not None
+                and (self.clock() if now is None else now) >= req.deadline)
+
+    def shed(self, req: Request, reason: str = "deadline_missed") -> None:
+        """Terminal drop: free any held slot/pages, mark the request shed.
+        Unlike :meth:`preempt` nothing is requeued -- the SLO is already
+        missed, and recomputing it would burn budget deadlined traffic
+        behind it needs. Partial tokens stay on the request (they are
+        exact: shedding never rewinds the stream)."""
+        if req.state == "running":
+            self.alloc.free_slot(req.slot)
+            self.running.pop(req.slot, None)
+        req.state, req.slot = "shed", -1
+        req.shed_reason = reason
+        req.t_finished = self.clock()
+
+    def shed_expired(self) -> List[Request]:
+        """Shed every queued or running request whose deadline has passed.
+        The engine calls this at the admission boundary (start of the
+        iteration) and again at the decode-step boundary, so an expired
+        request never charges another prefill chunk or decode token.
+        No-op (and cheap) unless ``enforce_deadlines`` is on."""
+        if not self.enforce_deadlines:
+            return []
+        now = self.clock()
+        out: List[Request] = []
+        for req in [r for r in self.queue if self._expired(r, now)]:
+            self.queue.remove(req)
+            self.shed(req)
+            out.append(req)
+        for req in [r for r in list(self.running.values())
+                    if self._expired(r, now)]:
+            self.shed(req)
+            out.append(req)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -503,4 +571,8 @@ def summarize(requests: List[Request], wall_s: float) -> Dict[str, float]:
         "prefill_chunks": float(sum(r.n_chunks for r in requests)),
         "preemptions": float(sum(r.n_preempted for r in requests)),
         "truncated": float(sum(1 for r in requests if r.truncated)),
+        # SLO enforcement: requests dropped with a terminal
+        # deadline_missed status (scheduler.shed_expired); always present
+        # (0.0 with enforcement off) so BENCH_serving rows track it.
+        "shed": float(sum(1 for r in requests if r.state == "shed")),
     }

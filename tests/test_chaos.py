@@ -1,0 +1,432 @@
+"""Chaos suite: deterministic fault injection vs. the self-healing engine.
+
+The invariants under test (ISSUE: self-healing serving):
+
+* **Exactness under degradation.** Under a seeded FaultPlan mixing NaN
+  poison, transient failures, arena pressure, and stragglers, every
+  request that completes produces tokens bit-identical to the fault-free
+  run -- the XLA-twin fallback and retry paths are exact, not
+  approximate.
+* **No silent loss.** Every submitted request reaches a terminal status
+  (finished or shed); fallbacks/retries/sheds all land in telemetry.
+* **Off by default.** With no plan, the engine byte-for-byte matches the
+  pre-robustness behavior (donating jits, zero counters).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flags
+from repro.core.config import GemminiConfig
+from repro.core.context import ExecutionContext
+from repro.models import transformer as tf
+from repro.runtime import faults
+from repro.runtime.faults import (FaultInjector, FaultPlan, FaultSpec,
+                                  TransientOpError)
+from repro.serving import ServingEngine
+
+_TINY = tf.ModelConfig(name="tiny-serve", family="dense", n_layers=2,
+                       d_model=32, vocab=64, n_heads=2, n_kv_heads=1,
+                       head_dim=16, d_ff=64, dtype=jnp.float32)
+
+# The adversarial plan the flagship test replays: NaN-poisoned decodes,
+# a failed prefill dispatch, straggler-delayed steps, and three steps of
+# arena pressure -- all from one seed.
+MIXED_PLAN = ("seed=3;nan@decode:p=1,max=2;transient@prefill:max=1;"
+              "straggler@step:delay=0.001,start=6,max=2;"
+              "arena:pages=2,start=3,max=3")
+
+
+def _run(faults_spec=None, *, lens=(5, 11, 19), gen=6, backend="interpret",
+         **kw):
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, temperature=0.0, seed=0, backend=backend,
+                        prefill_chunk=8, faults=faults_spec, **kw)
+    for n in lens:
+        eng.submit(rng.integers(0, 64, (n,), dtype=np.int32), gen)
+    return eng, eng.run()
+
+
+def _tokens(report):
+    return [np.asarray(r["tokens"]).ravel() for r in report["requests"]]
+
+
+# ---------------------------------------------------------------------------
+# plan grammar + determinism
+# ---------------------------------------------------------------------------
+def test_plan_parse_grammar():
+    plan = FaultPlan.parse(
+        "seed=7;nan@decode:p=0.25,max=2;transient@prefill:max=1;"
+        "arena:pages=2;straggler:delay=0.5;ckpt_io")
+    assert plan.seed == 7
+    kinds = [s.kind for s in plan.specs]
+    assert kinds == ["nan", "transient", "arena", "straggler", "ckpt_io"]
+    nan = plan.specs[0]
+    assert nan.site == "decode" and nan.p == 0.25 and nan.max_hits == 2
+    # bare kinds land on their default sites
+    assert plan.specs[2].site == "arena" and plan.specs[2].pages == 2
+    assert plan.specs[3].site == "step" and plan.specs[3].delay_s == 0.5
+    assert plan.specs[4].site == "checkpoint"
+    assert FaultPlan.parse("") == FaultPlan()
+    with pytest.raises(ValueError):
+        FaultPlan.parse("meteor@decode")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("nan@decode:frequency=2")
+    with pytest.raises(ValueError):
+        FaultSpec(kind="nan", p=1.5)
+
+
+def test_plan_from_env(monkeypatch):
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    assert FaultPlan.from_env() is None
+    assert faults.as_injector(None) is None
+    monkeypatch.setenv(faults.ENV_VAR, "seed=9;nan@decode")
+    plan = FaultPlan.from_env()
+    assert plan is not None and plan.seed == 9
+    inj = faults.as_injector(None)
+    assert inj is not None and inj.plan == plan
+    monkeypatch.setenv(faults.ENV_VAR, "  ")
+    assert FaultPlan.from_env() is None
+
+
+def test_injector_deterministic_firing_sequence():
+    """Two injectors bound to equal plans fire on identical visits; the
+    sequence depends only on the plan and the visit order (the
+    reproduce-from-a-seed contract)."""
+    plan = FaultPlan.parse("seed=11;nan@decode:p=0.4;transient:p=0.3,max=5")
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    seq_a, seq_b = [], []
+    for inj, seq in ((a, seq_a), (b, seq_b)):
+        for _ in range(50):
+            spec = inj.fires("decode", ("nan", "inf", "transient"))
+            seq.append(None if spec is None else spec.kind)
+    assert seq_a == seq_b
+    assert any(k == "nan" for k in seq_a)
+    # a different seed draws a different sequence
+    c = FaultInjector(FaultPlan.parse("seed=12;nan@decode:p=0.4;"
+                                      "transient:p=0.3,max=5"))
+    seq_c = [c.fires("decode", ("nan", "inf", "transient")) is not None
+             for _ in range(50)]
+    assert seq_c != [k is not None for k in seq_a]
+
+
+def test_injector_windows_and_caps():
+    inj = FaultInjector(FaultPlan.parse("nan@decode:start=2,stop=4;"
+                                        "transient@prefill:max=1"))
+    fired = [inj.fires("decode") is not None for _ in range(6)]
+    assert fired == [False, False, True, True, False, False]
+    with pytest.raises(TransientOpError):
+        inj.check_transient("prefill")
+    inj.check_transient("prefill")          # max_hits=1: never again
+    assert inj.total_injected == 3
+    assert inj.report() == {"nan@decode": 2, "transient@prefill": 1}
+
+
+def test_injector_poison_and_straggle():
+    inj = FaultInjector(FaultPlan.parse("inf@decode:max=1;"
+                                        "straggler:delay=0.25,max=1"))
+    x = jnp.ones((2, 3))
+    out = inj.poison("decode", x)
+    assert np.all(np.isposinf(np.asarray(out)))
+    assert inj.poison("decode", x) is x      # cap reached: pass-through
+    assert inj.poison("decode", None) is None
+    slept = []
+    inj.sleep = slept.append                 # injectable: no real sleep
+    assert inj.straggle() == 0.25 and slept == [0.25]
+    assert inj.straggle() == 0.0 and slept == [0.25]
+
+
+# ---------------------------------------------------------------------------
+# off by default
+# ---------------------------------------------------------------------------
+def test_faults_off_is_inert(monkeypatch):
+    monkeypatch.delenv(faults.ENV_VAR, raising=False)
+    eng, rep = _run(None, lens=(5, 9), gen=3)
+    assert eng.faults is None and not eng.nan_guard
+    s = rep["summary"]
+    assert s["retries"] == 0 and s["fallbacks"] == 0
+    assert s["injected_faults"] == 0 and s["shed"] == 0
+    assert rep["quarantined"] == [] and "faults" not in rep
+    # the fault-free engine keeps the donating (PR-5) jit variant
+    from repro.serving.engine import _JIT_CACHE
+    assert (eng.engine, _TINY, eng.page_size, True) in _JIT_CACHE
+
+
+# ---------------------------------------------------------------------------
+# eager ExecutionContext op boundary
+# ---------------------------------------------------------------------------
+def test_eager_ctx_op_poison_and_transient():
+    cfg = GemminiConfig(input_dtype="bf16", acc_dtype="fp32",
+                        output_dtype="bf16")
+    ctx = ExecutionContext(cfg=cfg, backend="xla")
+    a = jnp.ones((4, 8), jnp.float32)
+    b = jnp.ones((8, 8), jnp.float32)
+    clean = np.asarray(ctx.matmul(a, b))
+    inj = faults.install("nan@op:matmul:max=1;transient@op:matmul:start=1,max=1")
+    try:
+        out = np.asarray(ctx.matmul(a, b))
+        assert np.all(np.isnan(out))
+        with pytest.raises(TransientOpError):
+            ctx.matmul(a, b)
+        # plan exhausted: dispatch is clean again
+        np.testing.assert_array_equal(np.asarray(ctx.matmul(a, b)), clean)
+        assert inj.report() == {"nan@op:matmul": 1,
+                                "transient@op:matmul": 1}
+    finally:
+        faults.deactivate()
+    assert faults.active() is None
+
+
+def test_traced_ctx_ops_never_fault():
+    """Injection is host-level only: under a jit trace the op hook is a
+    pass-through, so compiled artifacts stay byte-identical to the
+    fault-free run (a trace-time fault would be baked in forever)."""
+    cfg = GemminiConfig(input_dtype="bf16")
+    ctx = ExecutionContext(cfg=cfg, backend="xla")
+    a = jnp.ones((4, 8), jnp.float32)
+    b = jnp.ones((8, 8), jnp.float32)
+    clean = np.asarray(ctx.matmul(a, b))
+    faults.install("nan@op:matmul;transient@op:matmul")
+    try:
+        out = jax.jit(lambda x, y: ctx.matmul(x, y))(a, b)
+        np.testing.assert_array_equal(np.asarray(out), clean)
+    finally:
+        faults.deactivate()
+
+
+# ---------------------------------------------------------------------------
+# engine hardening: guard, retry, fallback -- all exact
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def reference():
+    _, rep = _run(None)
+    return _tokens(rep)
+
+
+def test_nan_guard_fallback_exact_tokens(reference):
+    eng, rep = _run("seed=1;nan@decode:max=1")
+    assert rep["summary"]["fallbacks"] == 1
+    assert rep["faults"] == {"nan@decode": 1}
+    for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_inf_guard_on_prefill_exact_tokens(reference):
+    eng, rep = _run("seed=1;inf@prefill:max=1")
+    assert rep["summary"]["fallbacks"] == 1
+    for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_transient_retry_exact_tokens(reference):
+    eng, rep = _run("seed=1;transient@decode:max=2")
+    assert rep["summary"]["retries"] == 2
+    assert rep["summary"]["fallbacks"] == 0
+    for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_retry_exhaustion_raises():
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, temperature=0.0, seed=0,
+                        backend="interpret", prefill_chunk=8,
+                        faults="transient@prefill:max=99",
+                        max_step_retries=1)
+    eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 3)
+    with pytest.raises(TransientOpError):
+        eng.run()
+    assert eng.counters["retries"] == 2      # 1 retry per exhausted attempt
+
+
+def test_arena_pressure_exact_tokens(reference):
+    """Withheld pages squeeze admission/growth for whole steps; the
+    scheduler absorbs it (delayed admission, preemption + exact
+    recompute) and every stream still matches the unpressured run."""
+    eng, rep = _run("seed=5;arena:pages=4,start=1,max=6")
+    assert rep["summary"]["injected_faults"] == 6
+    assert eng.alloc.held_pages == 0         # released after every step
+    for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+    for r in rep["requests"]:
+        assert r["status"] == "finished"
+
+
+def test_straggler_injection_counts():
+    slept = []
+    eng, rep = _run(None)                    # build geometry only for ref
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, temperature=0.0, seed=0,
+                        backend="interpret", prefill_chunk=8,
+                        faults="straggler@step:delay=0.5,max=2")
+    eng.faults.sleep = slept.append          # no real 0.5s sleeps in CI
+    eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 4)
+    rep = eng.run()
+    assert slept == [0.5, 0.5]
+    assert rep["faults"] == {"straggler@step": 2}
+    assert "step_p95_s" in rep["summary"]
+
+
+# ---------------------------------------------------------------------------
+# the flagship: mixed adversarial trace
+# ---------------------------------------------------------------------------
+def test_mixed_chaos_trace_exact_and_no_silent_loss(reference):
+    eng, rep = _run(MIXED_PLAN)
+    s = rep["summary"]
+    assert s["fallbacks"] == 2 and s["retries"] == 1
+    assert rep["faults"]["nan@decode"] == 2
+    assert rep["faults"]["arena@arena"] == 3
+    # no silent loss: every request terminal, every stream bit-exact
+    assert len(rep["requests"]) == 3
+    for r in rep["requests"]:
+        assert r["status"] in ("finished", "shed")
+    for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+    # replay: the same plan injects the same faults and the same tokens
+    eng2, rep2 = _run(MIXED_PLAN)
+    assert rep2["faults"] == rep["faults"]
+    for a, b in zip(_tokens(rep), _tokens(rep2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_faults_disabled_matches_reference(reference):
+    """PR-5 parity: a second fault-free run is bit-identical (the
+    robustness machinery is pure overhead-free plumbing when off)."""
+    _, rep = _run(None)
+    for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# schedule quarantine
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def tmp_tune_cache(tmp_path):
+    from repro.tune import cache as tcache
+    path = str(tmp_path / "plans.json")
+    prev_cache = flags.get("tune_cache")
+    prev_mode = flags.get("tune_mode")
+    flags.set_flag("tune_cache", path)
+    tcache.reset_cache()
+    yield path
+    flags.set_flag("tune_cache", prev_cache)
+    flags.set_flag("tune_mode", prev_mode)
+    tcache.reset_cache()
+
+
+def test_plan_cache_quarantine_roundtrip(tmp_tune_cache):
+    from repro.tune import cache as tcache
+    pc = tcache.get_cache()
+    pc.store_schedule("k1", {"page_size": 32})
+    assert pc.lookup_schedule("k1", ("page_size",)) is not None
+    pc.quarantine("k1")
+    assert pc.is_quarantined("k1")
+    # miss, not the entry
+    assert pc.lookup_schedule("k1", ("page_size",)) is None
+    pc.store_schedule("k1", {"page_size": 64})
+    # re-store refused
+    assert pc.lookup_schedule("k1", ("page_size",)) is None
+    # quarantine persists across a cache reload
+    tcache.reset_cache()
+    pc2 = tcache.get_cache()
+    assert pc2.is_quarantined("k1")
+    pc2.unquarantine("k1")
+    assert not pc2.is_quarantined("k1")
+    pc2.store_schedule("k1", {"page_size": 64})
+    assert pc2.lookup_schedule("k1", ("page_size",)) is not None
+
+
+def test_guard_trip_quarantines_decode_schedule(tmp_tune_cache):
+    from repro.tune import cache as tcache
+    flags.set_flag("tune_mode", "cached")
+    eng, rep = _run("seed=1;nan@decode:max=1")
+    assert eng._paged_sched_key is not None
+    assert rep["quarantined"] == [eng._paged_sched_key]
+    assert tcache.get_cache().is_quarantined(eng._paged_sched_key)
+    # prefill-site trips fall back + count but blame no single schedule
+    eng2, rep2 = _run("seed=1;nan@prefill:max=1")
+    assert rep2["summary"]["fallbacks"] == 1
+    assert rep2["quarantined"] == []
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-write faults
+# ---------------------------------------------------------------------------
+def test_checkpoint_write_fault_raises_once(tmp_path):
+    from repro.checkpoint.store import latest_step, save_checkpoint
+    tree = {"w": jnp.ones((4,), jnp.float32)}
+    faults.install("ckpt_io:max=1")
+    try:
+        with pytest.raises(OSError):
+            save_checkpoint(str(tmp_path), 1, tree)
+        assert latest_step(str(tmp_path)) is None    # nothing half-written
+        save_checkpoint(str(tmp_path), 2, tree)      # plan exhausted
+        assert latest_step(str(tmp_path)) == 2
+    finally:
+        faults.deactivate()
+
+
+# ---------------------------------------------------------------------------
+# SLO enforcement: deadline shedding
+# ---------------------------------------------------------------------------
+def test_deadline_shed_at_admission():
+    t = [100.0]
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, temperature=0.0, seed=0,
+                        backend="interpret", prefill_chunk=8,
+                        enforce_deadlines=True)
+    eng.sched.clock = lambda: t[0]
+    eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 3,
+               deadline=99.0)                        # already expired
+    eng.submit(rng.integers(0, 64, (9,), dtype=np.int32), 3,
+               deadline=10_000.0)
+    rep = eng.run()
+    stats = {r["status"] for r in rep["requests"]}
+    assert stats == {"shed", "finished"}
+    shed = [r for r in rep["requests"] if r["status"] == "shed"][0]
+    assert shed["shed_reason"] == "deadline_missed"
+    assert shed["new_tokens"] == 0                   # never charged a step
+    assert rep["summary"]["shed"] == 1
+    assert eng.alloc.free_pages == eng.alloc.n_pages  # nothing leaked
+
+
+def test_deadline_shed_mid_decode_frees_slot():
+    t = [0.0]
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, temperature=0.0, seed=0,
+                        backend="interpret", prefill_chunk=8,
+                        enforce_deadlines=True)
+    eng.sched.clock = lambda: t[0]
+    r0 = eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 8,
+                    deadline=50.0)
+    r1 = eng.submit(rng.integers(0, 64, (9,), dtype=np.int32), 8)
+    eng.step(); eng.step()                           # both mid-decode
+    assert r0.state == "running" and r0.n_generated > 0
+    partial = list(r0.generated)
+    t[0] = 60.0                                      # r0's SLO passes
+    rep = eng.run()
+    assert r0.state == "shed" and r0.slot == -1
+    assert r0.generated == partial                   # stream never rewound
+    assert r1.state == "finished" and r1.n_generated == 8
+    assert rep["summary"]["shed"] == 1
+    assert eng.alloc.free_pages == eng.alloc.n_pages
+
+
+def test_deadlines_ignored_unless_enforced():
+    """PR-5 compatibility: deadlines order admission (EDF) but never shed
+    unless the engine opts in -- expired absolute deadlines are a legal
+    pure-ordering input."""
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, temperature=0.0, seed=0,
+                        backend="interpret", prefill_chunk=8)
+    eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 3, deadline=50.0)
+    rep = eng.run()
+    assert rep["requests"][0]["status"] == "finished"
+    assert rep["summary"]["shed"] == 0

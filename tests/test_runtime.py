@@ -66,6 +66,85 @@ def test_run_with_restarts_exhausts():
                           n_pods=1)
 
 
+def test_heartbeat_unknown_host_raises():
+    """A beat from an undeclared host is a liveness hole, not a no-op: a
+    typo'd id would keep the phantom alive while the real host quietly
+    times out."""
+    mon = HeartbeatMonitor(["h0"], timeout_s=10.0, clock=lambda: 0.0)
+    with pytest.raises(KeyError):
+        mon.beat("h0-typo")
+    mon.register("h1")
+    mon.beat("h1")                        # declared: fine
+
+
+def test_heartbeat_unknown_host_lenient_drops_beat():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0"], timeout_s=10.0, clock=lambda: t[0],
+                           strict=False)
+    t[0] = 20.0
+    mon.beat("ghost")
+    mon.beat("ghost")
+    assert mon.unknown_beats == {"ghost": 2}
+    # the dropped beats never counted as liveness for anyone
+    assert mon.dead() == ["h0"] and "ghost" not in mon.last
+
+
+def test_step_watchdog_composes_detector_and_monitor():
+    from repro.runtime import StepWatchdog
+    t = [0.0]
+    mon = HeartbeatMonitor([], timeout_s=10.0, clock=lambda: t[0])
+    det = StragglerDetector(warmup=5, z_threshold=3.0)
+    dog = StepWatchdog(detector=det, monitor=mon, host="serve")
+    assert "serve" in mon.last            # auto-registered
+    for i in range(10):
+        t[0] += 1.0
+        assert not dog.observe(1.0 + 0.01 * (i % 3))
+    assert dog.observe(6.0)               # 6x step time -> straggler
+    stats = dog.stats()
+    assert stats["straggler_steps"] == 1
+    assert stats["step_p50_s"] == pytest.approx(1.01, abs=0.02)
+    assert stats["step_p95_s"] > stats["step_p50_s"]
+    assert mon.last["serve"] == t[0]      # every observe beat the monitor
+
+
+def test_run_with_restarts_no_shrink():
+    attempts = []
+
+    def make_runner(attempt, pods):
+        attempts.append((attempt, pods))
+
+        def run():
+            if attempt < 1:
+                raise RuntimeError("fail")
+            return "ok"
+        return run
+
+    result, n, pods = run_with_restarts(
+        make_runner, RestartPolicy(max_failures=2, allow_shrink=False),
+        n_pods=4)
+    assert result == "ok" and pods == 4
+    assert attempts == [(0, 4), (1, 4)]   # mesh size pinned
+
+
+def test_run_with_restarts_on_failure_and_pod_floor():
+    seen = []
+
+    def make_runner(attempt, pods):
+        def run():
+            if attempt < 3:
+                raise RuntimeError(f"boom {attempt} pods={pods}")
+            return pods
+        return run
+
+    pods_used, n, pods = run_with_restarts(
+        make_runner, RestartPolicy(max_failures=3), n_pods=2,
+        on_failure=lambda a, e: seen.append((a, str(e))))
+    assert n == 4 and pods == 1 == pods_used   # shrank 2 -> 1, floor at 1
+    assert [a for a, _ in seen] == [0, 1, 2]
+    assert "boom 0 pods=2" in seen[0][1]
+    assert "boom 2 pods=1" in seen[2][1]
+
+
 # ---------------------------------------------------------------------------
 # compression
 # ---------------------------------------------------------------------------

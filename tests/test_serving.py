@@ -70,6 +70,53 @@ def test_defrag_compacts_and_rewrites_tables():
     assert al.alloc_slot(3, 6) is not None
 
 
+def test_alloc_hold_release():
+    """hold_pages withholds free pages from every admission/alloc path
+    (the fault injector's arena-pressure lever) and release_held restores
+    them exactly; holds clamp to the free list and stack."""
+    al = PagedKVAllocator(n_pages=8, page_size=4, max_pages_per_seq=8)
+    al.alloc_slot(0, 8)                        # 2 pages live, 6 free
+    assert al.hold_pages(4) == 4
+    assert al.held_pages == 4 and al.free_pages == 2
+    assert not al.can_admit(12)                # 3 pages > 2 visible
+    assert al.alloc_slot(1, 12) is None
+    assert al.alloc_slot(1, 8) is not None     # 2 pages still fit
+    # stacking + clamping: only 0 free left, an oversized hold is bounded
+    assert al.hold_pages(5) == 0 == al.free_pages
+    assert al.extend_slot(1) is None           # arena looks dry
+    assert al.release_held() == 4
+    assert al.held_pages == 0 and al.free_pages == 4
+    assert al.extend_slot(1) is not None       # pressure gone
+    # no page was lost or duplicated across the hold cycle
+    live = {p for s in (0, 1) for p in al.slot_pages(s)}
+    assert len(live) == al.used_pages == 5
+    assert al.free_pages + al.used_pages == 8
+
+
+def test_alloc_defrag_releases_holds():
+    """Defrag mid-pressure: held pages are returned before the free list
+    is rebuilt (a surviving hold would alias re-issued pages), the
+    permutation stays valid for the live slots, and the whole arena is
+    accounted for afterwards."""
+    al = PagedKVAllocator(n_pages=8, page_size=2, max_pages_per_seq=4)
+    al.alloc_slot(0, 4)
+    al.alloc_slot(1, 4)
+    al.alloc_slot(2, 2)
+    al.free_slot(1)                            # hole mid-arena
+    assert al.hold_pages(2) == 2               # eviction-era pressure
+    before = {s: al.slot_pages(s) for s in (0, 2)}
+    perm = al.defrag()
+    assert al.held_pages == 0                  # holds released, not leaked
+    after = {s: al.slot_pages(s) for s in (0, 2)}
+    live = sorted(p for pages in after.values() for p in pages)
+    assert live == list(range(al.used_pages))
+    for s in (0, 2):
+        assert [int(perm[p]) for p in before[s]] == after[s]
+    assert al.free_pages + al.used_pages == 8
+    # every formerly-held page is allocatable again
+    assert al.alloc_slot(3, 8) is not None     # needs 4 of the 5 free
+
+
 # ---------------------------------------------------------------------------
 # paged attention numerics
 # ---------------------------------------------------------------------------
@@ -408,6 +455,34 @@ def test_engine_defrag_preserves_live_requests(rng):
         eng.step()
     for r, p in zip(eng.requests, prompts):
         want = _reference_tokens(_TINY, eng.params, p, 5)
+        np.testing.assert_array_equal(
+            np.asarray([int(t) for t in r.generated]), want)
+
+
+def test_engine_defrag_under_arena_pressure(rng):
+    """Defrag interleaved with injected arena exhaustion (plus the
+    eviction pressure a small arena already produces): holds never leak
+    into the rebuilt free list, and every stream still matches the
+    fault-free reference exactly."""
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=6, temperature=0.0, seed=0,
+                        faults="seed=7;arena:pages=2,start=1,max=4")
+    prompts = [rng.integers(0, 64, (n,)).astype(np.int32) for n in (9, 6, 7)]
+    for p in prompts:
+        eng.submit(p, 6)
+    eng.step()
+    eng.defrag()                               # between pressured steps
+    steps = 0
+    while eng.sched.has_work:
+        eng.step()
+        steps += 1
+        if steps == 2:
+            eng.defrag()
+        assert eng.alloc.held_pages == 0       # pressure is per-step only
+    assert eng.faults.report().get("arena@arena", 0) == 4
+    for r, p in zip(eng.requests, prompts):
+        assert r.state == "finished"
+        want = _reference_tokens(_TINY, eng.params, p, 6)
         np.testing.assert_array_equal(
             np.asarray([int(t) for t in r.generated]), want)
 

@@ -1,0 +1,26 @@
+"""Static analysis for the kernel and jit layers (docs/analysis.md).
+
+Two halves, one finding stream:
+
+* **Static** (`checks`, `source`, `driver`): every `pallas_call` in
+  `src/repro/kernels/` declares a :class:`~repro.kernels.contracts.KernelContract`
+  mirroring its grid / BlockSpecs / scratch.  The checker abstractly
+  interprets the BlockSpec index maps over the grid (symbolically, via
+  `affine`) and, for every schedule in the tuner's lattice
+  (`tune/schedules.py`), proves coverage, write-race freedom, VMEM
+  budget fit, and the precision contracts.  `source` adds AST-level
+  rules over the kernel sources themselves (undeclared `pallas_call`s,
+  narrow dots, the deprecated-shim ban).
+* **Trace-time** (`jit_audit`): audits a live `ServingEngine` for
+  compile-bucket explosions (observed jit cache sizes vs. the static
+  bucket census) and post-donation buffer reuse.
+
+Findings are structured (`findings.Finding`), suppressible via a
+baseline file (`tools/lint_baseline.json`), and gate CI through
+``python -m repro.analysis.lint``.
+"""
+
+from repro.analysis.lint.findings import (          # noqa: F401
+    Finding, apply_baseline, load_baseline, write_baseline)
+from repro.analysis.lint.driver import (            # noqa: F401
+    lint_repo, run_contract_checks, run_source_checks)

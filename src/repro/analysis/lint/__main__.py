@@ -1,0 +1,71 @@
+"""``python -m repro.analysis.lint`` — the CI lint gate.
+
+Runs the full static suite (contract checks over the tuner's schedule
+lattice + AST source rules), subtracts the baseline, prints findings,
+and exits non-zero if any non-baselined finding remains.
+
+  python -m repro.analysis.lint                      # human output
+  python -m repro.analysis.lint --format json        # CI artifact
+  python -m repro.analysis.lint --write-baseline     # accept current
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import (apply_baseline, lint_repo, load_baseline,
+                                 write_baseline)
+from repro.analysis.lint.findings import to_report
+
+
+def _default_baseline() -> Path:
+    # repo checkout layout: <root>/src/repro/analysis/lint/__main__.py
+    root = Path(__file__).resolve().parents[4]
+    return root / "tools" / "lint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="static kernel-contract + source lint (docs/analysis.md)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="suppression file (default: tools/lint_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, suppressing nothing")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the baseline")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="also write the JSON report to this path")
+    args = ap.parse_args(argv)
+
+    findings = lint_repo()
+
+    baseline_path = args.baseline or _default_baseline()
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"baselined {len(findings)} finding(s) -> {baseline_path}")
+        return 0
+    baseline = {} if args.no_baseline else load_baseline(baseline_path)
+    new, suppressed = apply_baseline(findings, baseline)
+
+    report = to_report(new, suppressed=suppressed)
+    if args.out:
+        args.out.write_text(json.dumps(report, indent=2, default=str) + "\n")
+    if args.format == "json":
+        print(json.dumps(report, indent=2, default=str))
+    else:
+        for f in new:
+            print(f"{f.severity.upper():7s} {f.code} {f.site}: {f.message}")
+        c = report["counts"]
+        print(f"{c['total']} finding(s) "
+              f"({c['error']} error, {c['warning']} warning; "
+              f"{c['suppressed']} baselined)")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

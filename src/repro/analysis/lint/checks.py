@@ -1,0 +1,299 @@
+"""Contract checks: coverage, write-race freedom, VMEM budget, precision.
+
+Each check takes an instantiated :class:`~repro.kernels.contracts.KernelContract`
+(one concrete problem × one schedule) and the :class:`GemminiConfig`
+whose budgets it must fit, and yields :class:`Finding`s.
+
+Diagnostic codes (docs/analysis.md):
+
+===== =========================================================
+GL101 block index provably out of bounds for the operand
+GL102 output operand not provably tiled by the grid (coverage gap)
+GL103 index map not affine and not declared data-dependent
+GL201 output invariant along a "parallel" grid axis (write race)
+GL202 output revisited along an "arbitrary" axis, no declared reduction
+GL203 declared reduction accumulates through an input/output alias
+      across grid revisits (the seed WS bug class — always unsound)
+GL204 declared reduction names a scratch the contract doesn't carry
+GL301 streamed per-step blocks x pipeline_depth exceed scratchpad_bytes
+GL302 resident blocks + scratch exceed accumulator_bytes
+GL401 narrow-dtype dot without a wide accumulator
+GL402 scalar-sized operand block not placed in SMEM
+===== =========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, List, Tuple
+
+from repro.core.config import GemminiConfig
+from repro.kernels.contracts import KernelContract, OperandSpec
+from repro.analysis.lint.affine import Ix, NonAffine, eval_index_map
+from repro.analysis.lint.findings import Finding, finding
+
+
+def _site(c: KernelContract, inst: str = "") -> str:
+    # `inst` (the schedule/problem instantiation) deliberately stays OUT
+    # of the site: the same defect proven at every schedule in the
+    # lattice must fingerprint identically (dedupe + stable baselines).
+    # check_contract() records it in the finding data instead.
+    del inst
+    return f"contract:{c.name}"
+
+
+def _nb(op: OperandSpec) -> Tuple[int, ...]:
+    return tuple(-(-s // b) for s, b in zip(op.shape, op.block))
+
+
+def _eval(c: KernelContract, op: OperandSpec):
+    """-> per-dim Ix tuple, or None if declared data-dependent."""
+    if op.data_dependent is not None:
+        return None
+    if op.index_map is None:
+        raise NonAffine(f"{op.name}: no index map and not data-dependent")
+    return eval_index_map(op.index_map, c.grid)
+
+
+# -- coverage ---------------------------------------------------------------
+
+def check_coverage(c: KernelContract, *, inst: str = "") -> List[Finding]:
+    out: List[Finding] = []
+    site = _site(c, inst)
+    axis_names = [a for a, _ in c.grid]
+    for op in c.inputs + c.outputs:
+        if len(op.shape) != len(op.block):
+            out.append(finding(
+                "GL101", "error", site,
+                f"operand {op.name!r}: block rank {len(op.block)} != "
+                f"operand rank {len(op.shape)}", key=f"{op.name}:rank"))
+            continue
+        try:
+            idx = _eval(c, op)
+        except NonAffine as e:
+            out.append(finding(
+                "GL103", "warning", site,
+                f"operand {op.name!r}: index map is not affine in the grid "
+                f"and the contract does not declare it data-dependent "
+                f"({e})", key=op.name))
+            continue
+        if idx is None:
+            continue                      # declared gather: coverage waived
+        nbs = _nb(op)
+        if len(idx) != len(op.shape):
+            out.append(finding(
+                "GL101", "error", site,
+                f"operand {op.name!r}: index map returns {len(idx)} dims "
+                f"for rank-{len(op.shape)} operand", key=f"{op.name}:rank"))
+            continue
+        is_output = op in c.outputs
+        covered_axes: List[str] = []
+        for d, (e, nb) in enumerate(zip(idx, nbs)):
+            lo, hi = e.range()
+            if lo < 0 or hi > nb - 1:
+                out.append(finding(
+                    "GL101", "error", site,
+                    f"operand {op.name!r} dim {d}: block index range "
+                    f"[{lo}, {hi}] exceeds [0, {nb - 1}] "
+                    f"({nb} blocks of {op.block[d]} over {op.shape[d]})",
+                    key=f"{op.name}:{d}"))
+            if is_output:
+                if not e.covers(nb):
+                    out.append(finding(
+                        "GL102", "error", site,
+                        f"output {op.name!r} dim {d}: grid does not "
+                        f"provably write all {nb} blocks (index {e!r})",
+                        key=f"{op.name}:{d}"))
+                covered_axes.extend(e.support)
+        if is_output and len(covered_axes) != len(set(covered_axes)):
+            dup = sorted({a for a in covered_axes
+                          if covered_axes.count(a) > 1})
+            out.append(finding(
+                "GL102", "error", site,
+                f"output {op.name!r}: grid axes {dup} index more than one "
+                f"dim — joint coverage of the block product unproven",
+                key=f"{op.name}:joint"))
+        _ = axis_names
+    return out
+
+
+# -- write races ------------------------------------------------------------
+
+def check_races(c: KernelContract, *, inst: str = "") -> List[Finding]:
+    out: List[Finding] = []
+    site = _site(c, inst)
+    scratch_names = {s.name for s in c.scratch}
+    reds = {}
+    for r in c.reductions:
+        reds.setdefault(r.out, []).append(r)
+    for op in c.outputs:
+        try:
+            idx = _eval(c, op)
+        except NonAffine:
+            continue                      # GL103 already raised by coverage
+        if idx is None:
+            continue
+        used = set()
+        for e in idx:
+            used.update(e.support)
+        declared = {a for r in reds.get(op.name, ()) for a in r.axes}
+        for ax, (name, size) in enumerate(c.grid):
+            if name in used or size <= 1:
+                continue
+            # grid axis `name` revisits this output block every step
+            if c.semantics[ax] == "parallel":
+                out.append(finding(
+                    "GL201", "error", site,
+                    f"output {op.name!r} is invariant along grid axis "
+                    f"{name!r} (size {size}) declared \"parallel\": "
+                    f"parallel revisits race on the block",
+                    key=f"{op.name}:{name}"))
+            elif name not in declared:
+                out.append(finding(
+                    "GL202", "error", site,
+                    f"output {op.name!r} is revisited along sequential "
+                    f"axis {name!r} (size {size}) with no declared "
+                    f"reduction: each revisit overwrites the block",
+                    key=f"{op.name}:{name}"))
+        for r in reds.get(op.name, ()):
+            if r.via == "alias":
+                out.append(finding(
+                    "GL203", "error", site,
+                    f"output {op.name!r} declares serial accumulation "
+                    f"through an input/output alias over axes {r.axes}: "
+                    f"Pallas does not guarantee read-after-write through "
+                    f"an alias across separated grid revisits (the seed "
+                    f"WS GEMM bug) — accumulate in VMEM scratch and flush "
+                    f"on the final revisit instead",
+                    key=f"{op.name}:alias"))
+            elif r.via == "scratch":
+                if r.scratch not in scratch_names:
+                    out.append(finding(
+                        "GL204", "error", site,
+                        f"reduction on {op.name!r} names scratch "
+                        f"{r.scratch!r} but the contract declares only "
+                        f"{sorted(scratch_names)}", key=f"{op.name}:scratch"))
+            else:
+                out.append(finding(
+                    "GL204", "error", site,
+                    f"reduction on {op.name!r}: unknown mechanism "
+                    f"{r.via!r}", key=f"{op.name}:via"))
+    return out
+
+
+# -- VMEM budget ------------------------------------------------------------
+
+def _block_bytes(op: OperandSpec) -> int:
+    return math.prod(op.block) * op.dtype[1]
+
+
+def _streamed(c: KernelContract, op: OperandSpec) -> bool:
+    """Does this operand's block change along any sequential axis?"""
+    if op.data_dependent is not None:
+        return True                       # gathers re-DMA per step
+    try:
+        idx = _eval(c, op)
+    except NonAffine:
+        return True
+    seq = {name for (name, _), sem in zip(c.grid, c.semantics)
+           if sem == "arbitrary"}
+    return any(set(e.support) & seq for e in idx)
+
+
+def check_vmem(c: KernelContract, cfg: GemminiConfig, *,
+               inst: str = "") -> List[Finding]:
+    out: List[Finding] = []
+    site = _site(c, inst)
+    streamed = resident_spad = resident_acc = 0
+    detail = {"streamed": [], "resident": [], "scratch": []}
+    for op in c.inputs + c.outputs:
+        if op.memory_space == "smem":
+            continue
+        nbytes = _block_bytes(op)
+        if _streamed(c, op):
+            streamed += nbytes
+            detail["streamed"].append((op.name, nbytes))
+        elif op.budget == "scratchpad":
+            resident_spad += nbytes
+            detail["resident"].append((op.name, nbytes))
+        else:
+            resident_acc += nbytes
+            detail["resident"].append((op.name, nbytes))
+    scratch_bytes = sum(math.prod(s.shape) * s.dtype[1] for s in c.scratch)
+    detail["scratch"] = [(s.name, math.prod(s.shape) * s.dtype[1])
+                         for s in c.scratch]
+    spad_need = cfg.pipeline_depth * streamed + resident_spad
+    if spad_need > cfg.scratchpad_bytes:
+        out.append(finding(
+            "GL301", "error", site,
+            f"streamed blocks x pipeline_depth ({cfg.pipeline_depth} x "
+            f"{streamed} B) + resident streams ({resident_spad} B) = "
+            f"{spad_need} B exceed scratchpad_bytes="
+            f"{cfg.scratchpad_bytes}", key="spad",
+            streamed=detail["streamed"], resident=detail["resident"]))
+    acc_need = resident_acc + scratch_bytes
+    if acc_need > cfg.accumulator_bytes:
+        out.append(finding(
+            "GL302", "error", site,
+            f"resident blocks ({resident_acc} B) + VMEM scratch "
+            f"({scratch_bytes} B) = {acc_need} B exceed "
+            f"accumulator_bytes={cfg.accumulator_bytes}", key="acc",
+            scratch=detail["scratch"]))
+    return out
+
+
+def fits_budgets(c: KernelContract, cfg: GemminiConfig) -> bool:
+    """True iff the contract's per-step footprint fits both VMEM budgets
+    (the tuner's plan-feasibility predicate)."""
+    return not check_vmem(c, cfg)
+
+
+# -- precision --------------------------------------------------------------
+
+def check_precision(c: KernelContract, *, inst: str = "") -> List[Finding]:
+    out: List[Finding] = []
+    site = _site(c, inst)
+    for i, d in enumerate(c.dots):
+        narrow = d.lhs[1] < 4 or d.rhs[1] < 4
+        wide_acc = d.acc[1] >= 4
+        kinds = {d.lhs[0], d.rhs[0]}
+        kind_ok = (d.acc[0] == "int") == (kinds == {"int"})
+        if narrow and not (wide_acc and kind_ok):
+            out.append(finding(
+                "GL401", "error", site,
+                f"dot {i}: {d.lhs}x{d.rhs} inputs accumulate into {d.acc} "
+                f"— narrow operands need a >=32-bit accumulator of the "
+                f"matching kind (preferred_element_type)", key=f"dot{i}"))
+    for op in c.inputs:
+        if (op.memory_space != "smem" and math.prod(op.block) <= 8
+                and len(op.block) == 1):
+            out.append(finding(
+                "GL402", "warning", site,
+                f"operand {op.name!r}: scalar-sized block {op.block} "
+                f"not placed in SMEM — scalar control operands belong in "
+                f"SMEM (memory_space=pltpu.SMEM)", key=op.name))
+    return out
+
+
+# -- all of the above -------------------------------------------------------
+
+def check_contract(c: KernelContract, cfg: GemminiConfig, *,
+                   inst: str = "") -> List[Finding]:
+    out: List[Finding] = []
+    out += check_coverage(c, inst=inst)
+    out += check_races(c, inst=inst)
+    out += check_vmem(c, cfg, inst=inst)
+    out += check_precision(c, inst=inst)
+    if inst:
+        out = [dataclasses.replace(f, data=f.data + (("instantiation", inst),))
+               for f in out]
+    return out
+
+
+def check_all(contracts: Iterable[Tuple[KernelContract, GemminiConfig, str]]
+              ) -> List[Finding]:
+    out: List[Finding] = []
+    for c, cfg, inst in contracts:
+        out += check_contract(c, cfg, inst=inst)
+    return out

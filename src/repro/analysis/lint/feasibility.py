@@ -1,0 +1,75 @@
+"""Plan-feasibility predicates for the tuner (the `tune/` hook).
+
+The tuner's lattice enumerators carry their own closed-form fit
+heuristics (`schedules._attn_fits` etc.), but they deliberately
+force-include the static default even when it does not fit, and their
+models omit terms (output write-back blocks, the f32 softmax scratch).
+These predicates re-derive feasibility from the *declared kernel
+contract* — the exact per-grid-step footprint the VMEM check (GL301/
+GL302) proves against — so the tuner can drop a candidate before
+paying to measure it, and "lint-clean" and "tuner-feasible" are the
+same fact.
+
+All predicates are total and safe to call on any candidate: a contract
+that cannot even be built (degenerate geometry) reports infeasible
+rather than raising, because the tuner must keep enumerating.
+"""
+
+from __future__ import annotations
+
+from repro.core.config import GemminiConfig
+from repro.kernels import contracts as kc
+from repro.analysis.lint.checks import fits_budgets
+
+
+def gemm_plan_feasible(cfg: GemminiConfig, plan, *,
+                       has_bias: bool = False) -> bool:
+    try:
+        return (fits_budgets(kc.gemm_os_contract(cfg, plan,
+                                                 has_bias=has_bias), cfg)
+                and fits_budgets(kc.gemm_ws_contract(cfg, plan,
+                                                     has_bias=has_bias),
+                                 cfg))
+    except Exception:
+        return False
+
+
+def attn_schedule_feasible(cfg: GemminiConfig, sched, *, b: int, h: int,
+                           kvh: int, tq: int, tk: int, d: int,
+                           dtype="bf16") -> bool:
+    try:
+        eff = sched.effective(tq, tk)
+        c = kc.flash_attention_contract(
+            cfg, b=b, h=h, kvh=kvh, tq=tq, tk=tk, d=d,
+            block_q=eff.block_q, block_k=eff.block_k, dtype=dtype)
+        return fits_budgets(c, cfg)
+    except Exception:
+        return False
+
+
+def paged_schedule_feasible(cfg: GemminiConfig, sched, *, b: int, h: int,
+                            kvh: int, d: int, max_context: int,
+                            dtype="bf16") -> bool:
+    try:
+        page = sched.effective(max_context).page_size
+        mp = -(-max_context // page)
+        c = kc.paged_decode_attention_contract(
+            cfg, b=b, h=h, kvh=kvh, d=d, page=page, mp=mp,
+            n_pages=max(b, 1) * mp, dtype=dtype)
+        return fits_budgets(c, cfg)
+    except Exception:
+        return False
+
+
+def conv_schedule_feasible(cfg: GemminiConfig, sched, *, n: int, h: int,
+                           w: int, ci: int, co: int, kh: int, kw: int,
+                           stride: int = 1, padding: int = 0,
+                           has_bias: bool = False) -> bool:
+    try:
+        c = kc.conv2d_implicit_contract(
+            cfg, n=n, h=h, w=w, ci=ci, co=co, kh=kh, kw=kw,
+            co_tile=sched.effective(co).co_tile, stride=stride,
+            padding=padding, has_bias=has_bias)
+        return fits_budgets(c, cfg)
+    except Exception:
+        return False

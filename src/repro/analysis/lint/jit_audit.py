@@ -1,0 +1,125 @@
+"""Trace-time auditor for the serving engine's jit layer.
+
+The engine compiles one bucket per distinct argument-shape/static-arg
+tuple and keeps them in module-level caches (`serving/engine.py`'s
+``_JIT_CACHE``).  Buckets are supposed to be *bounded by construction*:
+prompt lengths quantize to ``prefill_pad`` multiples, chunk lengths to
+the chunk spans the scheduler emits, and the chunk steps' static
+``kv_pages`` is capped by ``max_pages_per_seq``.  A bucket census
+derived from that geometry is therefore a hard ceiling — a jitted step
+whose observed cache size exceeds it means some argument leaks
+unquantized shapes into the trace (a compile-time explosion under real
+traffic).
+
+The second audit catches post-donation reuse: with donating jits
+(``nan_guard`` off), the previous state's buffers are consumed by each
+step; any *retained* reference that reports ``.is_deleted()`` would
+fault (or silently read garbage on some backends) when next touched.
+
+===== ==================================================================
+GL601 observed jit cache size exceeds the static bucket census
+GL602 a live engine reference points at a donated (deleted) buffer
+===== ==================================================================
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.analysis.lint.findings import Finding, finding
+
+
+def expected_bucket_census(engine) -> Dict[str, int]:
+    """Static per-step compile-bucket ceiling from the engine geometry."""
+    n_prompt_buckets = max(1, engine.max_context // engine.prefill_pad)
+    census = {
+        "prefill": n_prompt_buckets,
+        "prefill_nl": n_prompt_buckets,
+        "decode": 1,
+    }
+    chunk = getattr(engine, "prefill_chunk", None)
+    if chunk:
+        # chunk lengths quantize to the scheduler's span padding; the
+        # static kv_pages bound adds one bucket per value in
+        # [1, max_pages_per_seq] plus the None (= full table) fallback.
+        n_chunk_lens = max(1, -(-engine.max_context // chunk))
+        kv_page_values = engine.max_pages_per_seq + 1
+        census["chunk"] = n_chunk_lens * kv_page_values
+        census["chunk_nl"] = n_chunk_lens * kv_page_values
+    else:
+        census["chunk"] = census["chunk_nl"] = 0
+    return census
+
+
+def _cache_size(fn) -> Optional[int]:
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return None
+
+
+def audit_jit_buckets(engine) -> List[Finding]:
+    out: List[Finding] = []
+    census = expected_bucket_census(engine)
+    step_sets = [("steps", engine._steps)]
+    if getattr(engine, "_fb_steps", None):
+        step_sets.append(("fallback", engine._fb_steps))
+    for label, steps in step_sets:
+        for which, fn in steps.items():
+            expect = census.get(which)
+            observed = _cache_size(fn)
+            if expect is None or observed is None:
+                continue
+            if observed > expect:
+                out.append(finding(
+                    "GL601", "error", f"engine:{which}",
+                    f"{label}[{which!r}] compiled {observed} buckets; the "
+                    f"static census caps it at {expect} (prefill_pad="
+                    f"{engine.prefill_pad}, prefill_chunk="
+                    f"{getattr(engine, 'prefill_chunk', None)}, "
+                    f"max_pages_per_seq={engine.max_pages_per_seq}) — an "
+                    f"argument is reaching the trace unquantized",
+                    key=label, observed=observed, expected=expect))
+    # the engine-tracked bucket keys (recorded at dispatch) are subject
+    # to the same ceiling — catches explosions even after a cache clear.
+    for which, seen in getattr(engine, "observed_buckets", {}).items():
+        expect = census.get(which)
+        if expect is not None and len(seen) > expect:
+            out.append(finding(
+                "GL601", "error", f"engine:{which}",
+                f"engine dispatched {len(seen)} distinct {which!r} bucket "
+                f"keys; the static census caps it at {expect}: "
+                f"{sorted(seen)[:8]}...",
+                key="dispatched", observed=len(seen), expected=expect))
+    return out
+
+
+def audit_donation(refs) -> List[Finding]:
+    """GL602 over a pytree of possibly-donated arrays.
+
+    ``refs``: dict of name -> pytree (engine state, params, pools...).
+    """
+    out: List[Finding] = []
+    for name, tree in refs.items():
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            deleted = getattr(leaf, "is_deleted", None)
+            if callable(deleted) and deleted():
+                out.append(finding(
+                    "GL602", "error", f"engine:{name}",
+                    f"{name}{jax.tree_util.keystr(path)} references a "
+                    f"donated (deleted) buffer — it was consumed by a "
+                    f"donating jitted step; touching it faults",
+                    key=jax.tree_util.keystr(path)))
+    return out
+
+
+def audit_engine(engine) -> List[Finding]:
+    """Full trace-time audit of a live ServingEngine."""
+    out = audit_jit_buckets(engine)
+    out += audit_donation({
+        "state": engine.state,
+        "params": engine.params,
+    })
+    return out

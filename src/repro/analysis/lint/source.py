@@ -1,0 +1,189 @@
+"""AST-level lint over the kernel sources (and the shim ban repo-wide).
+
+These rules look at the *text* of the launch sites — the half of the
+contract system the symbolic checker cannot see, because it checks
+declared contracts, not the code that must match them:
+
+===== ==================================================================
+GL501 a function contains `pl.pallas_call` but carries no
+      ``@kernel_contract(...)`` annotation resolving to a registered
+      builder (`kernels/contracts.py`)
+GL502 a matmul (`dot_general`/`jnp.dot`/`jnp.matmul`/`jnp.einsum`)
+      inside a kernel file without ``preferred_element_type``
+GL503 a `pallas_call` without ``compiler_params``/``dimension_semantics``
+      (Mosaic then serializes every axis — usually a perf bug, and the
+      race checker's soundness assumes declared semantics)
+GL504 `input_output_aliases` at a launch site whose contract does not
+      declare the alias (undeclared in-place update; aliased
+      *accumulation* is GL203 at the contract layer)
+GL505 a rank-1 scalar-sized BlockSpec without ``memory_space``
+      (scalar control operands belong in SMEM)
+GL506 the deprecated ``ops.*(backend=...)`` shim machinery
+      (``_deprecated_shim`` or a legacy top-level alias in
+      `kernels/ops.py`) reintroduced — removed for good in PR 7
+===== ==================================================================
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.lint.findings import Finding, finding
+
+# the PR-5 shims deleted in PR 7; binding these names at ops.py module
+# level (rather than the *_impl entries) would resurrect the pre-
+# ExecutionContext API.
+LEGACY_SHIM_NAMES = frozenset({
+    "gemm", "matmul", "conv2d", "flash_attention", "paged_attention",
+    "paged_prefill_attention", "ssd",
+})
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _calls(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node, _attr_chain(node.func)
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.keyword]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw
+    return None
+
+
+def _contract_name(fn: ast.FunctionDef) -> Optional[str]:
+    for deco in fn.decorator_list:
+        if isinstance(deco, ast.Call) \
+                and _attr_chain(deco.func).endswith("kernel_contract") \
+                and deco.args and isinstance(deco.args[0], ast.Constant):
+            return deco.args[0].value
+    return None
+
+
+def check_kernel_file(path, *, registry=None) -> List[Finding]:
+    """GL501/502/503/504/505 over one kernel source file."""
+    path = Path(path)
+    if registry is None:
+        from repro.kernels.contracts import CONTRACT_BUILDERS
+        registry = CONTRACT_BUILDERS
+    tree = ast.parse(path.read_text(), filename=str(path))
+    out: List[Finding] = []
+    rel = path.name if "src" not in path.parts else \
+        str(path.relative_to(next(p for p in path.parents
+                                  if p.name == "src")))
+
+    for fn in [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        site = f"{rel}::{fn.name}"
+        pallas_calls = [(c, callee) for c, callee in _calls(fn)
+                        if callee.endswith("pallas_call")]
+        if not pallas_calls:
+            continue
+        cname = _contract_name(fn)
+        if cname is None:
+            out.append(finding(
+                "GL501", "error", site,
+                f"{fn.name} launches pallas_call without a "
+                f"@kernel_contract annotation"))
+        elif cname not in registry:
+            out.append(finding(
+                "GL501", "error", site,
+                f"@kernel_contract({cname!r}) does not resolve to a "
+                f"registered builder in kernels/contracts.py", key=cname))
+        for call, _ in pallas_calls:
+            if _kw(call, "compiler_params") is None:
+                out.append(finding(
+                    "GL503", "warning", site,
+                    f"pallas_call at line {call.lineno} has no "
+                    f"compiler_params — declare dimension_semantics "
+                    f"explicitly (Mosaic serializes undeclared axes, and "
+                    f"the race check assumes declared semantics)",
+                    key=f"L{call.lineno}"))
+            alias_kw = _kw(call, "input_output_aliases")
+            if alias_kw is not None:
+                declared = False
+                if cname is not None and cname in registry:
+                    import inspect
+                    sig_doc = inspect.getsource(registry[cname])
+                    declared = "io_aliases" in sig_doc
+                if not declared:
+                    out.append(finding(
+                        "GL504", "error", site,
+                        f"pallas_call at line {call.lineno} uses "
+                        f"input_output_aliases but contract "
+                        f"{cname or '<none>'} declares no io_aliases — "
+                        f"undeclared in-place update (and NEVER sound as "
+                        f"an accumulator across grid revisits: GL203)",
+                        key=f"L{call.lineno}"))
+
+    for call, callee in _calls(tree):
+        if callee.split(".")[-1] in ("dot_general", "dot", "matmul",
+                                     "einsum"):
+            if _kw(call, "preferred_element_type") is None:
+                out.append(finding(
+                    "GL502", "error", f"{rel}::L{call.lineno}",
+                    f"{callee} at line {call.lineno} has no "
+                    f"preferred_element_type — narrow inputs would "
+                    f"accumulate at input precision"))
+        if callee.endswith("BlockSpec") and call.args:
+            blk = call.args[0]
+            if isinstance(blk, ast.Tuple) and len(blk.elts) == 1 \
+                    and _kw(call, "memory_space") is None:
+                out.append(finding(
+                    "GL505", "warning", f"{rel}::L{call.lineno}",
+                    f"rank-1 BlockSpec at line {call.lineno} without "
+                    f"memory_space — scalar control operands belong in "
+                    f"SMEM (memory_space=pltpu.SMEM)"))
+    return out
+
+
+def check_shim_ban(paths: Sequence) -> List[Finding]:
+    """GL506 across the given source files."""
+    out: List[Finding] = []
+    for path in paths:
+        path = Path(path)
+        tree = ast.parse(path.read_text(), filename=str(path))
+        rel = path.name if "src" not in path.parts else \
+            str(path.relative_to(next(p for p in path.parents
+                                      if p.name == "src")))
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Name, ast.Attribute)):
+                name = node.id if isinstance(node, ast.Name) else node.attr
+                if name == "_deprecated_shim":
+                    out.append(finding(
+                        "GL506", "error", f"{rel}::L{node.lineno}",
+                        f"_deprecated_shim at line {node.lineno}: the "
+                        f"ops.*(backend=...) deprecation shims were "
+                        f"removed in PR 7 — route through "
+                        f"ExecutionContext (ctx.<op>) instead"))
+        if rel.endswith("kernels/ops.py"):
+            for node in tree.body:
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets = [t.id for t in node.targets
+                               if isinstance(t, ast.Name)]
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    targets = [node.name]
+                for t in targets:
+                    if t in LEGACY_SHIM_NAMES:
+                        out.append(finding(
+                            "GL506", "error", f"{rel}::{t}",
+                            f"top-level {t!r} in kernels/ops.py shadows "
+                            f"the removed legacy ops.{t}(backend=...) "
+                            f"API — only *_impl entries (dispatched via "
+                            f"ExecutionContext) belong here", key=t))
+    return out

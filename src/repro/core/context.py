@@ -41,9 +41,11 @@ Ops are looked up in a registry, so ``ctx.gemm(...)``,
 ``ctx.matmul(...)`` all dispatch through the same mesh/tune/backend
 policy; new ops join via :func:`register_op`.
 
-The old ``repro.kernels.ops.*(backend=...)`` entry points survive for one
-release as thin shims that emit :class:`GemminiDeprecationWarning` (the
-test suite escalates that warning to an error for in-tree callers).
+The old ``repro.kernels.ops.*(backend=...)`` entry points are gone (their
+one-release deprecation-shim grace period ended in PR 7); lint rule GL506
+forbids rebinding the legacy names, and :class:`GemminiDeprecationWarning`
+remains the class any future repro deprecation must emit (the test suite
+escalates it to an error for in-tree callers).
 
 Sharding semantics (the ``mesh`` wrap):
 

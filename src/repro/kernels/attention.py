@@ -38,6 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 import repro.kernels as kernels_pkg
+from repro.kernels.contracts import kernel_contract
 
 _NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
@@ -118,6 +119,7 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+@kernel_contract("flash_attention")
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: Optional[int] = None,
                     softcap: Optional[float] = None,
@@ -239,6 +241,7 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+@kernel_contract("decode_attention")
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      pos: jnp.ndarray, *, window: Optional[int] = None,
                      softcap: Optional[float] = None,
@@ -351,6 +354,7 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+@kernel_contract("paged_decode_attention")
 def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                            lengths: jnp.ndarray, *,
@@ -480,6 +484,7 @@ def _paged_prefill_kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+@kernel_contract("paged_prefill_attention")
 def paged_prefill_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                             v_pool: jnp.ndarray, block_table: jnp.ndarray,
                             start: jnp.ndarray, *,

@@ -37,6 +37,7 @@ import repro.kernels as kernels_pkg
 
 from repro.core.config import Activation, GemminiConfig
 from repro.kernels import epilogue as epi
+from repro.kernels.contracts import kernel_contract
 
 
 def _conv_kernel(*refs,
@@ -83,6 +84,7 @@ def _conv_kernel(*refs,
                              out_dtype=out_dtype).reshape(oh, ow, -1)
 
 
+@kernel_contract("conv2d_implicit")
 def conv2d_implicit(x: jnp.ndarray, w: jnp.ndarray,
                     b: Optional[jnp.ndarray] = None, *, cfg: GemminiConfig,
                     stride: int = 1, padding: int = 0, shift: int = 0,

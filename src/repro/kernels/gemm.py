@@ -46,6 +46,7 @@ import repro.kernels as kernels_pkg
 from repro.core.config import Activation, Dataflow, GemminiConfig
 from repro.core.tiling import TilePlan
 from repro.kernels import epilogue as epi
+from repro.kernels.contracts import kernel_contract
 
 
 # ---------------------------------------------------------------------------
@@ -76,6 +77,7 @@ def _os_kernel(a_ref, b_ref, d_ref, c_ref, acc_ref, *, nk: int,
                                activation=activation, out_dtype=out_dtype)
 
 
+@kernel_contract("gemm_os")
 def gemm_os(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
             plan: TilePlan, cfg: GemminiConfig, *, shift: int = 0,
             activation: Activation = Activation.NONE,
@@ -154,6 +156,7 @@ def _ws_kernel(b_ref, a_ref, d_ref, c_ref, acc_ref, *, nk: int,
                                activation=activation, out_dtype=out_dtype)
 
 
+@kernel_contract("gemm_ws")
 def gemm_ws(a: jnp.ndarray, b: jnp.ndarray, d: Optional[jnp.ndarray],
             plan: TilePlan, cfg: GemminiConfig, *, shift: int = 0,
             activation: Activation = Activation.NONE,
@@ -203,6 +206,7 @@ def _epilogue_kernel(acc_ref, c_ref, *, shift, activation, out_dtype):
                            out_dtype=out_dtype)
 
 
+@kernel_contract("accumulator_epilogue")
 def accumulator_epilogue(acc: jnp.ndarray, plan: TilePlan, cfg: GemminiConfig,
                          *, shift: int = 0,
                          activation: Activation = Activation.NONE,
@@ -217,6 +221,10 @@ def accumulator_epilogue(acc: jnp.ndarray, plan: TilePlan, cfg: GemminiConfig,
         in_specs=[pl.BlockSpec((tm, tn), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), cfg.output_jnp),
+        # every tile is independent: both axes pipeline freely (found by
+        # lint GL503 — an undeclared grid serializes under Mosaic)
+        compiler_params=kernels_pkg.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(acc)
 

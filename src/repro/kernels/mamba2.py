@@ -44,6 +44,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 import repro.kernels as kernels_pkg
+from repro.kernels.contracts import kernel_contract
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, d_ref, b_ref, c_ref, y_ref, *rest,
@@ -106,6 +107,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, d_ref, b_ref, c_ref, y_ref, *rest,
             fs_ref[0, 0] = state_ref[...]
 
 
+@kernel_contract("ssd")
 def ssd(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray, b: jnp.ndarray,
         c: jnp.ndarray, *, d_skip: Optional[jnp.ndarray] = None,
         chunk: int = 256, interpret: bool = False,

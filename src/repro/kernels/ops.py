@@ -23,24 +23,19 @@ shapes they see -- and the schedules ``_resolve_plan`` /
 ``tune.warm_model_plans(n_shards=...)`` warms), not the global logical
 shapes GSPMD would otherwise trace them with.
 
-DEPRECATED: the old public entries ``ops.gemm(..., backend=...)`` etc.
-remain for one release as shims that emit
-:class:`repro.core.context.GemminiDeprecationWarning` and forward to the
-impls; the test suite escalates that warning to an error, so no in-tree
-caller may use them.
+The PR-5 ``ops.gemm(..., backend=...)`` deprecation shims were removed in
+PR 7 after their one-release grace period; lint rule GL506 forbids binding
+any legacy top-level alias in this module again.
 """
 
 from __future__ import annotations
 
-import functools
-import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.config import Activation, Dataflow, GemminiConfig
-from repro.core.context import GemminiDeprecationWarning
 from repro.core.tiling import TilePlan, plan_gemm
 from repro.kernels import gemm as gemm_kernel
 from repro.kernels import ref as ref_ops
@@ -452,30 +447,9 @@ def ssd_impl(x, dt, a_log, b, c, *, d_skip=None, chunk: int = 256,
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims (one release): the old per-call backend= API
+# The PR-5 ``ops.<name>(..., backend=...)`` deprecation shims lived here for
+# one release and are now gone: dispatch through
+# ``repro.core.context.ExecutionContext`` (``ctx.gemm``, ``ctx.ssd``, ...).
+# Lint rule GL506 (repro/analysis/lint/source.py) forbids reintroducing a
+# top-level alias for any legacy name in this module.
 # ---------------------------------------------------------------------------
-def _deprecated_shim(name: str, impl):
-    @functools.wraps(impl)
-    def shim(*args, **kw):
-        warnings.warn(
-            f"ops.{name}(..., backend=...) is deprecated; dispatch through "
-            f"repro.core.context.ExecutionContext (ctx.{name})",
-            GemminiDeprecationWarning, stacklevel=2)
-        return impl(*args, **kw)
-
-    shim.__name__ = name
-    shim.__qualname__ = name
-    shim.__doc__ = (f"DEPRECATED shim for :func:`{impl.__name__}` -- use "
-                    f"``ExecutionContext.{name}`` (repro.core.context).\n\n"
-                    + (impl.__doc__ or ""))
-    return shim
-
-
-gemm = _deprecated_shim("gemm", gemm_impl)
-matmul = _deprecated_shim("matmul", matmul_impl)
-conv2d = _deprecated_shim("conv2d", conv2d_impl)
-flash_attention = _deprecated_shim("flash_attention", flash_attention_impl)
-paged_attention = _deprecated_shim("paged_attention", paged_attention_impl)
-paged_prefill_attention = _deprecated_shim("paged_prefill_attention",
-                                           paged_prefill_attention_impl)
-ssd = _deprecated_shim("ssd", ssd_impl)

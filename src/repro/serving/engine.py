@@ -192,6 +192,11 @@ class ServingEngine:
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
         self.counters: Dict[str, int] = {"retries": 0, "fallbacks": 0}
+        # per-step-name set of dispatched compile-bucket keys, consumed by
+        # the trace-time auditor (repro.analysis.lint.jit_audit): every
+        # distinct key is one XLA compilation, and the static census from
+        # the page/chunk geometry caps how many may ever exist.
+        self.observed_buckets: Dict[str, set] = {}
         self.quarantined: List[str] = []
         self.watchdog = watchdog or StepWatchdog()
         cfg = engine_cfg or GemminiConfig(input_dtype="bf16",
@@ -420,6 +425,37 @@ class ServingEngine:
                 self.page_size, donate=False)
         return self._fb_steps
 
+    # -- trace-time audit hooks (repro.analysis.lint.jit_audit) ------------
+    @staticmethod
+    def _bucket_key(which: str, args: tuple):
+        """The compile-bucket a dispatch lands in: the traced token-block
+        shape plus any static argument (the chunk steps' kv_pages)."""
+        if which in ("prefill", "prefill_nl"):
+            return (int(args[1].shape[1]),)
+        if which in ("chunk", "chunk_nl"):
+            return (int(args[1].shape[1]), args[6])
+        return ()                                    # decode: one bucket
+
+    def jit_cache_stats(self) -> Dict[str, int]:
+        """Observed compile-bucket counts per jitted step (both the
+        primary steps and, once built, the XLA-twin fallbacks)."""
+        out: Dict[str, int] = {}
+        for label, steps in (("", self._steps),
+                             ("fb:", self._fb_steps or {})):
+            for which, fn in steps.items():
+                try:
+                    out[label + which] = int(fn._cache_size())
+                except Exception:
+                    pass
+        return out
+
+    def audit(self):
+        """Run the trace-time lint audit against this live engine:
+        compile-bucket explosions (GL601) and post-donation buffer reuse
+        (GL602).  Returns the findings (empty list = healthy)."""
+        from repro.analysis.lint import jit_audit
+        return jit_audit.audit_engine(self)
+
     def _quarantine(self, site: str) -> None:
         """Bar the tuned schedule behind a guard trip from future
         resolution (PlanCache.quarantine). Only the decode path maps 1:1
@@ -448,6 +484,8 @@ class ServingEngine:
         logits means the model itself diverged -- that raises, because
         sampling from NaN logits would silently emit garbage tokens.
         """
+        self.observed_buckets.setdefault(which, set()).add(
+            self._bucket_key(which, args))
         inj = self.faults
         for attempt in range(self.max_step_retries + 1):
             try:

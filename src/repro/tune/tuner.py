@@ -48,6 +48,43 @@ from repro.tune.schedules import AttnSchedule, ConvSchedule, PagedAttnSchedule
 TIE_BAND = 0.05
 
 
+def _feasibility():
+    """The lint layer's contract-feasibility predicates, or None.
+
+    Imported lazily: ``analysis.lint`` imports ``tune.schedules`` for its
+    probe lattices, so a module-level import here would cycle. Any import
+    failure degrades to "no filtering" -- the tuner must never depend on
+    the analysis layer to function.
+    """
+    try:
+        from repro.analysis.lint import feasibility
+        return feasibility
+    except Exception:
+        return None
+
+
+def _contract_filter(cands, keep_pred, feasible):
+    """Drop candidates the kernel-contract linter proves infeasible.
+
+    ``analysis.lint.feasibility`` re-derives each candidate's per-grid-step
+    VMEM footprint from the declared kernel contract (the GL301/GL302
+    budget proof), so provably-overflowing schedules are dropped before we
+    pay to measure them. Strictly advisory: the default/greedy reference
+    (``keep_pred``) is always retained -- winner selection dereferences it
+    unconditionally -- a predicate error keeps the candidate, and if
+    filtering would empty the lattice the original list survives.
+    """
+    kept = []
+    for c in cands:
+        try:
+            ok = keep_pred(c) or feasible(c)
+        except Exception:
+            ok = True
+        if ok:
+            kept.append(c)
+    return kept if kept else list(cands)
+
+
 def _check_mode() -> str:
     mode = flags.get("tune_mode")
     if mode not in flags.TUNE_MODES:
@@ -130,6 +167,14 @@ def tune_gemm(cfg: GemminiConfig, m: int, n: int, k: int, *,
     candidates = enumerate_plans(cfg, m, n, k, dataflow=dataflow,
                                  has_bias=has_bias,
                                  max_candidates=max_candidates)
+    feas = _feasibility()
+    if feas is not None:
+        candidates = _contract_filter(
+            candidates,
+            lambda p: (p.tile_m, p.tile_n, p.tile_k) ==
+                      (greedy_plan.tile_m, greedy_plan.tile_n,
+                       greedy_plan.tile_k),
+            lambda p: feas.gemm_plan_feasible(cfg, p, has_bias=has_bias))
 
     results: List[CandidateResult] = []
     greedy_result: Optional[CandidateResult] = None
@@ -254,6 +299,13 @@ def tune_attention(cfg: GemminiConfig, b: int, tq: int, tk: int, h: int,
     cands = schedules.enumerate_attn_schedules(
         cfg, b, h, kvh, tq, tk, d, causal=causal, window=window,
         in_bytes=in_bytes, max_candidates=max_candidates)
+    feas = _feasibility()
+    if feas is not None:
+        cands = _contract_filter(
+            cands,
+            lambda s: s.effective(tq, tk) == default,
+            lambda s: feas.attn_schedule_feasible(
+                cfg, s, b=b, h=h, kvh=kvh, tq=tq, tk=tk, d=d, dtype=dtype))
 
     results: List[SchedResult] = []
     # The XLA proxy cannot see block_q (no q blocking in the blockwise
@@ -333,6 +385,14 @@ def tune_paged_attention(cfg: GemminiConfig, b: int, h: int, kvh: int,
     cands = schedules.enumerate_paged_schedules(
         cfg, b, h, kvh, d, max_context, window=window, in_bytes=in_bytes,
         max_candidates=max_candidates)
+    feas = _feasibility()
+    if feas is not None:
+        cands = _contract_filter(
+            cands,
+            lambda s: s.effective(max_context) == default,
+            lambda s: feas.paged_schedule_feasible(
+                cfg, s, b=b, h=h, kvh=kvh, d=d, max_context=max_context,
+                dtype=dtype))
 
     results: List[SchedResult] = []
     for s in cands:
@@ -397,6 +457,14 @@ def tune_conv(cfg: GemminiConfig, n: int, h: int, w: int, ci: int, co: int,
         has_bias=has_bias, max_candidates=max_candidates)
     if default not in cands:
         cands.append(default)
+    feas = _feasibility()
+    if feas is not None:
+        cands = _contract_filter(
+            cands,
+            lambda s: s.effective(co) == default,
+            lambda s: feas.conv_schedule_feasible(
+                cfg, s, n=n, h=h, w=w, ci=ci, co=co, kh=kh, kw=kw,
+                stride=stride, padding=padding, has_bias=has_bias))
 
     results: List[SchedResult] = []
     proxy_memo: dict = {}

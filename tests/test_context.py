@@ -12,7 +12,7 @@ import pytest
 
 from repro.core import context, flags
 from repro.core.config import Activation, GemminiConfig
-from repro.core.context import ExecutionContext, GemminiDeprecationWarning
+from repro.core.context import ExecutionContext
 from repro.core.generator import elaborate
 from repro.kernels import ops, ref
 from repro.models import ssm
@@ -131,52 +131,22 @@ def test_ctx_tune_mode_scoped_per_dispatch(rng, tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (old ops.*(backend=...) API, one release)
+# the old ops.*(backend=...) shims are GONE (PR 7, grace period over)
 # ---------------------------------------------------------------------------
-def test_shim_warns_and_matches_ctx_exactly(rng):
-    cfg = GemminiConfig()
-    a, b = _ints(rng, (96, 64)), _ints(rng, (64, 48))
-    want = ExecutionContext(cfg=cfg, backend="interpret").gemm(
-        a, b, None, shift=5)
-    with pytest.warns(GemminiDeprecationWarning, match="ctx.gemm"):
-        got = ops.gemm(a, b, None, cfg=cfg, shift=5, backend="interpret")
-    assert bool(jnp.all(got == want))
-
-
-def test_every_shim_warns(rng):
-    """All seven old entries emit GemminiDeprecationWarning; the impl
-    twins stay silent (they are what the context dispatches to)."""
+def test_legacy_shims_removed(rng):
+    """The seven PR-5 deprecation shims no longer exist on ops; the
+    *_impl entries (the ExecutionContext dispatch surface) remain, and
+    lint rule GL506 forbids rebinding the legacy names."""
+    for name in ("gemm", "matmul", "conv2d", "flash_attention",
+                 "paged_attention", "paged_prefill_attention", "ssd"):
+        assert not hasattr(ops, name), f"legacy shim ops.{name} resurfaced"
+        assert hasattr(ops, name + "_impl")
+    # the impl surface stays warning-free and live
     cfg = GemminiConfig(input_dtype="fp32", acc_dtype="fp32",
                         output_dtype="fp32")
     a = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
-    q = jnp.asarray(rng.standard_normal((1, 16, 2, 8)), jnp.float32)
-    x = jnp.asarray(rng.standard_normal((1, 8, 8, 4)), jnp.float32)
-    w = jnp.asarray(rng.standard_normal((3, 3, 4, 8)), jnp.float32)
-    pool = jnp.asarray(rng.standard_normal((2, 3, 4, 8)), jnp.float32)
-    tables = jnp.zeros((1, 2), jnp.int32)
-    lengths = jnp.ones((1,), jnp.int32)
-    sx = jnp.asarray(rng.standard_normal((1, 16, 2, 8)), jnp.float32)
-    sdt = jnp.abs(jnp.asarray(rng.standard_normal((1, 16, 2)),
-                              jnp.float32)) + 0.01
-    sa = jnp.zeros((2,), jnp.float32)
-    sb = jnp.asarray(rng.standard_normal((1, 16, 1, 8)), jnp.float32)
-    calls = [
-        lambda: ops.gemm(a, b, cfg=cfg),
-        lambda: ops.matmul(a, b, cfg=cfg),
-        lambda: ops.conv2d(x, w, cfg=cfg),
-        lambda: ops.flash_attention(q, q, q),
-        lambda: ops.paged_attention(q[:, :1], pool, pool, tables, lengths),
-        lambda: ops.paged_prefill_attention(q, pool, pool, tables[0],
-                                            jnp.int32(0)),
-        lambda: ops.ssd(sx, sdt, sa, sb, sb),
-    ]
-    for call in calls:
-        with pytest.warns(GemminiDeprecationWarning):
-            call()
-    # impl entries are the warning-free surface
     ops.gemm_impl(a, b, cfg=cfg)
-    ops.ssd_impl(sx, sdt, sa, sb, sb)
 
 
 # ---------------------------------------------------------------------------

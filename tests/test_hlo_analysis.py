@@ -138,3 +138,108 @@ def test_roofline_fraction_math():
     assert rl.bottleneck == "memory"
     ideal = 2.56e14 / 256 / roofline.PEAK_FLOPS_BF16
     assert abs(rl.roofline_fraction - ideal / rl.t_bound) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# parser edge cases (synthetic HLO text: deterministic and independent of
+# what this compiler version happens to emit)
+# ---------------------------------------------------------------------------
+_WHILE_HLO = """
+HloModule synthetic_while
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %iv = s32[] get-tuple-element((s32[], f32[128,128]) %p), index=0
+  %one = s32[] constant(1)
+  %ivn = s32[] add(s32[] %iv, s32[] %one)
+  %x = f32[128,128] get-tuple-element((s32[], f32[128,128]) %p), index=1
+  %y = f32[128,128] dot(f32[128,128] %x, f32[128,128] %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[128,128]) tuple(s32[] %ivn, f32[128,128] %y)
+}
+
+%cond (q: (s32[], f32[128,128])) -> pred[] {
+  %q = (s32[], f32[128,128]) parameter(0)
+  %qiv = s32[] get-tuple-element((s32[], f32[128,128]) %q), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %qiv, s32[] %n), direction=LT
+}
+
+ENTRY %main (arg: f32[128,128]) -> f32[128,128] {
+  %arg = f32[128,128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,128]) tuple(s32[] %zero, f32[128,128] %arg)
+  %w = (s32[], f32[128,128]) while((s32[], f32[128,128]) %init), condition=%cond, body=%body{ANNOT}
+  ROOT %out = f32[128,128] get-tuple-element((s32[], f32[128,128]) %w), index=1
+}
+"""
+
+
+def test_trip_count_condition_fallback():
+    # no backend_config: the condition's compare-against-constant(7) is
+    # the only trip-count evidence
+    r = analyze_hlo(_WHILE_HLO.replace("{ANNOT}", ""))
+    assert r.n_while == 1 and r.max_trip == 7
+    # dot + the s32 add (body) + the compare (cond), each executed x7
+    assert r.flops == 7 * (2 * 128 ** 3 + 1 + 1)
+
+
+def test_trip_count_known_annotation_wins():
+    annot = (', backend_config={"known_trip_count":{"n":"12"}}')
+    r = analyze_hlo(_WHILE_HLO.replace("{ANNOT}", annot))
+    assert r.max_trip == 12                 # annotation beats the fallback 7
+    assert r.flops == 12 * (2 * 128 ** 3 + 1 + 1)
+
+
+_ZERO_HLO = """
+HloModule synthetic_zero
+
+ENTRY %main (a: f32[0,128], b: f32[128,64]) -> f32[0,64] {
+  %a = f32[0,128] parameter(0)
+  %b = f32[128,64] parameter(1)
+  %d = f32[0,64] dot(f32[0,128] %a, f32[128,64] %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r = f32[0,64] tanh(f32[0,64] %d)
+}
+"""
+
+
+def test_zero_sized_operands():
+    # a zero-element operand (empty expert / degenerate shard) must not
+    # crash or contribute flops; only the nonzero operand costs bytes
+    r = analyze_hlo(_ZERO_HLO)
+    assert r.flops == 0.0
+    assert r.bytes == 128 * 64 * 4          # %b read by the dot; rest is 0
+
+
+_NESTED_FUSION_HLO = """
+HloModule synthetic_nested_fusion
+
+%inner (p0: f32[128]) -> f32[128] {
+  %p0 = f32[128] parameter(0)
+  ROOT %t = f32[128] tanh(f32[128] %p0)
+}
+
+%outer (q0: f32[128]) -> f32[128] {
+  %q0 = f32[128] parameter(0)
+  %m = f32[128] multiply(f32[128] %q0, f32[128] %q0)
+  ROOT %f = f32[128] fusion(f32[128] %m), kind=kLoop, calls=%inner
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128] parameter(0)
+  ROOT %g = f32[128] fusion(f32[128] %a), kind=kLoop, calls=%outer
+}
+"""
+
+
+def test_nested_fusion_flops_once_bytes_at_boundary():
+    # ops inside (transitively) fused bodies cost flops exactly once, and
+    # HBM bytes accrue only at the outermost fusion's operands/results
+    r = analyze_hlo(_NESTED_FUSION_HLO)
+    assert r.flops == 256.0                 # multiply(128) + tanh(128)
+    assert r.bytes == 2 * 128 * 4           # %a in, %g out -- nothing inner
+
+
+def test_no_entry_raises():
+    with pytest.raises(ValueError, match="ENTRY"):
+        analyze_hlo("%orphan (p: f32[4]) -> f32[4] {\n"
+                    "  ROOT %p = f32[4] parameter(0)\n}\n")

@@ -1,0 +1,444 @@
+"""Golden tests for the static kernel-contract linter (PR 7).
+
+Three layers, three locks:
+
+* **Known-bad contracts** — hand-built `KernelContract`s each carrying
+  exactly one defect (including the seed's silently-wrong WS GEMM,
+  resurrected as a fixture) must produce exactly their diagnostic.
+* **Known-bad source** — `tests/fixtures/bad_kernels.py` is AST-scanned
+  (never imported) and must trip every source rule.
+* **The repo is clean** — `lint_repo()` over the real kernels and the
+  full tuner schedule lattice returns zero findings, so the shipped
+  baseline stays empty.
+"""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import GemminiConfig
+from repro.kernels.contracts import (CONTRACT_BUILDERS, DotContract,
+                                     KernelContract, OperandSpec, Reduction,
+                                     ScratchSpec, dt)
+from repro.analysis.lint import (apply_baseline, lint_repo, load_baseline,
+                                 write_baseline)
+from repro.analysis.lint import affine, checks, feasibility, jit_audit, source
+from repro.analysis.lint.affine import Ix, NonAffine, eval_index_map
+from repro.analysis.lint.findings import dedupe, finding, to_report
+
+FIXTURE = Path(__file__).parent / "fixtures" / "bad_kernels.py"
+F32 = ("float", 4)
+
+
+def codes(findings):
+    return sorted(f.code for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# affine domain
+# ---------------------------------------------------------------------------
+def test_ix_arithmetic_and_range():
+    i = Ix.var("i", 4)
+    e = 2 * i + 1
+    assert e.range() == (1, 7)
+    assert (i - 1).range() == (-1, 2)
+    assert (-i).range() == (-3, 0)
+    assert e.support == ("i",)
+
+
+def test_ix_floordiv_contiguity():
+    i = Ix.var("i", 8)
+    e = i // 2
+    assert e.range() == (0, 3)
+    assert e.covers(4)            # floor of a contiguous range is contiguous
+    assert not e.covers(8)
+
+
+def test_ix_mixed_radix_coverage():
+    i, j = Ix.var("i", 2), Ix.var("j", 3)
+    assert (i * 3 + j).covers(6)  # decode's fused b*kvh axis
+    assert not (i * 2 + j).covers(6)   # overlapping radix
+    assert (i * 3 + j).injective_in(("i", "j"))
+    assert not (i + j).injective_in(("i", "j"))
+
+
+def test_ix_nonaffine_rejections():
+    i, j = Ix.var("i", 2), Ix.var("j", 3)
+    with pytest.raises(NonAffine):
+        _ = i * j
+    with pytest.raises(NonAffine):
+        _ = i % 2
+    with pytest.raises(NonAffine):
+        _ = (i + j) // 2          # compound floordiv is not exact
+    with pytest.raises(NonAffine):
+        Ix.lift(object())
+
+
+def test_eval_index_map_lifts_scalars():
+    grid = (("i", 4), ("j", 2))
+    idx = eval_index_map(lambda i, j: (j, 0), grid)
+    assert idx[0].support == ("j",) and idx[1] == Ix.lift(0)
+
+
+# ---------------------------------------------------------------------------
+# contract fixtures: one defect, one diagnostic
+# ---------------------------------------------------------------------------
+def _op(name, shape, block, index_map, **kw):
+    return OperandSpec(name=name, shape=shape, block=block,
+                       index_map=index_map, **kw)
+
+
+def test_gl101_out_of_bounds_block_index():
+    c = KernelContract(
+        name="fix_oob", grid=(("i", 4),), semantics=("parallel",),
+        inputs=(_op("a", (512, 128), (128, 128), lambda i: (i + 1, 0)),),
+        outputs=(_op("o", (512, 128), (128, 128), lambda i: (i, 0)),))
+    assert codes(checks.check_contract(c, GemminiConfig())) == ["GL101"]
+
+
+def test_gl102_coverage_gap():
+    # the grid only writes blocks 0..1 of a 4-block output
+    c = KernelContract(
+        name="fix_gap", grid=(("i", 2),), semantics=("parallel",),
+        inputs=(),
+        outputs=(_op("o", (512, 128), (128, 128), lambda i: (i, 0)),))
+    assert codes(checks.check_contract(c, GemminiConfig())) == ["GL102"]
+
+
+def test_gl103_nonaffine_undeclared():
+    table = [0, 2, 1, 3]
+    c = KernelContract(
+        name="fix_gather", grid=(("i", 4),), semantics=("arbitrary",),
+        inputs=(_op("a", (512, 128), (128, 128),
+                    lambda i: (table[i], 0)),),   # real maps read scalar refs
+        outputs=(_op("o", (512, 128), (128, 128), lambda i: (i, 0)),))
+    assert "GL103" in codes(checks.check_contract(c, GemminiConfig()))
+
+
+def test_gl201_parallel_write_race():
+    c = KernelContract(
+        name="fix_race", grid=(("i", 2), ("kk", 4)),
+        semantics=("parallel", "parallel"),
+        inputs=(),
+        outputs=(_op("o", (256, 128), (128, 128), lambda i, kk: (i, 0)),))
+    assert codes(checks.check_contract(c, GemminiConfig())) == ["GL201"]
+
+
+def test_gl202_undeclared_revisit():
+    c = KernelContract(
+        name="fix_revisit", grid=(("i", 2), ("kk", 4)),
+        semantics=("parallel", "arbitrary"),
+        inputs=(),
+        outputs=(_op("o", (256, 128), (128, 128), lambda i, kk: (i, 0)),))
+    assert codes(checks.check_contract(c, GemminiConfig())) == ["GL202"]
+
+
+def test_gl203_seed_ws_aliased_accumulation():
+    """The resurrected seed bug: the pre-rewrite WS GEMM accumulated
+    partial sums through an input/output alias across separated K-step
+    revisits — silently wrong for k_steps > 1 (no RAW guarantee through
+    an alias). Declaring exactly that pattern must be rejected outright,
+    not warned."""
+    c = KernelContract(
+        name="fix_seed_ws", grid=(("j", 2), ("i", 2), ("kk", 4)),
+        semantics=("parallel", "parallel", "arbitrary"),
+        inputs=(
+            _op("b", (512, 256), (128, 128), lambda j, i, kk: (kk, j)),
+            _op("a", (256, 512), (128, 128), lambda j, i, kk: (i, kk)),
+            _op("c_in", (256, 256), (128, 128), lambda j, i, kk: (i, j)),
+        ),
+        outputs=(_op("c", (256, 256), (128, 128), lambda j, i, kk: (i, j)),),
+        reductions=(Reduction(out="c", axes=("kk",), via="alias",
+                              alias_input="c_in"),),
+        io_aliases=((2, 0),))
+    fs = checks.check_contract(c, GemminiConfig())
+    assert codes(fs) == ["GL203"]
+    assert fs[0].severity == "error"
+    assert "alias" in fs[0].message
+
+
+def test_gl203_sound_scratch_pattern_is_clean():
+    # same geometry, accumulation via VMEM scratch: the sound rewrite
+    c = KernelContract(
+        name="fix_ws_ok", grid=(("j", 2), ("i", 2), ("kk", 4)),
+        semantics=("parallel", "parallel", "arbitrary"),
+        inputs=(
+            _op("b", (512, 256), (128, 128), lambda j, i, kk: (kk, j)),
+            _op("a", (256, 512), (128, 128), lambda j, i, kk: (i, kk)),
+        ),
+        outputs=(_op("c", (256, 256), (128, 128), lambda j, i, kk: (i, j)),),
+        scratch=(ScratchSpec("acc", (128, 128)),),
+        reductions=(Reduction(out="c", axes=("kk",), via="scratch",
+                              scratch="acc"),))
+    assert checks.check_contract(c, GemminiConfig()) == []
+
+
+def test_gl204_reduction_names_missing_scratch():
+    c = KernelContract(
+        name="fix_noscratch", grid=(("i", 2), ("kk", 4)),
+        semantics=("parallel", "arbitrary"),
+        inputs=(),
+        outputs=(_op("o", (256, 128), (128, 128), lambda i, kk: (i, 0)),),
+        reductions=(Reduction(out="o", axes=("kk",), via="scratch",
+                              scratch="acc"),))
+    assert codes(checks.check_contract(c, GemminiConfig())) == ["GL204"]
+
+
+def test_gl301_streamed_blocks_overflow_scratchpad():
+    cfg = GemminiConfig()
+    c = KernelContract(
+        name="fix_spad", grid=(("kk", 4),), semantics=("arbitrary",),
+        inputs=(_op("a", (8192, 2048), (2048, 2048),   # 16 MiB f32 block
+                    lambda kk: (kk, 0)),),
+        outputs=(_op("o", (1, 1), (1, 1), lambda kk: (0, 0)),),
+        scratch=(ScratchSpec("acc", (8, 8)),),
+        reductions=(Reduction(out="o", axes=("kk",), via="scratch",
+                              scratch="acc"),))
+    fs = checks.check_contract(c, cfg)
+    assert codes(fs) == ["GL301"]
+    assert not checks.fits_budgets(c, cfg)
+
+
+def test_gl302_resident_plus_scratch_overflow_accumulator():
+    cfg = GemminiConfig()
+    c = KernelContract(
+        name="fix_acc", grid=(("i", 2),), semantics=("parallel",),
+        inputs=(),
+        outputs=(_op("o", (2048, 1024), (1024, 1024),  # 4 MiB resident
+                     lambda i: (i, 0)),),
+        scratch=(ScratchSpec("acc", (1024, 1024)),))   # + 4 MiB scratch
+    fs = checks.check_contract(c, cfg)
+    assert codes(fs) == ["GL302"]
+    assert not checks.fits_budgets(c, cfg)
+
+
+def test_gl401_narrow_dot_needs_wide_accumulator():
+    base = dict(grid=(("i", 1),), semantics=("parallel",), inputs=(),
+                outputs=(_op("o", (8, 8), (8, 8), lambda i: (0, 0)),))
+    bad = KernelContract(
+        name="fix_dot", dots=(DotContract(dt("bf16"), dt("bf16"),
+                                          dt("bf16")),), **base)
+    assert codes(checks.check_contract(bad, GemminiConfig())) == ["GL401"]
+    # int8 x int8 -> f32 is also wrong (kind mismatch) ...
+    kind = KernelContract(
+        name="fix_dot2", dots=(DotContract(dt("int8"), dt("int8"),
+                                           dt("fp32")),), **base)
+    assert codes(checks.check_contract(kind, GemminiConfig())) == ["GL401"]
+    # ... while the two sound pairings pass.
+    ok = KernelContract(
+        name="fix_dot3", dots=(DotContract(dt("bf16"), dt("bf16"),
+                                           dt("fp32")),
+                               DotContract(dt("int8"), dt("int8"),
+                                           dt("int32")),), **base)
+    assert checks.check_contract(ok, GemminiConfig()) == []
+
+
+def test_gl402_scalar_block_not_in_smem():
+    c = KernelContract(
+        name="fix_smem", grid=(("i", 1),), semantics=("parallel",),
+        inputs=(_op("lens", (1,), (1,), lambda i: (0,)),),
+        outputs=(_op("o", (8, 8), (8, 8), lambda i: (0, 0)),))
+    fs = checks.check_contract(c, GemminiConfig())
+    assert codes(fs) == ["GL402"] and fs[0].severity == "warning"
+    smem = KernelContract(
+        name="fix_smem2", grid=(("i", 1),), semantics=("parallel",),
+        inputs=(_op("lens", (1,), (1,), lambda i: (0,),
+                    memory_space="smem"),),
+        outputs=(_op("o", (8, 8), (8, 8), lambda i: (0, 0)),))
+    assert checks.check_contract(smem, GemminiConfig()) == []
+
+
+# ---------------------------------------------------------------------------
+# fingerprints, dedupe, baseline
+# ---------------------------------------------------------------------------
+def test_fingerprint_stable_across_instantiations():
+    c = KernelContract(
+        name="fix_gap", grid=(("i", 2),), semantics=("parallel",),
+        inputs=(),
+        outputs=(_op("o", (512, 128), (128, 128), lambda i: (i, 0)),))
+    a = checks.check_contract(c, GemminiConfig(), inst="t128")
+    b = checks.check_contract(c, GemminiConfig(), inst="t256")
+    assert a[0].fingerprint == b[0].fingerprint   # inst stays out of the fp
+    assert dict(a[0].data)["instantiation"] == "t128"
+    merged = dedupe(a + b)
+    assert len(merged) == 1
+    assert dict(merged[0].data)["occurrences"] == 2
+
+
+def test_baseline_roundtrip(tmp_path):
+    f1 = finding("GL102", "error", "contract:x", "msg", key="o:0")
+    f2 = finding("GL501", "error", "k.py::f", "msg2")
+    path = tmp_path / "baseline.json"
+    write_baseline(path, [f1])
+    bl = load_baseline(path)
+    assert f1.fingerprint in bl
+    new, suppressed = apply_baseline([f1, f2], bl)
+    assert [f.code for f in new] == ["GL501"]
+    assert [f.code for f in suppressed] == ["GL102"]
+    assert load_baseline(tmp_path / "missing.json") == {}
+    rep = to_report(new, suppressed=suppressed)
+    assert rep["counts"] == {"error": 1, "warning": 0, "info": 0,
+                             "total": 1, "suppressed": 1}
+
+
+# ---------------------------------------------------------------------------
+# source rules over the known-bad fixture (AST only, never imported)
+# ---------------------------------------------------------------------------
+def test_fixture_trips_every_source_rule():
+    fs = source.check_kernel_file(FIXTURE)
+    got = codes(fs)
+    assert got.count("GL501") == 2        # unannotated + unregistered
+    for code in ("GL502", "GL503", "GL504", "GL505"):
+        assert code in got, f"{code} missing from {got}"
+    shim = source.check_shim_ban([FIXTURE])
+    assert codes(shim) == ["GL506"]
+    assert "_deprecated_shim" in shim[0].message
+
+
+def test_gl506_legacy_toplevel_name_in_ops(tmp_path):
+    ops = tmp_path / "src" / "repro" / "kernels" / "ops.py"
+    ops.parent.mkdir(parents=True)
+    ops.write_text("def gemm(a, b):\n    return a\n"
+                   "matmul = gemm\n"
+                   "def gemm_impl(a, b):\n    return a\n")
+    fs = source.check_shim_ban([ops])
+    assert codes(fs) == ["GL506", "GL506"]         # gemm + matmul; not *_impl
+    assert {f.key for f in fs} == {"gemm", "matmul"}
+
+
+def test_real_kernels_are_annotated():
+    # every launcher carries a registered contract (the GL501 invariant)
+    import repro.kernels.gemm as g
+    import repro.kernels.attention as att
+    for fn in (g.gemm_os, g.gemm_ws, g.accumulator_epilogue,
+               att.flash_attention, att.decode_attention):
+        assert fn.__lint_contract__ in CONTRACT_BUILDERS
+
+
+# ---------------------------------------------------------------------------
+# the repo itself is lint-clean (satellite: fix findings, don't baseline)
+# ---------------------------------------------------------------------------
+def test_repo_is_lint_clean():
+    fs = lint_repo()
+    assert fs == [], "\n".join(
+        f"{f.code} {f.site}: {f.message}" for f in fs)
+
+
+def test_shipped_baseline_is_empty():
+    path = Path(__file__).resolve().parents[1] / "tools" / "lint_baseline.json"
+    assert load_baseline(path) == {}
+
+
+def test_cli_json_gate(tmp_path):
+    from repro.analysis.lint.__main__ import main
+    out = tmp_path / "lint.json"
+    rc = main(["--no-baseline", "--format", "json", "--out", str(out)])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["counts"]["total"] == 0 and rep["schema"] == 1
+
+
+# ---------------------------------------------------------------------------
+# tuner feasibility hook
+# ---------------------------------------------------------------------------
+def test_default_schedules_are_feasible():
+    from repro.core.tiling import plan_gemm
+    from repro.tune import schedules
+    cfg = GemminiConfig()
+    plan = plan_gemm(cfg, 512, 512, 512)
+    assert feasibility.gemm_plan_feasible(cfg, plan, has_bias=True)
+    assert feasibility.attn_schedule_feasible(
+        cfg, schedules.default_attn_schedule(), b=2, h=8, kvh=2,
+        tq=1024, tk=1024, d=128)
+    assert feasibility.paged_schedule_feasible(
+        cfg, schedules.default_paged_schedule(), b=4, h=8, kvh=2, d=128,
+        max_context=2048)
+    assert feasibility.conv_schedule_feasible(
+        cfg, schedules.default_conv_schedule(), n=2, h=16, w=16, ci=64,
+        co=256, kh=3, kw=3, padding=1)
+
+
+def test_feasibility_is_total_on_garbage():
+    cfg = GemminiConfig()
+    assert feasibility.gemm_plan_feasible(cfg, object()) is False
+    assert feasibility.conv_schedule_feasible(
+        cfg, object(), n=1, h=1, w=1, ci=1, co=1, kh=1, kw=1) is False
+
+
+def test_contract_filter_always_keeps_reference():
+    from repro.tune.tuner import _contract_filter
+    cands = ["default", "a", "b"]
+    kept = _contract_filter(cands, lambda c: c == "default",
+                            lambda c: False)
+    assert kept == ["default"]            # reference survives a veto of all
+    kept = _contract_filter(cands, lambda c: False, lambda c: c != "a")
+    assert kept == ["default", "b"]
+    # a predicate that raises keeps the candidate (advisory, never fatal)
+    kept = _contract_filter(cands, lambda c: False,
+                            lambda c: (_ for _ in ()).throw(RuntimeError()))
+    assert kept == cands
+    # filtering to nothing falls back to the original lattice
+    kept = _contract_filter(["a", "b"], lambda c: False, lambda c: False)
+    assert kept == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# trace-time jit audit
+# ---------------------------------------------------------------------------
+from repro.models import transformer as tf          # noqa: E402
+from repro.serving import ServingEngine             # noqa: E402
+
+_TINY = tf.ModelConfig(name="tiny-lint", family="dense", n_layers=1,
+                       d_model=32, vocab=64, n_heads=2, n_kv_heads=1,
+                       head_dim=16, d_ff=64, dtype=jnp.float32)
+
+
+def _engine(**kw):
+    return ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                         n_pages=8, temperature=0.0, seed=0,
+                         backend="interpret", prefill_chunk=8, **kw)
+
+
+def test_bucket_census_geometry():
+    eng = _engine()
+    census = jit_audit.expected_bucket_census(eng)
+    assert census["prefill"] == 32 // eng.prefill_pad
+    assert census["decode"] == 1
+    # chunk lengths x (kv_pages values + the None fallback)
+    assert census["chunk"] == (32 // 8) * (eng.max_pages_per_seq + 1)
+
+
+def test_fresh_engine_audits_clean_and_run_stays_in_census():
+    eng = _engine()
+    assert eng.audit() == []
+    rng = np.random.default_rng(0)
+    eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 3)
+    eng.submit(rng.integers(0, 64, (11,), dtype=np.int32), 3)
+    eng.run()
+    assert eng.audit() == []              # real traffic stays inside census
+    stats = eng.jit_cache_stats()
+    assert stats and all(isinstance(v, int) for v in stats.values())
+    census = jit_audit.expected_bucket_census(eng)
+    for which, seen in eng.observed_buckets.items():
+        assert len(seen) <= census[which]
+
+
+def test_gl601_dispatched_bucket_explosion():
+    eng = _engine()
+    # simulate an unquantized argument leaking into the trace: more
+    # distinct prefill bucket keys than prompt-length quantization allows
+    eng.observed_buckets["prefill"] = {(n,) for n in range(1, 64)}
+    fs = eng.audit()
+    assert codes(fs) == ["GL601"]
+    assert dict(fs[0].data)["expected"] == 32 // eng.prefill_pad
+
+
+def test_gl602_post_donation_reuse():
+    x = jnp.arange(4)
+    x.delete()                            # stand-in for a donated buffer
+    fs = jit_audit.audit_donation({"state": {"w": x, "ok": jnp.arange(2)}})
+    assert codes(fs) == ["GL602"]
+    assert "w" in fs[0].key

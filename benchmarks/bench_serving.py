@@ -144,6 +144,13 @@ def main(csv: bool = True, repeats: int = 3) -> List[Dict]:
             retries=int(s["retries"]), fallbacks=int(s["fallbacks"]),
             shed=int(s["shed"]),
             straggler_steps=int(s["straggler_steps"]),
+            # Registry-backed per-step gauge peaks (repro.obs.metrics):
+            # memory-pressure / load shape of the run, charted alongside
+            # throughput so a scheduling regression that trades tokens/s
+            # for arena headroom is visible as such.
+            arena_used_pages_peak=int(s.get("arena_used_pages_peak", 0)),
+            live_slots_peak=int(s.get("live_slots_peak", 0)),
+            queue_depth_peak=int(s.get("queue_depth_peak", 0)),
             slots=MAX_SLOTS, page_size=PAGE_SIZE))
     speedup = (summaries["continuous"]["tokens_per_s"]
                / max(summaries["static"]["tokens_per_s"], 1e-9))
@@ -188,6 +195,9 @@ def main(csv: bool = True, repeats: int = 3) -> List[Dict]:
             retries=int(s["retries"]), fallbacks=int(s["fallbacks"]),
             shed=int(s["shed"]),
             prefill_chunk=chunk or 0, prefill_budget=LONG_BUDGET,
+            arena_used_pages_peak=int(s.get("arena_used_pages_peak", 0)),
+            live_slots_peak=int(s.get("live_slots_peak", 0)),
+            queue_depth_peak=int(s.get("queue_depth_peak", 0)),
             slots=MAX_SLOTS, page_size=PAGE_SIZE))
     # Ratios of per-arm NOISE FLOORS (the long_best rows above): each arm
     # takes its best tokens/s and best ITL tail across >=5 interleaved

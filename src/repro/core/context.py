@@ -245,8 +245,52 @@ class ExecutionContext:
                 f"ExecutionContext has no op {name!r}; registered ops: "
                 f"{registered_ops()}")
         fn = functools.partial(_OPS[name], self)
+        prof = _profiler()
+        if prof is not None:
+            # Innermost wrap: timing excludes the fault injector's
+            # host-side bookkeeping (and a poisoned output is still the
+            # op the bucket timed).
+            fn = _profiled_op(name, fn, prof, self)
         inj = _fault_injector()
         return fn if inj is None else _faulted_op(name, fn, inj)
+
+
+def _profiler():
+    """The process-global kernel profiler, if one is installed (see
+    :mod:`repro.obs.profile`). Lazy import, same layering rule as the
+    fault injector below; the common case (no profiling) costs one None
+    check per dispatch."""
+    try:
+        from repro.obs import profile
+    except ImportError:                       # pragma: no cover - stub envs
+        return None
+    return profile.active()
+
+
+def _profiled_op(name: str, fn: Callable, prof, ctx) -> Callable:
+    """Wrap one op dispatch with blocking-sync timing into the profiler's
+    (op, shape-signature) bucket, joined with the op's KernelContract
+    FLOPs/bytes (repro.obs.kernel_costs).
+
+    EAGER calls only — under a jit trace the wrapper is a pass-through:
+    a timer at trace time would measure tracing, and the blocking sync
+    would serialize the compiled pipeline (the exact rule _faulted_op
+    follows)."""
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        import jax
+        clean = getattr(jax.core, "trace_state_clean", None)
+        if clean is not None and not clean():
+            return fn(*args, **kw)
+        bucket = prof.bucket(name, args, kw, ctx.cfg)
+        t0 = prof.clock()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        prof.record(bucket, t0, prof.clock())
+        return out
+
+    return wrapped
 
 
 def _fault_injector():

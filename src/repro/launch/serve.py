@@ -29,7 +29,7 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
           page_size: int = 0, prefill_chunk: int = 0,
           backend: str = "", admission_policy: str = "fifo",
           faults: str = "", enforce_deadlines: bool = False,
-          deadline_s: float = 0.0):
+          deadline_s: float = 0.0, trace=None):
     """Serve ``batch`` random-prompt requests; returns the old static-loop
     schema (tokens (B, gen[, n_q]), t_prefill, t_decode, tok_per_s) plus
     the engine's full telemetry under ``report``.
@@ -45,7 +45,13 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
     ``GEMMINI_FAULTS``-grammar spec string (empty = env/off);
     ``enforce_deadlines`` sheds expired requests instead of serving
     them; ``deadline_s`` stamps every submitted request with a relative
-    per-request SLO (0 = best-effort)."""
+    per-request SLO (0 = best-effort).
+
+    ``trace`` follows ``ServingEngine(trace=)``: None consults
+    ``$GEMMINI_TRACE``, True/int/Tracer turns span tracing on for this
+    run (docs/observability.md). The engine's tracer is also installed
+    process-globally for the duration so tuner-measurement and
+    fault-injection spans land on the same timeline."""
     rng = np.random.default_rng(seed)
     max_slots = max_slots or min(batch, 8)
     max_context = prompt_len + model_cfg.n_meta_tokens + gen_len + 64
@@ -55,7 +61,11 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
         policy=policy, warm_prompt_lens=[prompt_len],
         prefill_chunk=None if prefill_chunk < 0 else prefill_chunk,
         backend=backend or None, admission_policy=admission_policy,
-        faults=faults or None, enforce_deadlines=enforce_deadlines)
+        faults=faults or None, enforce_deadlines=enforce_deadlines,
+        trace=trace)
+    if engine.tracer is not None:
+        from repro.obs import trace as otrace
+        otrace.install(engine.tracer)
     if engine.warm_stats is not None:
         from repro import tune
         s = engine.warm_stats
@@ -69,12 +79,20 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
 
     tok_shape = (prompt_len, model_cfg.n_codebooks) \
         if model_cfg.n_codebooks > 1 else (prompt_len,)
-    deadline = (time.time() + deadline_s) if deadline_s > 0 else None
+    # Deadlines are absolute timestamps on the ENGINE clock (monotonic by
+    # default -- wall clocks step under NTP), so derive from engine.now().
+    deadline = (engine.now() + deadline_s) if deadline_s > 0 else None
     for _ in range(batch):
         prompt = rng.integers(0, model_cfg.vocab, tok_shape).astype(np.int32)
         engine.submit(prompt, gen_len, eos_id=eos_id, deadline=deadline)
     t0 = time.time()
-    report = engine.run()
+    try:
+        report = engine.run()
+    finally:
+        if engine.tracer is not None:
+            from repro.obs import trace as otrace
+            if otrace.active() is engine.tracer:
+                otrace.deactivate()
     wall = time.time() - t0
 
     # Old static-loop output schema: (B, gen) tokens, frozen-at-0 past EOS
@@ -138,28 +156,69 @@ def main(argv=None):
     ap.add_argument("--deadline", type=float, default=0.0, metavar="S",
                     help="per-request SLO: stamp every request with "
                          "submit-time + S seconds (0 = best-effort)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record request/engine/allocator/tuner spans and "
+                         "export a Chrome-trace JSON (see --trace-out); "
+                         "off by default, also togglable via $GEMMINI_TRACE")
+    ap.add_argument("--trace-out", default="TRACE_serve.json", metavar="PATH",
+                    help="Chrome-trace output path for --trace "
+                         "(default: TRACE_serve.json; load in "
+                         "chrome://tracing or ui.perfetto.dev, or summarize "
+                         "with python -m repro.obs PATH)")
+    ap.add_argument("--profile", action="store_true",
+                    help="time every ExecutionContext op (blocking sync per "
+                         "dispatch) and print achieved-vs-roofline "
+                         "utilization per kernel bucket")
     args = ap.parse_args(argv)
     # Always re-set: set_flag validates, so a typo'd $GEMMINI_TUNE fails at
     # startup instead of (maybe never) at the first plan resolution.
     flags.set_flag("tune_mode", args.tune if args.tune is not None
                    else flags.get("tune_mode"))
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
-    out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                gen_len=args.gen, temperature=args.temperature,
-                policy=args.policy, max_slots=args.slots,
-                page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-                backend=args.backend, admission_policy=args.admission,
-                faults=args.faults,
-                enforce_deadlines=args.enforce_deadlines,
-                deadline_s=args.deadline)
+    profiler = None
+    import contextlib
+    run_ctx = contextlib.nullcontext()
+    if args.profile:
+        from repro.obs import profile as oprofile
+        profiler = oprofile.Profiler()
+        oprofile.install(profiler)
+        # Per-op timing happens at the ExecutionContext dispatch boundary,
+        # which the engine's jitted step functions would trace through
+        # (one opaque XLA call, no per-op boundaries). disable_jit makes
+        # every dispatch eager -- slower, but that's what opt-in profiling
+        # is for, and the op stream is identical.
+        import jax
+        run_ctx = jax.disable_jit()
+        print("[serve] profiling: per-op sync timing (jit disabled)")
+    try:
+        with run_ctx:
+            out = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                        gen_len=args.gen, temperature=args.temperature,
+                        policy=args.policy, max_slots=args.slots,
+                        page_size=args.page_size,
+                        prefill_chunk=args.prefill_chunk,
+                        backend=args.backend,
+                        admission_policy=args.admission,
+                        faults=args.faults,
+                        enforce_deadlines=args.enforce_deadlines,
+                        deadline_s=args.deadline,
+                        trace=True if args.trace else None)
+    finally:
+        if profiler is not None:
+            from repro.obs import profile as oprofile
+            oprofile.deactivate()
     s = out["report"]["summary"]
+
+    def ms(v):
+        # Percentiles are None (JSON null) for empty populations.
+        return "n/a" if v is None else f"{v * 1e3:.0f}ms"
+
     print(f"[serve] {args.policy}: {int(s['requests'])} reqs, "
           f"{int(s['new_tokens'])} tokens in {s['wall_s']*1e3:.0f}ms "
           f"({out['tok_per_s']:.1f} tok/s), "
-          f"p50 latency {s['p50_latency_s']*1e3:.0f}ms, "
-          f"p99 {s['p99_latency_s']*1e3:.0f}ms, "
-          f"ITL p50 {s['p50_itl_s']*1e3:.0f}ms / p95 "
-          f"{s['p95_itl_s']*1e3:.0f}ms, "
+          f"p50 latency {ms(s['p50_latency_s'])}, "
+          f"p99 {ms(s['p99_latency_s'])}, "
+          f"ITL p50 {ms(s['p50_itl_s'])} / p95 {ms(s['p95_itl_s'])}, "
           f"{int(s['prefill_chunks'])} prefill chunks, "
           f"preemptions {int(s['preemptions'])}, "
           f"out shape {out['tokens'].shape}")
@@ -171,6 +230,14 @@ def main(argv=None):
               f"{int(s['shed'])} shed, "
               f"{int(s['straggler_steps'])} straggler steps, "
               f"quarantined {out['report']['quarantined'] or 'none'}")
+    tracer = out["engine"].tracer
+    if tracer is not None and args.trace:
+        tracer.export_chrome(args.trace_out)
+        print(f"[serve] trace: {len(tracer.events)} events "
+              f"({tracer.dropped} dropped) -> {args.trace_out} "
+              f"(summarize: python -m repro.obs {args.trace_out})")
+    if profiler is not None:
+        print(profiler.report())
     return out
 
 

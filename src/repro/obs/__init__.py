@@ -1,0 +1,26 @@
+"""Observability substrate: span tracing, metrics, kernel perf counters.
+
+Three cooperating pieces (docs/observability.md):
+
+- :mod:`repro.obs.trace` — ring-buffered span tracer (request lifecycle,
+  engine step phases, allocator/tuner/fault events) with Chrome-trace /
+  JSONL export.  Off by default; ``GEMMINI_TRACE`` /
+  ``ServingEngine(trace=)`` / ``serve --trace`` enable it.
+- :mod:`repro.obs.metrics` — labelled counters/gauges/histograms; the
+  one schema behind ``engine.summarize()`` and BENCH_serving rows.
+- :mod:`repro.obs.profile` + :mod:`repro.obs.kernel_costs` — opt-in
+  per-op timing at the `ExecutionContext` boundary joined with
+  `KernelContract` FLOPs/bytes into achieved-vs-roofline utilization
+  (``GEMMINI_PROFILE`` / ``serve --profile``).
+
+``python -m repro.obs <trace.json>`` summarizes an exported trace.
+"""
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.profile import Profiler
+from repro.obs.trace import Tracer, req_tid, validate_chrome
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Profiler", "Tracer", "req_tid", "validate_chrome",
+]

@@ -1,0 +1,198 @@
+"""KernelContract-derived FLOP/byte costs for profiled dispatches.
+
+The profiler (:mod:`repro.obs.profile`) times ops at the
+`ExecutionContext` dispatch boundary; this module supplies the other
+half of a performance counter — how much *work* that call represents —
+by building the op's real :class:`~repro.kernels.contracts.KernelContract`
+(the same builders `repro.analysis.lint` checks) for the concrete call
+shapes and deriving:
+
+- **bytes**: per operand, full-array traffic for affine operands and
+  block-bytes x grid-steps for ``data_dependent`` (block-table-gathered)
+  operands — the traffic the launch actually DMAs.  Contracts are built
+  with a degenerate one-block-per-axis schedule, so affine operands are
+  touched exactly once and the number is a roofline *lower bound* on
+  traffic (real tuned schedules revisit).
+- **flops**: an analytic formula per kernel family (registered beside
+  the shape mapping below), matching the dots the contract declares.
+
+Joined with `analysis/roofline`'s per-chip peaks this yields
+achieved-vs-roofline utilization per kernel instantiation — the software
+analog of Gemmini's hardware performance counters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import types
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.kernels.contracts import CONTRACT_BUILDERS, KernelContract, dt
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """Static work estimate for one dispatched op instantiation."""
+
+    contract: str                 # kernel-family / contract name
+    flops: float
+    bytes: float
+    arith: str                    # "float" | "int" — picks the peak
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def contract_bytes(c: KernelContract) -> float:
+    """Total HBM traffic implied by one launch of contract ``c``."""
+    grid_steps = 1
+    for _, size in c.grid:
+        grid_steps *= size
+    total = 0.0
+    for spec in c.inputs + c.outputs:
+        itemsize = spec.dtype[1]
+        if spec.data_dependent is None:
+            total += math.prod(spec.shape) * itemsize
+        else:
+            # Gathered through prefetched scalars: one block per grid
+            # step is DMA'd regardless of the full pool shape.
+            total += math.prod(spec.block) * itemsize * grid_steps
+    return total
+
+
+def _one_block_plan(m: int, n: int, k: int):
+    """Degenerate single-block GEMM schedule: each operand streamed once."""
+    return types.SimpleNamespace(m=m, n=n, k=k, tile_m=m, tile_n=n, tile_k=k,
+                                 grid=(1, 1, 1))
+
+
+def _gemm_contract_name(cfg, kw) -> str:
+    df = kw.get("dataflow") or getattr(cfg, "dataflow", None)
+    return "gemm_ws" if "WS" in str(getattr(df, "value", df)) else "gemm_os"
+
+
+# -- per-op (args, kw, cfg) -> (contract, flops) mappings --------------------
+
+def _cost_gemm(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    a, b = args[0], args[1]
+    d = args[2] if len(args) > 2 else kw.get("d")
+    m, k = a.shape
+    n = b.shape[1]
+    name = _gemm_contract_name(cfg, kw)
+    c = CONTRACT_BUILDERS[name](cfg, _one_block_plan(m, n, k),
+                                has_bias=d is not None)
+    flops = 2.0 * m * n * k + (m * n if d is not None else 0.0)
+    return c, flops, dt(cfg.input_dtype)[0]
+
+
+def _cost_matmul(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    a, b = args[0], args[1]
+    m = math.prod(a.shape[:-1])
+    k = a.shape[-1]
+    n = b.shape[-1]
+    name = _gemm_contract_name(cfg, kw)
+    c = CONTRACT_BUILDERS[name](cfg, _one_block_plan(m, n, k), has_bias=False)
+    return c, 2.0 * m * n * k, dt(cfg.input_dtype)[0]
+
+
+def _cost_conv2d(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    x, w = args[0], args[1]
+    b = args[2] if len(args) > 2 else kw.get("b")
+    n, h, wd, ci = x.shape
+    kh, kw_, _, co = w.shape
+    stride = kw.get("stride", 1)
+    padding = kw.get("padding", 0)
+    c = CONTRACT_BUILDERS["conv2d_implicit"](
+        cfg, n=n, h=h, w=wd, ci=ci, co=co, kh=kh, kw=kw_, co_tile=co,
+        stride=stride, padding=padding, has_bias=b is not None)
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (wd + 2 * padding - kw_) // stride + 1
+    flops = 2.0 * n * oh * ow * ci * co * kh * kw_
+    return c, flops, dt(cfg.input_dtype)[0]
+
+
+def _cost_flash_attention(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    q, k = args[0], args[1]
+    b, tq, h, d = q.shape
+    tk, kvh = k.shape[1], k.shape[2]
+    c = CONTRACT_BUILDERS["flash_attention"](
+        cfg, b=b, h=h, kvh=kvh, tq=tq, tk=tk, d=d, block_q=max(tq, 8),
+        block_k=max(tk, 8), dtype=str(q.dtype))
+    # QK^T and PV: 2 matmuls of (tq, tk) x d each, per batch x head.
+    return c, 4.0 * b * h * tq * tk * d, "float"
+
+
+def _cost_paged_attention(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    q, k_pool, _, block_tables = args[0], args[1], args[2], args[3]
+    b, _, h, d = q.shape
+    kvh, n_pages, page, _ = k_pool.shape
+    mp = block_tables.shape[1]
+    c = CONTRACT_BUILDERS["paged_decode_attention"](
+        cfg, b=b, h=h, kvh=kvh, d=d, page=page, mp=mp, n_pages=n_pages,
+        dtype=str(q.dtype))
+    # Table-capacity bound: the grid walks every table slot (dead pages
+    # are clamp-elided on device but still deterministic work here).
+    return c, 4.0 * b * h * (mp * page) * d, "float"
+
+
+def _cost_paged_prefill(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    q, k_pool, _, block_table = args[0], args[1], args[2], args[3]
+    _, tq, h, d = q.shape
+    kvh, n_pages, page, _ = k_pool.shape
+    mp = block_table.shape[0]
+    kv_pages = kw.get("kv_pages")
+    if kv_pages is not None:
+        mp = min(mp, int(kv_pages))
+    c = CONTRACT_BUILDERS["paged_prefill_attention"](
+        cfg, h=h, kvh=kvh, tq=tq, d=d, page=page, mp=mp, n_pages=n_pages,
+        block_q=max(tq, 8), dtype=str(q.dtype))
+    return c, 4.0 * h * tq * (mp * page) * d, "float"
+
+
+def _cost_ssd(args, kw, cfg) -> Tuple[KernelContract, float, str]:
+    x, _, _, b, _ = args[0], args[1], args[2], args[3], args[4]
+    bsz, t, h, p = x.shape
+    ngroups, n = b.shape[2], b.shape[3]
+    q = min(kw.get("chunk", 256), t)
+    nc = -(-t // q)
+    c = CONTRACT_BUILDERS["ssd"](
+        cfg, bsz=bsz, h=h, nc=nc, q=q, p=p, n=n, ngroups=ngroups,
+        dtype=str(x.dtype),
+        return_final_state=bool(kw.get("return_final_state")))
+    # Per (batch, head, chunk): C@B^T (2q^2 n) + L@X (2q^2 p) + the two
+    # state GEMMs B^T@X and C@state (2qnp each).
+    per_chunk = 2.0 * q * q * n + 2.0 * q * q * p + 4.0 * q * n * p
+    return c, bsz * h * nc * per_chunk, "float"
+
+
+_COST_FNS: Dict[str, Callable] = {
+    "gemm": _cost_gemm,
+    "matmul": _cost_matmul,
+    "conv2d": _cost_conv2d,
+    "flash_attention": _cost_flash_attention,
+    "paged_attention": _cost_paged_attention,
+    "paged_prefill_attention": _cost_paged_prefill,
+    "ssd": _cost_ssd,
+}
+
+
+def op_cost(op: str, args: Tuple, kw: Dict[str, Any], cfg) -> Optional[OpCost]:
+    """Build the op's contract for these call shapes and derive its cost.
+
+    Returns None for ops with no registered cost mapping or when the
+    shapes cannot be interpreted (the profiler then reports timing only).
+    """
+    fn = _COST_FNS.get(op)
+    if fn is None:
+        return None
+    try:
+        c, flops, arith = fn(args, kw, cfg)
+    except Exception:
+        return None
+    return OpCost(contract=c.name, flops=flops, bytes=contract_bytes(c),
+                  arith=arith,
+                  detail={"grid": dict(c.grid),
+                          "operands": len(c.inputs) + len(c.outputs)})
+
+
+def costed_ops() -> Tuple[str, ...]:
+    return tuple(sorted(_COST_FNS))

@@ -184,6 +184,10 @@ class FaultInjector:
         self._hits = [0] * len(plan.specs)
         self.injected: collections.Counter = collections.Counter()
         self.sleep = time.sleep          # injectable for tests
+        # Optional repro.obs.trace.Tracer: every firing lands as a
+        # cat="fault" instant. The serving engine wires its own tracer in;
+        # otherwise the process-global one (obs.trace.install) is used.
+        self.tracer = None
 
     # -- core draw ---------------------------------------------------------
     def fires(self, site: str,
@@ -209,7 +213,18 @@ class FaultInjector:
             self._hits[i] += 1
             self.injected[f"{spec.kind}@{site}"] += 1
             hit = spec
+        if hit is not None:
+            self._trace_fire(hit, site)
         return hit
+
+    def _trace_fire(self, spec: FaultSpec, site: str) -> None:
+        """Emit the firing to this injector's tracer (or the process-global
+        one): cat="fault" instant on the fault track."""
+        from repro.obs import trace as otrace
+        tracer = self.tracer or otrace.active()
+        if tracer is not None:
+            tracer.instant(f"fault:{spec.kind}", cat="fault",
+                           tid=otrace.TID_FAULT, site=site)
 
     # -- injection points --------------------------------------------------
     def check_transient(self, site: str) -> None:

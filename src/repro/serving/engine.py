@@ -44,6 +44,8 @@ from repro.core.config import GemminiConfig
 from repro.core.context import ExecutionContext
 from repro.core.generator import default_engine_backend
 from repro.models import transformer as tf
+from repro.obs import trace as otrace
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime import faults as rfaults
 from repro.runtime.ft import StepWatchdog
 from repro.serving.paged_cache import PagedKVAllocator, arena_pages
@@ -145,6 +147,17 @@ class ServingEngine:
     * ``watchdog`` -- a :class:`repro.runtime.StepWatchdog` (default: a
       fresh one) observing every engine iteration: straggler flags +
       step-latency percentiles in the run summary, optional heartbeat.
+    * ``trace`` -- span tracing (docs/observability.md): ``None``
+      consults ``$GEMMINI_TRACE`` (usually: off), ``True``/an int
+      capacity/a :class:`repro.obs.trace.Tracer` enable the ring-buffered
+      tracer for THIS engine (request lifecycle, step phases, allocator
+      events). Off costs one None check per emission site; the disabled
+      path is bit-exact against PR-7 (a regression test holds it there).
+    * ``clock`` -- the engine's one monotonic clock (default
+      ``time.monotonic``): every TTFT/ITL/latency/step duration and
+      every trace timestamp derives from it, and ``submit(deadline=)``
+      timestamps live in its domain (``engine.now() + rel_s``).
+      Injectable for deterministic tests.
 
     Dispatch is an :class:`ExecutionContext` (``self.engine``): cfg +
     backend + tune policy in one frozen value handed to the jitted model
@@ -171,7 +184,9 @@ class ServingEngine:
                  max_step_retries: int = 2,
                  retry_backoff_s: float = 0.0,
                  enforce_deadlines: bool = False,
-                 watchdog: Optional[StepWatchdog] = None):
+                 watchdog: Optional[StepWatchdog] = None,
+                 trace=None,
+                 clock=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         self.model_cfg = model_cfg
@@ -179,6 +194,16 @@ class ServingEngine:
         self.temperature = temperature
         self.max_slots = max_slots
         self.max_context = max_context
+        # -- observability (docs/observability.md) -------------------------
+        # One monotonic clock for every duration in the engine (wall
+        # clocks step under NTP); the tracer and scheduler share it so
+        # span timestamps and request timings live in one domain.
+        self.clock = clock or time.monotonic
+        self.tracer = otrace.as_tracer(trace, clock=self.clock)
+        self.metrics = MetricsRegistry()
+        # Bail-out cap for run(): overridable so tests can force the hang
+        # diagnostics without 100k iterations.
+        self.max_run_iters = 100_000
         # -- robustness envelope (docs/serving.md#robustness) --------------
         # faults: None consults $GEMMINI_FAULTS (usually: off); a spec
         # string / FaultPlan / FaultInjector turns deterministic fault
@@ -187,11 +212,14 @@ class ServingEngine:
         # logits, and the fault-free fast path must stay byte-identical
         # to PR 5 (donating jits, no per-step isfinite sync).
         self.faults = rfaults.as_injector(faults)
+        if self.faults is not None and self.tracer is not None:
+            # Fault firings land on this engine's trace (cat="fault"),
+            # not just on a globally installed tracer.
+            self.faults.tracer = self.tracer
         self.nan_guard = (self.faults is not None) if nan_guard is None \
             else nan_guard
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
-        self.counters: Dict[str, int] = {"retries": 0, "fallbacks": 0}
         # per-step-name set of dispatched compile-bucket keys, consumed by
         # the trace-time auditor (repro.analysis.lint.jit_audit): every
         # distinct key is one XLA compilation, and the static census from
@@ -229,7 +257,8 @@ class ServingEngine:
                           min(max_slots * self.max_pages_per_seq,
                               arena_pages(model_cfg, cfg, self.page_size)))
         self.alloc = PagedKVAllocator(n_pages, self.page_size,
-                                      self.max_pages_per_seq)
+                                      self.max_pages_per_seq,
+                                      tracer=self.tracer)
         # Prompt bucketing (compile-cache friendliness): legal only for
         # pure-attention families, where padded positions are provably dead
         # under the causal mask + length mask. An SSM/hybrid model's
@@ -253,7 +282,8 @@ class ServingEngine:
             pad_to=self.prefill_pad,
             prefill_chunk=prefill_chunk,
             admission_policy=admission_policy,
-            enforce_deadlines=enforce_deadlines)
+            enforce_deadlines=enforce_deadlines,
+            clock=self.clock, tracer=self.tracer, metrics=self.metrics)
         self.prefill_chunk = self.sched.prefill_chunk
         if policy == "static":
             # Static batching as a degenerate policy: admit only into an
@@ -296,6 +326,43 @@ class ServingEngine:
         self.warm_stats: Optional[Dict[str, int]] = None
         if warm_prompt_lens and flags.get("tune_mode") != "off":
             self.warm_stats = self.warm(warm_prompt_lens)
+
+    # -- observability -----------------------------------------------------
+    def now(self) -> float:
+        """The engine clock (monotonic by default). ``submit(deadline=)``
+        timestamps must come from this domain: ``engine.now() + rel_s``,
+        never ``time.time() + rel_s``."""
+        return self.clock()
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        """Read-only robustness-counter view over the metrics registry
+        (the pre-obs ``engine.counters`` dict shape, kept for callers;
+        new code should read ``engine.metrics`` directly)."""
+        return {"retries": int(self.metrics.value("retries")),
+                "fallbacks": int(self.metrics.value("fallbacks"))}
+
+    def _step_gauges(self) -> None:
+        """Per-iteration occupancy gauges (registry + tracer counter
+        track): arena pages, live/prefilling slots, queue depth."""
+        t = self.clock()
+        used = self.alloc.used_pages
+        live = sum(1 for r in self.sched.running.values()
+                   if not r.prefilling)
+        depth = len(self.sched.queue)
+        self.metrics.gauge("arena_used_pages").set(used, t)
+        self.metrics.gauge("arena_utilization").set(
+            self.alloc.utilization, t)
+        self.metrics.gauge("live_slots").set(live, t)
+        self.metrics.gauge("running_slots").set(
+            len(self.sched.running), t)
+        self.metrics.gauge("queue_depth").set(depth, t)
+        if self.tracer is not None:
+            self.tracer.counter("arena_pages", used=used,
+                                free=self.alloc.free_pages)
+            self.tracer.counter("slots", live=live,
+                                running=len(self.sched.running))
+            self.tracer.counter("queue_depth", depth=depth)
 
     # -- plan warm-up ------------------------------------------------------
     def warm(self, prompt_lens: Sequence[int]) -> Dict[str, int]:
@@ -351,7 +418,9 @@ class ServingEngine:
                deadline: Optional[float] = None) -> Request:
         """``priority``/``deadline`` feed the scheduler's admission order
         (no-ops under the default FIFO policy); ``deadline`` is an
-        absolute ``time.time()`` timestamp."""
+        absolute timestamp in the ENGINE clock's domain
+        (``engine.now() + rel_s`` -- monotonic by default, not
+        ``time.time()``)."""
         prompt = np.asarray(prompt, np.int32)
         need = self._bucket(len(prompt)) + self.model_cfg.n_meta_tokens
         cap = min(self.max_pages_per_seq,
@@ -386,10 +455,21 @@ class ServingEngine:
             req.itl_s.append(now - req.t_last_token)
         req.t_last_token = now
         self._next_token[req.slot] = tok
+        if self.tracer is not None:
+            self.tracer.instant("token", cat="request",
+                                tid=otrace.req_tid(req.rid),
+                                n=req.n_generated)
         done = req.n_generated >= req.max_new_tokens
         if self.model_cfg.n_codebooks == 1 and int(tok) == req.eos_id:
             done = True
         if done:
+            if self.tracer is not None and req.t_first_token is not None:
+                # The request's decode phase as one span: first token
+                # (end of prefill) to last.
+                self.tracer.complete("decode", req.t_first_token, now,
+                                     cat="request",
+                                     tid=otrace.req_tid(req.rid),
+                                     tokens=req.n_generated)
             self.sched.finish(req)
 
     # -- execution ---------------------------------------------------------
@@ -494,7 +574,10 @@ class ServingEngine:
                 logits, state = self._steps[which](*args)
                 break
             except rfaults.TransientOpError:
-                self.counters["retries"] += 1
+                self.metrics.counter("retries", site=site).inc()
+                if self.tracer is not None:
+                    self.tracer.instant("retry", cat="engine", site=site,
+                                        which=which, attempt=attempt + 1)
                 if attempt == self.max_step_retries:
                     raise
                 if self.retry_backoff_s:
@@ -503,7 +586,10 @@ class ServingEngine:
             logits = inj.poison(site, logits)
         if self.nan_guard and logits is not None and \
                 not bool(np.isfinite(np.asarray(logits)).all()):
-            self.counters["fallbacks"] += 1
+            self.metrics.counter("fallbacks", site=site).inc()
+            if self.tracer is not None:
+                self.tracer.instant("fallback", cat="engine", site=site,
+                                    which=which)
             self._quarantine(site)
             logits, state = self._fallback_steps()[which](*args)
             if not bool(np.isfinite(np.asarray(logits)).all()):
@@ -513,6 +599,7 @@ class ServingEngine:
         return logits, state
 
     def _do_prefill(self, req: Request, slot: int) -> None:
+        t0 = self.clock()
         prompt = req.serve_prompt()
         pad = self._bucket(len(prompt)) - len(prompt)
         if pad:
@@ -530,7 +617,11 @@ class ServingEngine:
             lengths=self.state.lengths.at[slot].set(true_len))
         self._sync_tables([slot])
         tok = self._sample(logits[0, true_len - 1])
-        self._record_token(req, tok, time.time())
+        if self.tracer is not None:
+            self.tracer.complete("prefill", t0, cat="request",
+                                 tid=otrace.req_tid(req.rid), slot=slot,
+                                 tokens=true_len)
+        self._record_token(req, tok, self.clock())
 
     def _do_prefill_chunk(self, w) -> None:
         """Execute one scheduler-issued prefill chunk.
@@ -556,6 +647,7 @@ class ServingEngine:
         if w.first and w.last:
             self._do_prefill(req, slot)
             return
+        t0 = self.clock()
         meta = self.model_cfg.n_meta_tokens
         prompt = req.serve_prompt()
         toks = prompt[max(0, w.start - meta): w.true_end - meta]
@@ -583,6 +675,11 @@ class ServingEngine:
                  w.kv_pages or None))
         req.cache_len = w.true_end
         req.n_chunks += 1
+        if self.tracer is not None:
+            self.tracer.complete(
+                f"prefill_chunk[{req.n_chunks - 1}]", t0, cat="request",
+                tid=otrace.req_tid(req.rid), slot=slot, start=w.start,
+                end=w.true_end, last=w.last)
         if w.last:
             # The device table sync can wait until the slot goes live: the
             # chunk calls carry the table row as an argument, and a
@@ -593,7 +690,7 @@ class ServingEngine:
             self.state = self.state._replace(
                 lengths=self.state.lengths.at[slot].set(true_len))
             tok = self._sample(logits[0, (true_len - 1) - w.start])
-            self._record_token(req, tok, time.time())
+            self._record_token(req, tok, self.clock())
 
     def _do_decode(self) -> None:
         active_np = np.zeros((self.max_slots,), bool)
@@ -610,7 +707,7 @@ class ServingEngine:
             (self.params, jnp.asarray(toks), self.state,
              jnp.asarray(active_np)))
         last = self._sample(logits[:, -1])
-        now = time.time()
+        now = self.clock()
         for slot, req in list(self.sched.running.items()):
             if req.prefilling:
                 continue
@@ -627,6 +724,7 @@ class ServingEngine:
         and one iteration's worth of arena pressure (pages withheld for
         the whole step, so the scheduler's can_admit-then-alloc protocol
         stays consistent, then released)."""
+        t0 = self.clock()
         inj = self.faults
         held = 0
         if inj is not None:
@@ -652,6 +750,10 @@ class ServingEngine:
         finally:
             if held:
                 self.alloc.release_held()
+            self._step_gauges()
+            if self.tracer is not None:
+                self.tracer.complete("step", t0, cat="engine",
+                                     tid=otrace.TID_ENGINE)
 
     def run(self) -> Dict:
         """Drain the queue; returns {summary, requests} telemetry.
@@ -659,16 +761,17 @@ class ServingEngine:
         Every submitted request reaches a terminal status before this
         returns: ``finished`` (possibly ``truncated``) or ``shed`` --
         the no-silent-loss invariant the chaos suite asserts."""
-        t0 = time.time()
+        t0 = self.clock()
         iters = 0
         while self.sched.has_work:
-            ts = time.time()
+            ts = self.clock()
             self.step()
-            self.watchdog.observe(time.time() - ts)
+            self.watchdog.observe(self.clock() - ts)
             iters += 1
-            if iters > 100_000:
-                raise RuntimeError("serving loop did not converge")
-        wall = time.time() - t0
+            if iters > self.max_run_iters:
+                raise RuntimeError(
+                    "serving loop did not converge\n" + self._hang_report())
+        wall = self.clock() - t0
         summary = summarize(self.requests, wall)
         # Deterministic structural metric alongside the wall-clock ones:
         # continuous batching's win IS fewer engine iterations for the same
@@ -676,10 +779,13 @@ class ServingEngine:
         summary["iterations"] = float(iters)
         # Robustness counters (all 0 on a fault-free engine) + step-latency
         # percentiles from the watchdog: the BENCH_serving robustness row.
-        summary["retries"] = float(self.counters["retries"])
-        summary["fallbacks"] = float(self.counters["fallbacks"])
+        # Counters read from the metrics registry (labels aggregated);
+        # occupancy gauges contribute their run peaks (*_peak keys).
+        summary["retries"] = self.metrics.value("retries")
+        summary["fallbacks"] = self.metrics.value("fallbacks")
         summary["injected_faults"] = float(
             self.faults.total_injected if self.faults else 0)
+        summary.update(self.metrics.gauge_peaks())
         summary.update(self.watchdog.stats())
         report = {"summary": summary,
                   "requests": [self._req_report(r) for r in self.requests],
@@ -687,6 +793,44 @@ class ServingEngine:
         if self.faults is not None:
             report["faults"] = self.faults.report()
         return report
+
+    def _hang_report(self, last_events: int = 32) -> str:
+        """Diagnostic dump for a non-converging serving loop: scheduler
+        queues, per-slot request states, allocator occupancy, robustness
+        counters, and (when tracing is on) the last trace events -- so a
+        hung engine is debuggable from the exception alone."""
+        lines = ["-- engine hang diagnostics --"]
+        q = [(r.rid, r.state, r.n_preempted, len(r.serve_prompt()))
+             for r in self.sched.queue]
+        lines.append(f"queue ({len(q)}): "
+                     + ", ".join(f"rid={rid}[{st},pre={pre},len={ln}]"
+                                 for rid, st, pre, ln in q[:16])
+                     + (" ..." if len(q) > 16 else ""))
+        for slot in sorted(self.sched.running):
+            r = self.sched.running[slot]
+            lines.append(
+                f"slot {slot}: rid={r.rid} state={r.state} "
+                f"cache_len={r.cache_len} prefill={r.prefill_pos}/"
+                f"{r.prefill_target} gen={r.n_generated}/"
+                f"{r.max_new_tokens} pages={len(self.alloc.slot_pages(slot))}")
+        lines.append(
+            f"allocator: {self.alloc.used_pages}/{self.alloc.n_pages} pages "
+            f"used ({self.alloc.utilization:.0%}), "
+            f"{self.alloc.held_pages} held, page_size={self.alloc.page_size}, "
+            f"max_pages_per_seq={self.alloc.max_pages_per_seq}")
+        lines.append(f"counters: {self.metrics.counters_flat()}")
+        if self.tracer is not None:
+            tail = self.tracer.tail(last_events)
+            lines.append(f"last {len(tail)} trace events "
+                         f"({self.tracer.dropped} dropped):")
+            for ev in tail:
+                lines.append(f"  {ev.get('ts', 0.0):>12.1f}us "
+                             f"{ev.get('cat', '?')}/{ev.get('name', '?')} "
+                             f"{ev.get('args', '')}")
+        else:
+            lines.append("tracing disabled (GEMMINI_TRACE / trace= would "
+                         "append the last trace events here)")
+        return "\n".join(lines)
 
     def _req_report(self, r: Request) -> Dict:
         itl = np.asarray(r.itl_s) if r.itl_s else None

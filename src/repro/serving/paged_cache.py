@@ -19,12 +19,18 @@ Invariants the engine relies on:
 * ``free_slot`` makes the freed pages immediately reusable (eviction IS
   the preemption mechanism: the scheduler frees a victim's pages and
   re-queues it for recompute).
+
+With a :class:`repro.obs.trace.Tracer` attached (``tracer``; the engine
+wires its own in), every accounting transition — alloc / grow / extend /
+free / hold / release / defrag — lands as a ``cat="alloc"`` instant on
+the allocator track, stamped with the arena occupancy after the
+transition.  ``tracer=None`` (the default) costs one None check.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -40,6 +46,15 @@ class PagedKVAllocator:
     n_pages: int
     page_size: int
     max_pages_per_seq: int
+    tracer: Any = dataclasses.field(default=None, repr=False, compare=False)
+
+    def _trace(self, event: str, **args) -> None:
+        if self.tracer is None:
+            return
+        from repro.obs import trace as otrace
+        self.tracer.instant(event, cat="alloc", tid=otrace.TID_ALLOC,
+                            free=len(self._free), used=self.used_pages,
+                            held=len(self._held), **args)
 
     def __post_init__(self):
         if self.n_pages < 1:
@@ -86,6 +101,7 @@ class PagedKVAllocator:
             return None
         pages = [self._free.pop() for _ in range(need)]
         self._tables[slot] = pages
+        self._trace("alloc", slot=slot, pages=need)
         return list(pages)
 
     def grow_slot(self, slot: int, n_tokens: int) -> Optional[List[int]]:
@@ -105,6 +121,7 @@ class PagedKVAllocator:
             return None
         new = [self._free.pop() for _ in range(need)]
         pages.extend(new)
+        self._trace("extend", slot=slot, pages=need)
         return new
 
     def extend_slot(self, slot: int) -> Optional[int]:
@@ -118,12 +135,15 @@ class PagedKVAllocator:
             return None
         pid = self._free.pop()
         pages.append(pid)
+        self._trace("extend", slot=slot, pages=1)
         return pid
 
     def free_slot(self, slot: int) -> int:
         """Return the slot's pages to the arena; returns how many."""
         pages = self._tables.pop(slot, [])
         self._free.extend(reversed(pages))
+        if pages:
+            self._trace("evict", slot=slot, pages=len(pages))
         return len(pages)
 
     # -- pressure / reservation -------------------------------------------
@@ -146,6 +166,8 @@ class PagedKVAllocator:
         k = max(0, min(k, len(self._free)))
         for _ in range(k):
             self._held.append(self._free.pop())
+        if k:
+            self._trace("hold", pages=k)
         return k
 
     def release_held(self) -> int:
@@ -153,6 +175,8 @@ class PagedKVAllocator:
         n = len(self._held)
         self._free.extend(reversed(self._held))
         self._held = []
+        if n:
+            self._trace("release_held", pages=n)
         return n
 
     # -- defrag ------------------------------------------------------------
@@ -186,6 +210,7 @@ class PagedKVAllocator:
         for slot, pages in self._tables.items():
             self._tables[slot] = [int(perm[p]) for p in pages]
         self._free = list(range(self.n_pages - 1, len(live) - 1, -1))
+        self._trace("defrag", live=len(live))
         return perm
 
 

@@ -76,6 +76,7 @@ class Request:
     n_preempted: int = 0
     truncated: bool = False
     submitted_at: float = 0.0
+    queued_since: float = 0.0             # start of the CURRENT queue wait
     admitted_seq: int = -1                # admission order (eviction key)
     t_first_token: Optional[float] = None
     t_last_token: Optional[float] = None
@@ -154,7 +155,8 @@ class ContinuousScheduler:
                  prefill_chunk: Optional[int] = None,
                  admission_policy: str = "fifo",
                  enforce_deadlines: bool = False,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 tracer=None, metrics=None):
         if admission_policy not in self.ADMISSION_POLICIES:
             raise ValueError(f"unknown admission_policy "
                              f"{admission_policy!r}; have "
@@ -185,11 +187,42 @@ class ContinuousScheduler:
         # decode-step boundaries (shed_expired) instead of consuming
         # prefill/decode budget to produce tokens nobody can use.
         self.enforce_deadlines = enforce_deadlines
-        self.clock = clock or time.time
+        # Monotonic by default: wall clocks (time.time) can step backwards
+        # under NTP and corrupt every TTFT/ITL/latency duration. Deadlines
+        # are absolute timestamps in THIS clock's domain (engine.now()).
+        self.clock = clock or time.monotonic
+        # Observability hooks (both optional, engine-wired): a
+        # repro.obs.trace.Tracer receiving lifecycle events on each
+        # request's track, and a repro.obs.metrics.MetricsRegistry
+        # receiving transition counters.
+        self.tracer = tracer
+        self.metrics = metrics
         self.queue: List[Request] = []
         self.running: Dict[int, Request] = {}          # slot -> request
         self.rejected: List[Request] = []              # engine drains these
         self._admit_seq = 0
+
+    # -- observability -----------------------------------------------------
+    def _count(self, name: str) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(name).inc()
+
+    def _event(self, req: Request, name: str, **args) -> None:
+        if self.tracer is None:
+            return
+        from repro.obs import trace as otrace
+        self.tracer.instant(name, cat="request",
+                            tid=otrace.req_tid(req.rid), **args)
+
+    def _note_admitted(self, req: Request) -> None:
+        """Close the request's queued span and count the admission."""
+        self._count("admissions")
+        if self.tracer is None:
+            return
+        from repro.obs import trace as otrace
+        self.tracer.complete("queued", req.queued_since or req.submitted_at,
+                             cat="request", tid=otrace.req_tid(req.rid),
+                             slot=req.slot, attempt=req.n_preempted + 1)
 
     def _prefill_need(self, req: Request) -> int:
         plen = len(req.serve_prompt())
@@ -231,6 +264,8 @@ class ContinuousScheduler:
     def submit(self, req: Request) -> None:
         req.state = "queued"
         req.submitted_at = req.submitted_at or self.clock()
+        req.queued_since = req.submitted_at
+        self._event(req, "submitted", prompt_tokens=int(len(req.prompt)))
         self.queue.append(req)
 
     def _order_queue(self) -> None:
@@ -304,6 +339,7 @@ class ContinuousScheduler:
             req.admitted_seq = self._admit_seq
             self._admit_seq += 1
             self.running[slot] = req
+            self._note_admitted(req)
             budget -= need
             out.append((req, slot, pages))
         return out
@@ -390,6 +426,7 @@ class ContinuousScheduler:
             req.admitted_seq = self._admit_seq
             self._admit_seq += 1
             self.running[slot] = req
+            self._note_admitted(req)
             req.prefill_target = len(req.serve_prompt()) + self.extra_tokens
             req.prefill_pos = e
             budget -= e - s
@@ -490,6 +527,9 @@ class ContinuousScheduler:
         req.state, req.slot, req.cache_len = "queued", -1, 0
         req.prefill_pos = req.prefill_target = 0
         req.n_preempted += 1
+        req.queued_since = self.clock()
+        self._count("preemptions")
+        self._event(req, "preempt", n_preempted=req.n_preempted)
         self.queue.insert(0, req)          # preempted requests go first
 
     def finish(self, req: Request, *, truncated: bool = False) -> None:
@@ -498,6 +538,11 @@ class ContinuousScheduler:
         req.state = "finished"
         req.truncated = truncated
         req.t_finished = self.clock()
+        self._count("finished")
+        if truncated:
+            self._count("truncated")
+        self._event(req, "finished", truncated=truncated,
+                    new_tokens=req.n_generated)
 
     # -- SLO enforcement ---------------------------------------------------
     def _expired(self, req: Request, now: Optional[float] = None) -> bool:
@@ -516,6 +561,9 @@ class ContinuousScheduler:
         req.state, req.slot = "shed", -1
         req.shed_reason = reason
         req.t_finished = self.clock()
+        self._count("shed")
+        self._event(req, "shed", reason=reason,
+                    new_tokens=req.n_generated)
 
     def shed_expired(self) -> List[Request]:
         """Shed every queued or running request whose deadline has passed.
@@ -541,6 +589,17 @@ class ContinuousScheduler:
 # ---------------------------------------------------------------------------
 # telemetry
 # ---------------------------------------------------------------------------
+def _pct(vals: List[float], p: float) -> Optional[float]:
+    """Percentile over a possibly-empty population: None when empty.
+
+    A fabricated 0.0 here is worse than a gap — an all-shed or all-failed
+    run would read as an infinitely fast one in BENCH rows and trend
+    plots (the exact bug this replaces)."""
+    if not vals:
+        return None
+    return float(np.percentile(np.asarray(vals), p))
+
+
 def summarize(requests: List[Request], wall_s: float) -> Dict[str, float]:
     """Aggregate per-request telemetry into the BENCH_serving schema.
 
@@ -549,25 +608,29 @@ def summarize(requests: List[Request], wall_s: float) -> Dict[str, float]:
     request's tokens (what a co-tenant's prefill stalls -- the distribution
     chunked prefill exists to tighten). ITL percentiles pool every
     inter-token gap across requests, so one stalled request cannot hide in
-    a per-request mean."""
+    a per-request mean.
+
+    Latency keys are ``None`` (JSON null) when their population is empty
+    — no finished request, or no second token ever emitted — so consumers
+    can distinguish "nothing completed" from "completed instantly"."""
     done = [r for r in requests if r.state == "finished"]
-    lat = np.asarray([r.t_finished - r.submitted_at for r in done
-                      if r.t_finished is not None] or [0.0])
-    ttft = np.asarray([r.t_first_token - r.submitted_at for r in done
-                       if r.t_first_token is not None] or [0.0])
-    itl = np.asarray([g for r in requests for g in r.itl_s] or [0.0])
+    lat = [r.t_finished - r.submitted_at for r in done
+           if r.t_finished is not None]
+    ttft = [r.t_first_token - r.submitted_at for r in done
+            if r.t_first_token is not None]
+    itl = [g for r in requests for g in r.itl_s]
     new_tokens = sum(r.n_generated for r in done)
     return {
         "requests": float(len(done)),
         "new_tokens": float(new_tokens),
         "wall_s": wall_s,
         "tokens_per_s": new_tokens / max(wall_s, 1e-9),
-        "p50_latency_s": float(np.percentile(lat, 50)),
-        "p99_latency_s": float(np.percentile(lat, 99)),
-        "p50_ttft_s": float(np.percentile(ttft, 50)),
-        "p99_ttft_s": float(np.percentile(ttft, 99)),
-        "p50_itl_s": float(np.percentile(itl, 50)),
-        "p95_itl_s": float(np.percentile(itl, 95)),
+        "p50_latency_s": _pct(lat, 50),
+        "p99_latency_s": _pct(lat, 99),
+        "p50_ttft_s": _pct(ttft, 50),
+        "p99_ttft_s": _pct(ttft, 99),
+        "p50_itl_s": _pct(itl, 50),
+        "p95_itl_s": _pct(itl, 95),
         "prefill_chunks": float(sum(r.n_chunks for r in requests)),
         "preemptions": float(sum(r.n_preempted for r in requests)),
         "truncated": float(sum(1 for r in requests if r.truncated)),

@@ -33,8 +33,17 @@ from repro.core.tiling import TilePlan
 
 
 def time_callable(fn: Callable, *args, iters: int = 5,
-                  warmup: int = 1) -> Dict[str, float]:
-    """Time ``fn(*args)``: per-iteration sync, returns mean/min microseconds."""
+                  warmup: int = 1, label: str = "") -> Dict[str, float]:
+    """Time ``fn(*args)``: per-iteration sync, returns mean/min microseconds.
+
+    With a process-global tracer installed (``repro.obs.trace.install``),
+    each measurement lands as a ``measure:<label>`` span on the tuner
+    track -- warmup/compile included, so trace timelines show what the
+    tuner actually spent, not just the steady-state iterations.
+    """
+    from repro.obs import trace as otrace
+    tracer = otrace.active()
+    t_span = tracer.clock() if tracer is not None else 0.0
     for _ in range(max(1, warmup)):
         jax.block_until_ready(fn(*args))     # compile + warm caches
     times = []
@@ -42,8 +51,14 @@ def time_callable(fn: Callable, *args, iters: int = 5,
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append((time.perf_counter() - t0) * 1e6)
-    return {"mean_us": sum(times) / len(times), "min_us": min(times),
-            "iters": float(iters)}
+    out = {"mean_us": sum(times) / len(times), "min_us": min(times),
+           "iters": float(iters)}
+    if tracer is not None:
+        tracer.complete(f"measure:{label or 'anon'}", t_span,
+                        tracer.clock(), cat="tune",
+                        tid=otrace.TID_TUNER, min_us=out["min_us"],
+                        mean_us=out["mean_us"], iters=iters)
+    return out
 
 
 def measurement_backend() -> str:
@@ -74,7 +89,9 @@ def measure_plan(cfg: GemminiConfig, plan: TilePlan, *, has_bias: bool = False,
             return ref_ops.gemm_ref(a, b, d, acc_dtype=cfg.acc_jnp,
                                     out_dtype=cfg.output_jnp)
 
-    return time_callable(jax.jit(run), a, b, iters=iters, warmup=warmup)
+    return time_callable(jax.jit(run), a, b, iters=iters, warmup=warmup,
+                         label=f"gemm[{plan.m}x{plan.n}x{plan.k}"
+                               f"/{plan.tile_m}x{plan.tile_n}x{plan.tile_k}]")
 
 
 def measure_attn_schedule(cfg: GemminiConfig, sched, b: int, tq: int,
@@ -115,7 +132,8 @@ def measure_attn_schedule(cfg: GemminiConfig, sched, b: int, tq: int,
             return blockwise_attention_xla(q, k, v, causal=causal,
                                            window=window, block_k=bk)
 
-    return time_callable(jax.jit(run), q, k, v, iters=iters, warmup=warmup)
+    return time_callable(jax.jit(run), q, k, v, iters=iters, warmup=warmup,
+                         label=f"attn[bq={bq},bk={bk}]")
 
 
 def measure_paged_schedule(cfg: GemminiConfig, sched, b: int, h: int,
@@ -154,7 +172,7 @@ def measure_paged_schedule(cfg: GemminiConfig, sched, b: int, h: int,
                                    window=window)
 
     return time_callable(jax.jit(run), q, k_pool, v_pool, iters=iters,
-                         warmup=warmup)
+                         warmup=warmup, label=f"paged[page={page}]")
 
 
 def measure_conv_schedule(cfg: GemminiConfig, sched, n: int, h: int, w: int,
@@ -194,4 +212,5 @@ def measure_conv_schedule(cfg: GemminiConfig, sched, n: int, h: int, w: int,
                                       acc_dtype=cfg.acc_jnp,
                                       out_dtype=cfg.output_jnp)
 
-    return time_callable(jax.jit(run), x, wt, iters=iters, warmup=warmup)
+    return time_callable(jax.jit(run), x, wt, iters=iters, warmup=warmup,
+                         label=f"conv[co_tile={ct}]")

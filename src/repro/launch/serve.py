@@ -29,7 +29,9 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
           page_size: int = 0, prefill_chunk: int = 0,
           backend: str = "", admission_policy: str = "fifo",
           faults: str = "", enforce_deadlines: bool = False,
-          deadline_s: float = 0.0, trace=None):
+          deadline_s: float = 0.0, trace=None,
+          kv_offload: bool = False, prefix_cache: bool = False,
+          host_pool_pages: int = 0):
     """Serve ``batch`` random-prompt requests; returns the old static-loop
     schema (tokens (B, gen[, n_q]), t_prefill, t_decode, tok_per_s) plus
     the engine's full telemetry under ``report``.
@@ -47,6 +49,12 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
     them; ``deadline_s`` stamps every submitted request with a relative
     per-request SLO (0 = best-effort).
 
+    KV-lifecycle knobs (docs/serving.md#kv-lifecycle): ``kv_offload``
+    spills preemption victims to a host pool (``host_pool_pages`` deep,
+    0 = arena-sized) so restart is a restore instead of a recompute;
+    ``prefix_cache`` maps shared prompt prefixes copy-on-write. Both off
+    by default and bit-exact either way.
+
     ``trace`` follows ``ServingEngine(trace=)``: None consults
     ``$GEMMINI_TRACE``, True/int/Tracer turns span tracing on for this
     run (docs/observability.md). The engine's tracer is also installed
@@ -62,7 +70,8 @@ def serve(model_cfg, *, batch: int, prompt_len: int, gen_len: int,
         prefill_chunk=None if prefill_chunk < 0 else prefill_chunk,
         backend=backend or None, admission_policy=admission_policy,
         faults=faults or None, enforce_deadlines=enforce_deadlines,
-        trace=trace)
+        trace=trace, kv_offload=kv_offload, prefix_cache=prefix_cache,
+        host_pool_pages=host_pool_pages or None)
     if engine.tracer is not None:
         from repro.obs import trace as otrace
         otrace.install(engine.tracer)
@@ -156,6 +165,17 @@ def main(argv=None):
     ap.add_argument("--deadline", type=float, default=0.0, metavar="S",
                     help="per-request SLO: stamp every request with "
                          "submit-time + S seconds (0 = best-effort)")
+    ap.add_argument("--kv-offload", action="store_true",
+                    help="spill preemption victims' committed KV pages to "
+                         "a host pool so restart is a DMA restore instead "
+                         "of a full re-prefill (docs/serving.md#kv-lifecycle)")
+    ap.add_argument("--host-pool-pages", type=int, default=0,
+                    help="host offload pool capacity in pages "
+                         "(0 = arena-sized; only with --kv-offload)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hash full KV pages at prefill commit and "
+                         "map shared prompt prefixes copy-on-write "
+                         "(attention-only families)")
     ap.add_argument("--trace", action="store_true",
                     help="record request/engine/allocator/tuner spans and "
                          "export a Chrome-trace JSON (see --trace-out); "
@@ -202,7 +222,10 @@ def main(argv=None):
                         faults=args.faults,
                         enforce_deadlines=args.enforce_deadlines,
                         deadline_s=args.deadline,
-                        trace=True if args.trace else None)
+                        trace=True if args.trace else None,
+                        kv_offload=args.kv_offload,
+                        prefix_cache=args.prefix_cache,
+                        host_pool_pages=args.host_pool_pages)
     finally:
         if profiler is not None:
             from repro.obs import profile as oprofile
@@ -230,6 +253,14 @@ def main(argv=None):
               f"{int(s['shed'])} shed, "
               f"{int(s['straggler_steps'])} straggler steps, "
               f"quarantined {out['report']['quarantined'] or 'none'}")
+    if args.kv_offload or args.prefix_cache:
+        print(f"[serve] kv-lifecycle: "
+              f"{int(s['prefill_tokens'])} prefill tokens computed, "
+              f"{int(s['prefix_hit_tokens'])} prefix-hit (skipped), "
+              f"{int(s['offload_spills'])} spills / "
+              f"{int(s['offload_restores'])} restores, restarts "
+              f"{int(s['restarts_restored'])} restored / "
+              f"{int(s['restarts_recomputed'])} recomputed")
     tracer = out["engine"].tracer
     if tracer is not None and args.trace:
         tracer.export_chrome(args.trace_out)

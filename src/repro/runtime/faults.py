@@ -24,11 +24,15 @@ Fault kinds and their default sites::
     arena       page-allocator pressure (held pages)    arena
     straggler   a sleep before the engine step          step
     ckpt_io     OSError from save_checkpoint            checkpoint
+    offload_io  failed KV host-offload DMA (the spill   spill
+                or restore degrades to recompute)
 
 Engine sites are ``prefill`` (whole-prompt and first-chunk calls),
 ``chunk`` (continuation chunks), ``decode`` (the decode step), ``step``
-(once per engine iteration), ``arena`` (queried once per iteration), and
-``op:<name>`` for eager ExecutionContext dispatch (e.g. ``op:gemm``).
+(once per engine iteration), ``arena`` (queried once per iteration),
+``spill`` / ``restore`` (the KV host-offload copies, queried once per
+attempted spill/restore when ``kv_offload`` is on), and ``op:<name>``
+for eager ExecutionContext dispatch (e.g. ``op:gemm``).
 
 Why host-level injection: the engine's model steps are jitted, so anything
 injected *inside* traced code would be baked into the compiled function --
@@ -64,11 +68,12 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-KINDS = ("nan", "inf", "transient", "arena", "straggler", "ckpt_io")
+KINDS = ("nan", "inf", "transient", "arena", "straggler", "ckpt_io",
+         "offload_io")
 
 # Site a bare kind targets when the spec omits ``@site``.
 DEFAULT_SITES = {"arena": "arena", "straggler": "step",
-                 "ckpt_io": "checkpoint"}
+                 "ckpt_io": "checkpoint", "offload_io": "spill"}
 
 ENV_VAR = "GEMMINI_FAULTS"
 
@@ -269,6 +274,13 @@ class FaultInjector:
         """True when a checkpoint-write spec fires (the store raises
         OSError in its place)."""
         return self.fires(site, ("ckpt_io",)) is not None
+
+    def offload_fails(self, site: str) -> bool:
+        """True when a KV host-offload DMA spec fires at ``site`` (one of
+        ``spill`` / ``restore``): the engine drops the copy and the
+        scheduler degrades that victim to the classic recompute restart --
+        offload is an optimization, never a correctness dependency."""
+        return self.fires(site, ("offload_io",)) is not None
 
     # -- telemetry ---------------------------------------------------------
     @property

@@ -6,7 +6,8 @@ preemption under pressure -- the shared-resource contention the paper
 argues accelerator evaluation must include.
 
 * :mod:`repro.serving.paged_cache` -- fixed-size-block KV allocator
-  (alloc/free/defrag, capacity accounting vs ``GemminiConfig.hbm_bytes``);
+  (alloc/free/defrag, capacity accounting vs ``GemminiConfig.hbm_bytes``,
+  refcounted copy-on-write prefix index, LRU host offload pool);
 * :mod:`repro.serving.scheduler`   -- admission queue, token-budget
   chunk-queue prefill/decode interleave (chunked prefill),
   preemption-by-eviction, TTFT/ITL telemetry;
@@ -16,11 +17,11 @@ argues accelerator evaluation must include.
 """
 
 from repro.serving.engine import ServingEngine
-from repro.serving.paged_cache import (PagedKVAllocator, arena_pages,
-                                       pages_for)
+from repro.serving.paged_cache import (HostSpill, PagedKVAllocator,
+                                       arena_pages, pages_for)
 from repro.serving.scheduler import (ContinuousScheduler, PrefillChunk,
                                      Request, summarize)
 
-__all__ = ["ContinuousScheduler", "PagedKVAllocator", "PrefillChunk",
-           "Request", "ServingEngine", "arena_pages", "pages_for",
-           "summarize"]
+__all__ = ["ContinuousScheduler", "HostSpill", "PagedKVAllocator",
+           "PrefillChunk", "Request", "ServingEngine", "arena_pages",
+           "pages_for", "summarize"]

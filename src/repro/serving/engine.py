@@ -144,6 +144,15 @@ class ServingEngine:
       schedule quarantine (defaults to on iff faults are on), bounded
       retry-with-backoff for transient step failures, and SLO
       enforcement (shed expired deadlines instead of serving them).
+    * ``kv_offload`` / ``host_pool_pages`` / ``prefix_cache`` -- the
+      page-granular KV lifecycle (docs/serving.md#kv-lifecycle), both off
+      by default with bit-exact parity to the classic paths. Offload
+      spills a preempted victim's committed pages to a host pool (LRU,
+      ``host_pool_pages`` deep; default: the arena size) so restart is a
+      DMA restore + resumed chunked prefill instead of a recompute; the
+      prefix cache content-hashes full pages at prefill commit and maps
+      shared prompt prefixes copy-on-write at admission (attention-only
+      families -- an SSM's recurrent state cannot skip chunks).
     * ``watchdog`` -- a :class:`repro.runtime.StepWatchdog` (default: a
       fresh one) observing every engine iteration: straggler flags +
       step-latency percentiles in the run summary, optional heartbeat.
@@ -184,6 +193,9 @@ class ServingEngine:
                  max_step_retries: int = 2,
                  retry_backoff_s: float = 0.0,
                  enforce_deadlines: bool = False,
+                 kv_offload: bool = False,
+                 host_pool_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
                  watchdog: Optional[StepWatchdog] = None,
                  trace=None,
                  clock=None):
@@ -256,9 +268,20 @@ class ServingEngine:
             n_pages = max(self.max_pages_per_seq,
                           min(max_slots * self.max_pages_per_seq,
                               arena_pages(model_cfg, cfg, self.page_size)))
-        self.alloc = PagedKVAllocator(n_pages, self.page_size,
-                                      self.max_pages_per_seq,
-                                      tracer=self.tracer)
+        # -- KV lifecycle (docs/serving.md#kv-lifecycle) -------------------
+        self.kv_offload = bool(kv_offload)
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache and model_cfg.has_ssm:
+            # A prefix hit skips the chunks below the anchor, but an
+            # SSM/hybrid family's recurrent state is a function of every
+            # skipped position -- CoW pages cannot carry it.
+            raise ValueError("prefix_cache requires an attention-only "
+                             f"family; {model_cfg.name!r} has SSM state")
+        self.alloc = PagedKVAllocator(
+            n_pages, self.page_size, self.max_pages_per_seq,
+            tracer=self.tracer,
+            host_pool_pages=((host_pool_pages if host_pool_pages is not None
+                              else n_pages) if self.kv_offload else 0))
         # Prompt bucketing (compile-cache friendliness): legal only for
         # pure-attention families, where padded positions are provably dead
         # under the causal mask + length mask. An SSM/hybrid model's
@@ -283,7 +306,9 @@ class ServingEngine:
             prefill_chunk=prefill_chunk,
             admission_policy=admission_policy,
             enforce_deadlines=enforce_deadlines,
-            clock=self.clock, tracer=self.tracer, metrics=self.metrics)
+            clock=self.clock, tracer=self.tracer, metrics=self.metrics,
+            offload=self.kv_offload, prefix_cache=self.prefix_cache,
+            spill_fn=self._spill, restore_fn=self._restore)
         self.prefill_chunk = self.sched.prefill_chunk
         if policy == "static":
             # Static batching as a degenerate policy: admit only into an
@@ -485,6 +510,63 @@ class ServingEngine:
             tables = tables.at[slot].set(jnp.asarray(self._table_row(slot)))
         self.state = self.state._replace(tables=tables)
 
+    # -- KV lifecycle: host offload (scheduler-wired hooks) ----------------
+    def _spill(self, req: Request, page_ids: List[int],
+               committed: int) -> bool:
+        """Device->host copy of a preemption victim's committed pages (plus
+        its per-slot recurrent state), keyed by rid in the allocator's host
+        pool. Runs BEFORE ``free_slot`` re-issues the pages; ``np.asarray``
+        forces the copy to complete while contents are still exclusively
+        owned. Returns False (degrade to recompute) on an injected
+        ``offload_io@spill`` fault or when the pool rejects the entry."""
+        inj = self.faults
+        if inj is not None and inj.offload_fails("spill"):
+            return False
+        if not page_ids:
+            return False
+        idx = jnp.asarray(np.asarray(page_ids, np.int64))
+        st = self.state
+        payload = {}
+        if st.kv_k is not None:
+            payload["kv_k"] = np.asarray(st.kv_k[:, :, idx])
+            payload["kv_v"] = np.asarray(st.kv_v[:, :, idx])
+        if st.conv is not None:
+            payload["conv"] = np.asarray(st.conv[:, req.slot])
+            payload["ssm"] = np.asarray(st.ssm[:, req.slot])
+        ok = self.alloc.host_put(req.rid, len(page_ids), committed, payload)
+        if ok:
+            self.metrics.counter("offload_spills").inc()
+        return ok
+
+    def _restore(self, req: Request, slot: int, committed: int) -> bool:
+        """Host->device copy of a spilled victim's pages into the freshly
+        allocated slot (the scheduler allocated BEFORE calling, so the
+        target pages exist and are exclusive). Returns False to degrade
+        the admission to recompute: injected ``offload_io@restore`` fault,
+        or a stale/missing spill entry."""
+        inj = self.faults
+        if inj is not None and inj.offload_fails("restore"):
+            self.alloc.host_drop(req.rid)
+            return False
+        sp = self.alloc.host_take(req.rid)
+        if sp is None or sp.tokens != committed:
+            return False
+        pages = self.alloc.slot_pages(slot)[:sp.n_pages]
+        idx = jnp.asarray(np.asarray(pages, np.int64))
+        st = self.state
+        pl = sp.payload
+        if st.kv_k is not None:
+            st = st._replace(
+                kv_k=st.kv_k.at[:, :, idx].set(jnp.asarray(pl["kv_k"])),
+                kv_v=st.kv_v.at[:, :, idx].set(jnp.asarray(pl["kv_v"])))
+        if st.conv is not None:
+            st = st._replace(
+                conv=st.conv.at[:, slot].set(jnp.asarray(pl["conv"])),
+                ssm=st.ssm.at[:, slot].set(jnp.asarray(pl["ssm"])))
+        self.state = st
+        self.metrics.counter("offload_restores").inc()
+        return True
+
     # -- robustness envelope ----------------------------------------------
     def _fallback_steps(self):
         """The bit-exact XLA twins of the jitted steps (PR 3/4's exactness
@@ -613,6 +695,7 @@ class ServingEngine:
         true_len = len(req.serve_prompt()) + self.model_cfg.n_meta_tokens
         req.cache_len = true_len
         req.n_chunks += 1
+        self.sched.note_committed(req)
         self.state = self.state._replace(
             lengths=self.state.lengths.at[slot].set(true_len))
         self._sync_tables([slot])
@@ -675,6 +758,7 @@ class ServingEngine:
                  w.kv_pages or None))
         req.cache_len = w.true_end
         req.n_chunks += 1
+        self.sched.note_committed(req)
         if self.tracer is not None:
             self.tracer.complete(
                 f"prefill_chunk[{req.n_chunks - 1}]", t0, cat="request",
@@ -785,6 +869,13 @@ class ServingEngine:
         summary["fallbacks"] = self.metrics.value("fallbacks")
         summary["injected_faults"] = float(
             self.faults.total_injected if self.faults else 0)
+        # KV-lifecycle counters (all 0 with both features off): prefill
+        # positions actually computed, positions skipped via CoW prefix
+        # hits, and the restore-vs-recompute restart split.
+        for k in ("prefill_tokens", "prefix_hit_tokens", "offload_spills",
+                  "offload_restores", "restarts_restored",
+                  "restarts_recomputed"):
+            summary[k] = self.metrics.value(k)
         summary.update(self.metrics.gauge_peaks())
         summary.update(self.watchdog.stats())
         report = {"summary": summary,

@@ -46,6 +46,7 @@ aggregated to the p50/p99 + tokens/s numbers BENCH_serving.json tracks.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -86,6 +87,13 @@ class Request:
     prefill_pos: int = 0
     prefill_target: int = 0
     n_chunks: int = 0                     # prefill chunk calls executed
+    # chunk-lattice anchor: the cache position prefill resumed from after
+    # a host-pool restore or a prefix-cache hit (0 = the classic lattice
+    # from position 0). Reset on preemption -- a fresh restart re-decides.
+    chunk_anchor: int = 0
+    # per-admission cache of the prompt's page-granular content chain keys
+    # (prefix cache); invalidated on preemption (serve_prompt grows)
+    prefix_keys: Optional[List[bytes]] = None
     itl_s: list = dataclasses.field(default_factory=list)
     # terminal-shed bookkeeping (state == "shed"): why the scheduler
     # dropped it ("deadline_missed" is the only producer today)
@@ -156,7 +164,11 @@ class ContinuousScheduler:
                  admission_policy: str = "fifo",
                  enforce_deadlines: bool = False,
                  clock: Optional[Callable[[], float]] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None,
+                 offload: bool = False,
+                 prefix_cache: bool = False,
+                 spill_fn: Optional[Callable] = None,
+                 restore_fn: Optional[Callable] = None):
         if admission_policy not in self.ADMISSION_POLICIES:
             raise ValueError(f"unknown admission_policy "
                              f"{admission_policy!r}; have "
@@ -197,15 +209,28 @@ class ContinuousScheduler:
         # receiving transition counters.
         self.tracer = tracer
         self.metrics = metrics
+        # KV-lifecycle hooks (docs/serving.md#kv-lifecycle; engine-wired,
+        # both off by default). ``offload``: a preempted victim's committed
+        # pages spill to the allocator's host pool (``spill_fn``) and a
+        # re-admission restores them (``restore_fn``) instead of
+        # recomputing from chunk 0; either hook returning falsy degrades
+        # that victim to the classic recompute restart. ``prefix_cache``:
+        # admission content-hashes the prompt at page granularity and maps
+        # already-materialized prefix pages copy-on-write, skipping their
+        # prefill chunks.
+        self.offload = offload
+        self.prefix_cache = prefix_cache
+        self.spill_fn = spill_fn
+        self.restore_fn = restore_fn
         self.queue: List[Request] = []
         self.running: Dict[int, Request] = {}          # slot -> request
         self.rejected: List[Request] = []              # engine drains these
         self._admit_seq = 0
 
     # -- observability -----------------------------------------------------
-    def _count(self, name: str) -> None:
-        if self.metrics is not None:
-            self.metrics.counter(name).inc()
+    def _count(self, name: str, n: int = 1) -> None:
+        if self.metrics is not None and n:
+            self.metrics.counter(name).inc(n)
 
     def _event(self, req: Request, name: str, **args) -> None:
         if self.tracer is None:
@@ -235,30 +260,91 @@ class ContinuousScheduler:
         return min(self.alloc.max_pages_per_seq,
                    pages_for(self._prefill_need(req), self.alloc.page_size))
 
-    def _chunk_spans(self, req: Request) -> List[Tuple[int, int, int]]:
+    def _chunk_spans(self, req: Request,
+                     anchor: int = 0) -> List[Tuple[int, int, int]]:
         """(start, true_end, padded_end) spans covering prompt + meta in
         cache-position space. Single span (the classic path) when chunking
         is off or the request fits one chunk; otherwise every span is
         exactly ``prefill_chunk`` long except the last, which is padded to
         the engine's compile bucket (``pad_to``; 1 for recurrent families,
-        whose scan state must never absorb padding)."""
+        whose scan state must never absorb padding).
+
+        ``anchor > 0`` starts the lattice at that cache position instead
+        of 0: positions [0, anchor) are already materialized (a host-pool
+        restore or a prefix-cache CoW run) and must not be recomputed.
+        The anchor is arbitrary -- a restored decode victim resumes
+        mid-page -- so the anchored lattice is simply spans of
+        ``prefill_chunk`` from ``anchor``."""
         total = len(req.serve_prompt()) + self.extra_tokens
         c = self.prefill_chunk
-        if not c or total <= c:
+        if not anchor and (not c or total <= c):
             return [(0, total, self._prefill_need(req))]
-        spans, s = [], 0
         # The last span's compile-bucket padding never exceeds the
         # single-pass footprint (roundup of the total): a request that
         # fits the arena unchunked must never out-grow it merely because
         # the chunk size is not page-aligned.
         cap = -(-total // self.pad_to) * self.pad_to
+        spans, s = [], anchor
+        if anchor and not c:
+            # chunking off but a lifecycle feature anchored this request:
+            # one continuation span covers the remainder.
+            pe = min(s + -(-(total - s) // self.pad_to) * self.pad_to, cap)
+            return [(s, total, max(pe, total))]
         while s < total:
             e = min(s + c, total)
             pe = e if e - s == c else \
                 min(s + -(-(e - s) // self.pad_to) * self.pad_to, cap)
-            spans.append((s, e, pe))
+            spans.append((s, e, max(pe, e)))
             s = e
         return spans
+
+    # -- prefix-cache hashing ---------------------------------------------
+    def _prefix_keys(self, req: Request) -> List[bytes]:
+        """Page-granular content chain keys for ``req``'s prompt: key ``i``
+        digests the whole token prefix covering cache positions
+        [0, (i+1) * page_size) -- meta positions (model-constant) are
+        seeded into the chain head, so two requests share key ``i`` iff
+        their first ``i+1`` cache pages hold identical content. Only pages
+        fully covered by TRUE positions get keys (pad- or decode-written
+        pages are never content-addressable)."""
+        page = self.alloc.page_size
+        toks = np.ascontiguousarray(np.asarray(req.serve_prompt(), np.int32))
+        total = len(toks) + self.extra_tokens
+        h = hashlib.sha256(
+            f"kvprefix:v1:{page}:{self.extra_tokens}".encode()).digest()
+        keys: List[bytes] = []
+        for i in range(total // page):
+            lo = max(0, i * page - self.extra_tokens)
+            hi = (i + 1) * page - self.extra_tokens
+            h = hashlib.sha256(h + toks[lo:hi].tobytes()).digest()
+            keys.append(h)
+        return keys
+
+    def _req_keys(self, req: Request) -> List[bytes]:
+        if req.prefix_keys is None:
+            req.prefix_keys = self._prefix_keys(req)
+        return req.prefix_keys
+
+    def note_committed(self, req: Request) -> None:
+        """Engine hook after a prefill execution: publish content keys for
+        every page now fully covered by committed TRUE positions
+        (``req.cache_len``). Published pages become CoW candidates for
+        later admissions and survive this slot's eviction (the index holds
+        a reference). Publication happens strictly post-execution --
+        publishing at chunk-emission time would index pages a skipped or
+        faulted chunk never wrote."""
+        if not self.prefix_cache or req.state != "running":
+            return
+        pages = self.alloc.slot_pages(req.slot)
+        keys = self._req_keys(req)
+        n_full = min(req.cache_len // self.alloc.page_size,
+                     len(keys), len(pages))
+        n = 0
+        for i in range(n_full):
+            if self.alloc.publish_prefix(keys[i], pages[i]):
+                n += 1
+        if n:
+            self._count("prefix_pages_published", n)
 
     # -- submission --------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -340,6 +426,10 @@ class ContinuousScheduler:
             self._admit_seq += 1
             self.running[slot] = req
             self._note_admitted(req)
+            self._count("prefill_tokens",
+                        len(req.serve_prompt()) + self.extra_tokens)
+            if req.n_preempted:
+                self._count("restarts_recomputed")
             budget -= need
             out.append((req, slot, pages))
         return out
@@ -370,8 +460,20 @@ class ContinuousScheduler:
            as a slot is free, the first chunk's pages fit, and budget
            remains. Unservable requests (recompute prompt regrew past the
            arena) are rejected exactly as in :meth:`admissions`.
+
+        With a KV-lifecycle feature on (``offload`` / ``prefix_cache``),
+        pass 2 additionally decides restore-vs-recompute per candidate: a
+        host-pool spill restores (all-fresh pages, ``restore_fn`` DMAs the
+        payload back, prefill resumes at the committed anchor), a prefix
+        match maps the hit pages copy-on-write and prefill starts at the
+        hit boundary. Either path emits ONE continuation-style chunk
+        (``first=False`` -- the cache below the anchor is live) and
+        charges the budget only for positions actually computed. A failed
+        restore degrades to the classic recompute admission in place.
+        Both features off reduces this loop to the PR-8 behavior exactly.
         """
-        if not self.prefill_chunk:
+        if not self.prefill_chunk and not (self.offload
+                                           or self.prefix_cache):
             if not admit_new:
                 return []
             return [PrefillChunk(req, slot, 0, len(req.serve_prompt())
@@ -394,13 +496,15 @@ class ContinuousScheduler:
                         self.finish(req, truncated=True)
                     break
                 budget -= w.true_end - w.start
+                self._count("prefill_tokens", w.true_end - w.start)
                 out.append(w)
                 req.prefill_pos = w.true_end
             if budget <= 0 and out:
                 break
-        # pass 2: new admissions (first chunks)
+        # pass 2: new admissions (first chunks; restore/prefix-aware)
         self._order_queue()
         free = self._free_slots() if admit_new else []
+        page = self.alloc.page_size
         while self.queue and free and (budget > 0 or not out):
             req = self.queue[0]
             if self._expired(req):
@@ -409,36 +513,79 @@ class ContinuousScheduler:
                 continue
             need = self._prefill_need(req)
             cap = min(self.alloc.n_pages, self.alloc.max_pages_per_seq)
-            if pages_for(need, self.alloc.page_size) > cap:
+            if pages_for(need, page) > cap:
                 self.queue.pop(0)          # can NEVER be admitted
                 self.rejected.append(req)
                 continue
-            s, e, pe = self._chunk_spans(req)[0]
+            target = len(req.serve_prompt()) + self.extra_tokens
+            # restart decision: a spilled victim restores at its committed
+            # anchor; otherwise a prefix match anchors at the CoW-hit
+            # boundary (capped so at least one position is computed -- the
+            # final chunk must produce logits to sample from).
+            spill = self.alloc.host_peek(req.rid) if self.offload else None
+            anchor = int(spill.tokens) if spill is not None else 0
+            hits: List[int] = []
+            if not anchor and self.prefix_cache:
+                keys = self._req_keys(req)
+                max_hit = max(0, min(len(keys), (target - 1) // page))
+                hits = self.alloc.match_prefix(keys[:max_hit])
+                anchor = len(hits) * page
+            s, e, pe = self._chunk_spans(req, anchor)[0]
             if out and e - s > budget:
                 break                      # budget spent; keep FIFO order
-            if not self.alloc.can_admit(pe):
-                break                      # head-of-line blocks: no overtake
+            slot = free[0]
+            if hits:
+                pages = self.alloc.alloc_slot_shared(slot, pe, hits)
+                if pages is None:
+                    break                  # head-of-line blocks: no overtake
+            else:
+                if not self.alloc.can_admit(pe):
+                    break                  # head-of-line blocks: no overtake
+                pages = self.alloc.alloc_slot(slot, pe)
+                assert pages is not None   # can_admit just said yes
+            restored = False
+            if spill is not None:
+                restored = bool(self.restore_fn is not None
+                                and self.restore_fn(req, slot, anchor))
+                if not restored:
+                    # degraded restore (offload_io fault / payload gone):
+                    # unwind the allocation and retry THIS request as a
+                    # classic recompute admission -- the spill entry is
+                    # consumed, so the retry takes the anchor-0 path.
+                    self.alloc.free_slot(slot)
+                    self.alloc.host_drop(req.rid)
+                    continue
             self.queue.pop(0)
-            slot = free.pop(0)
-            pages = self.alloc.alloc_slot(slot, pe)
-            assert pages is not None       # can_admit just said yes
+            free.pop(0)
             req.state, req.slot = "running", slot
             req.admitted_seq = self._admit_seq
             self._admit_seq += 1
             self.running[slot] = req
             self._note_admitted(req)
-            req.prefill_target = len(req.serve_prompt()) + self.extra_tokens
+            req.prefill_target = target
             req.prefill_pos = e
+            req.chunk_anchor = anchor
             budget -= e - s
-            out.append(PrefillChunk(req, slot, s, e, pe, True,
-                                    e >= req.prefill_target))
+            self._count("prefill_tokens", e - s)
+            if hits:
+                self._count("prefix_hit_tokens", anchor)
+                self._event(req, "prefix_hit", tokens=anchor,
+                            pages=len(hits))
+            if restored:
+                self._count("restarts_restored")
+            elif req.n_preempted:
+                self._count("restarts_recomputed")
+            first = anchor == 0
+            out.append(PrefillChunk(
+                req, slot, s, e, pe, first, e >= target,
+                kv_pages=0 if first else self._kv_pages(req)))
         return out
 
     def _next_chunk(self, req: Request) -> Optional[PrefillChunk]:
         """The continuation chunk at ``req.prefill_pos``, with its pages
         allocated (the commitment point) -- or None under arena pressure
         (nothing allocated)."""
-        for (s, e, pe) in self._chunk_spans(req):
+        for (s, e, pe) in self._chunk_spans(req, req.chunk_anchor):
             if s == req.prefill_pos:
                 new = self.alloc.grow_slot(req.slot, pe)
                 if new is None:
@@ -521,11 +668,25 @@ class ContinuousScheduler:
         Generated tokens are kept (they re-prefill as prompt suffix); a
         mid-prefill victim restarts from chunk 0 (its pages and carried
         recurrent state are gone -- recompute IS the restart mechanism,
-        at chunk granularity)."""
+        at chunk granularity).
+
+        With ``offload`` on, the victim's committed pages are spilled to
+        the host pool first (``spill_fn``; a device->host copy), so its
+        next admission can restore instead of recompute. The spill runs
+        BEFORE ``free_slot`` -- page contents must be captured while the
+        pages are still exclusively owned."""
+        if (self.offload and self.spill_fn is not None
+                and req.cache_len > 0):
+            committed = req.cache_len
+            pages = self.alloc.slot_pages(req.slot)[
+                :pages_for(committed, self.alloc.page_size)]
+            self.spill_fn(req, pages, committed)
         self.alloc.free_slot(req.slot)
         del self.running[req.slot]
         req.state, req.slot, req.cache_len = "queued", -1, 0
         req.prefill_pos = req.prefill_target = 0
+        req.chunk_anchor = 0
+        req.prefix_keys = None             # serve_prompt grew: keys stale
         req.n_preempted += 1
         req.queued_since = self.clock()
         self._count("preemptions")
@@ -534,6 +695,7 @@ class ContinuousScheduler:
 
     def finish(self, req: Request, *, truncated: bool = False) -> None:
         self.alloc.free_slot(req.slot)
+        self.alloc.host_drop(req.rid)       # terminal: spill is dead weight
         self.running.pop(req.slot, None)
         req.state = "finished"
         req.truncated = truncated
@@ -558,6 +720,7 @@ class ContinuousScheduler:
         if req.state == "running":
             self.alloc.free_slot(req.slot)
             self.running.pop(req.slot, None)
+        self.alloc.host_drop(req.rid)       # terminal: spill is dead weight
         req.state, req.slot = "shed", -1
         req.shed_reason = reason
         req.t_finished = self.clock()

@@ -70,6 +70,11 @@ def test_plan_parse_grammar():
     assert plan.specs[2].site == "arena" and plan.specs[2].pages == 2
     assert plan.specs[3].site == "step" and plan.specs[3].delay_s == 0.5
     assert plan.specs[4].site == "checkpoint"
+    # offload_io: bare kind defaults to the spill site; @restore targets
+    # the restore DMA (docs/serving.md#kv-lifecycle)
+    off = FaultPlan.parse("offload_io;offload_io@restore:max=3").specs
+    assert off[0].kind == "offload_io" and off[0].site == "spill"
+    assert off[1].site == "restore" and off[1].max_hits == 3
     assert FaultPlan.parse("") == FaultPlan()
     with pytest.raises(ValueError):
         FaultPlan.parse("meteor@decode")
@@ -206,6 +211,7 @@ def reference():
     return _tokens(rep)
 
 
+@pytest.mark.slow
 def test_nan_guard_fallback_exact_tokens(reference):
     eng, rep = _run("seed=1;nan@decode:max=1")
     assert rep["summary"]["fallbacks"] == 1
@@ -298,6 +304,71 @@ def test_faults_disabled_matches_reference(reference):
     robustness machinery is pure overhead-free plumbing when off)."""
     _, rep = _run(None)
     for a, b in zip(reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# KV host-offload faults: the ladder degrades spill/restore to recompute
+# ---------------------------------------------------------------------------
+def _run_evict(faults_spec=None, **kw):
+    """Forced-eviction geometry: 2 slots x 4 pages cannot hold two
+    19-token prompts through 8 generated tokens, so the youngest runner
+    is preempted mid-flight -- the spill/restore path every offload fault
+    must degrade gracefully from."""
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=4, temperature=0.0, seed=0,
+                        backend="interpret", prefill_chunk=8,
+                        faults=faults_spec, **kw)
+    for n in (19, 19):
+        eng.submit(rng.integers(0, 64, (n,), dtype=np.int32), 8)
+    return eng, eng.run()
+
+
+@pytest.fixture(scope="module")
+def evict_reference():
+    _, rep = _run_evict(None)
+    assert rep["summary"]["preemptions"] >= 1     # geometry really evicts
+    return _tokens(rep)
+
+
+@pytest.mark.slow
+def test_offload_io_spill_fault_degrades_to_recompute(evict_reference):
+    """A failed spill DMA means no host copy exists: the victim restarts
+    through the classic recompute path, token-for-token equal."""
+    eng, rep = _run_evict("offload_io@spill:max=99", kv_offload=True)
+    s = rep["summary"]
+    assert rep["faults"].get("offload_io@spill", 0) >= 1
+    assert s["offload_spills"] == 0 and s["offload_restores"] == 0
+    assert s["restarts_restored"] == 0 and s["restarts_recomputed"] >= 1
+    for a, b in zip(evict_reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_offload_io_restore_fault_degrades_to_recompute(evict_reference):
+    """The spill lands but the restore DMA fails: the stale spill is
+    dropped and the SAME admission retries as a recompute -- no token
+    drift, no wedged queue."""
+    eng, rep = _run_evict("offload_io@restore:max=99", kv_offload=True)
+    s = rep["summary"]
+    assert rep["faults"].get("offload_io@restore", 0) >= 1
+    assert s["offload_spills"] >= 1 and s["offload_restores"] == 0
+    assert s["restarts_restored"] == 0 and s["restarts_recomputed"] >= 1
+    assert eng.alloc.host_used_pages == 0          # nothing parked forever
+    for a, b in zip(evict_reference, _tokens(rep)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_offload_fault_free_restores_exactly(evict_reference):
+    """Control for the two tests above: with no fault the same geometry
+    restores instead of recomputing -- and still matches bit-for-bit."""
+    eng, rep = _run_evict(None, kv_offload=True)
+    s = rep["summary"]
+    assert s["offload_spills"] >= 1 and s["offload_restores"] >= 1
+    assert s["restarts_restored"] >= 1 and s["restarts_recomputed"] == 0
+    for a, b in zip(evict_reference, _tokens(rep)):
         np.testing.assert_array_equal(a, b)
 
 

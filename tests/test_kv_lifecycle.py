@@ -1,0 +1,172 @@
+"""Page-granular KV lifecycle, end to end (ISSUE 9 acceptance locks).
+
+* **Host offload**: a forced-eviction run with ``kv_offload=True``
+  restores the victim from the host pool without re-running its committed
+  prefill chunks -- strictly fewer prefill tokens than the recompute
+  baseline, bit-identical output streams.
+* **Prefix cache**: a shared-system-prompt trace with
+  ``prefix_cache=True`` maps the shared pages copy-on-write -- strictly
+  fewer prefill tokens computed (``prefix_hit_tokens > 0``), bit-identical
+  output streams.
+* **Off by default**: with both features off (and even on, when there is
+  nothing to exploit) the engine behaves exactly like the classic paths.
+
+Numerical invisibility is the whole contract: restore is a DMA of pages
+the engine already computed, and a prefix hit maps pages holding exactly
+the keys/values the skipped chunks would have written (PR-4's
+chunked-vs-single-pass exactness is what makes the resumed chunk legal at
+an arbitrary anchor).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tf
+from repro.serving import ServingEngine
+
+_TINY = tf.ModelConfig(name="tiny-serve", family="dense", n_layers=2,
+                       d_model=32, vocab=64, n_heads=2, n_kv_heads=1,
+                       head_dim=16, d_ff=64, dtype=jnp.float32)
+
+
+def _run(prompts, gen, *, n_pages, max_context=64, **kw):
+    eng = ServingEngine(_TINY, max_slots=2, max_context=max_context,
+                        page_size=8, n_pages=n_pages, backend="xla",
+                        seed=0, temperature=0.0, prefill_chunk=8, **kw)
+    for p in prompts:
+        eng.submit(np.asarray(p, np.int32), gen)
+    rep = eng.run()
+    toks = [np.asarray(r["tokens"]).ravel() for r in rep["requests"]]
+    return eng, toks, rep["summary"]
+
+
+def _evict_prompts():
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, 64, (19,)).astype(np.int32) for _ in range(2)]
+
+
+def _shared_prefix_prompts(n=4, shared=24, tail=7):
+    rng = np.random.default_rng(1)
+    sys_prompt = rng.integers(0, 64, (shared,)).astype(np.int32)
+    return [np.concatenate([sys_prompt,
+                            rng.integers(0, 64, (tail,)).astype(np.int32)])
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# host offload
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_offload_restores_without_recomputing_committed_chunks():
+    """2 slots x 4 pages force an eviction; offload must (a) restore the
+    victim rather than recompute it, (b) compute strictly fewer prefill
+    tokens, (c) change no output bit."""
+    prompts = _evict_prompts()
+    _, base_toks, base = _run(prompts, 8, n_pages=4, max_context=32)
+    assert base["preemptions"] >= 1            # geometry really evicts
+    assert base["restarts_recomputed"] >= 1
+    eng, off_toks, off = _run(prompts, 8, n_pages=4, max_context=32,
+                              kv_offload=True)
+    assert off["offload_spills"] >= 1 and off["offload_restores"] >= 1
+    assert off["restarts_restored"] >= 1 and off["restarts_recomputed"] == 0
+    # committed chunks were NOT re-run: fewer positions computed
+    assert off["prefill_tokens"] < base["prefill_tokens"]
+    for a, b in zip(base_toks, off_toks):
+        np.testing.assert_array_equal(a, b)
+    assert eng.alloc.host_used_pages == 0      # restored spills consumed
+
+
+@pytest.mark.slow
+def test_offload_pool_too_small_degrades_to_recompute():
+    """A pool that cannot hold the victim refuses the spill; the run
+    degrades to the classic recompute path with identical tokens.
+    (``host_pool_pages=0`` is the degenerate bound -- every spill is
+    larger than the pool; the LRU eviction of a merely-undersized pool is
+    property-tested in test_paged_cache_props.)"""
+    prompts = _evict_prompts()
+    _, base_toks, base = _run(prompts, 8, n_pages=4, max_context=32)
+    _, toks, s = _run(prompts, 8, n_pages=4, max_context=32,
+                      kv_offload=True, host_pool_pages=0)
+    assert s["offload_spills"] == 0 and s["offload_restores"] == 0
+    assert s["restarts_recomputed"] >= 1
+    assert s["prefill_tokens"] == base["prefill_tokens"]
+    for a, b in zip(base_toks, toks):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_prefix_cache_skips_shared_prefix_chunks():
+    """Four requests share a 24-token system prompt over 2 slots (so
+    admissions stagger and later requests see the published pages):
+    strictly fewer prefill tokens, hits in telemetry, identical tokens."""
+    prompts = _shared_prefix_prompts()
+    _, base_toks, base = _run(prompts, 6, n_pages=16)
+    eng, pc_toks, pc = _run(prompts, 6, n_pages=16, prefix_cache=True)
+    assert pc["prefix_hit_tokens"] > 0
+    assert pc["prefill_tokens"] < base["prefill_tokens"]
+    assert pc["prefill_tokens"] + pc["prefix_hit_tokens"] == \
+        base["prefill_tokens"]                 # hits account exactly
+    for a, b in zip(base_toks, pc_toks):
+        np.testing.assert_array_equal(a, b)
+    # the index never wedges the arena: everything freed or reclaimable
+    eng.alloc.check()
+    assert eng.alloc.free_pages + eng.alloc.prefix_index_pages == \
+        eng.alloc.n_pages
+
+
+@pytest.mark.slow
+def test_prefix_cache_disjoint_prompts_no_hits_bit_exact():
+    """Unrelated prompts: the cache publishes but never hits, and output
+    is bit-identical to the feature-off run (hash misses are free)."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 64, (17 + 4 * i,)).astype(np.int32)
+               for i in range(3)]
+    _, base_toks, base = _run(prompts, 5, n_pages=16)
+    _, pc_toks, pc = _run(prompts, 5, n_pages=16, prefix_cache=True)
+    assert pc["prefix_hit_tokens"] == 0
+    assert pc["prefill_tokens"] == base["prefill_tokens"]
+    for a, b in zip(base_toks, pc_toks):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefix_cache_rejects_recurrent_families():
+    """CoW pages cannot carry recurrent scan state: an SSM family must be
+    refused at construction, not silently mis-served."""
+    from repro import configs
+    ssm_cfg = configs.get_smoke("mamba2-1.3b")
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine(ssm_cfg, max_slots=2, max_context=32, page_size=8,
+                      n_pages=8, backend="xla", prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# both features: compose + off-by-default parity
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_offload_and_prefix_cache_compose_bit_exact():
+    """Both features on, under eviction pressure AND shared prefixes:
+    restore takes precedence for spilled victims, prefix hits serve fresh
+    admissions, and the stream never drifts."""
+    prompts = _shared_prefix_prompts(n=3, shared=16, tail=5)
+    _, base_toks, _ = _run(prompts, 6, n_pages=6, max_context=48)
+    _, both_toks, s = _run(prompts, 6, n_pages=6, max_context=48,
+                           kv_offload=True, prefix_cache=True)
+    assert s["prefix_hit_tokens"] > 0
+    for a, b in zip(base_toks, both_toks):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_features_off_by_default():
+    """Default-constructed engines have no host pool, no prefix index, no
+    lifecycle counters -- the PR-8 surface exactly."""
+    _, toks, s = _run([np.arange(9)], 3, n_pages=8, max_context=32)
+    assert s["prefix_hit_tokens"] == 0 and s["offload_spills"] == 0
+    assert s["offload_restores"] == 0 and s["restarts_restored"] == 0
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, backend="xla")
+    assert eng.alloc.host_pool_pages == 0
+    assert not eng.alloc.host_put(0, 1, 8, {})   # pool refuses everything

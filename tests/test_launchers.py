@@ -20,6 +20,7 @@ def _run(args, timeout=480):
     return p.stdout
 
 
+@pytest.mark.slow
 def test_train_with_failure_and_restart(tmp_path):
     out = _run(["repro.launch.train", "--arch", "gemma3-1b", "--smoke",
                 "--steps", "10", "--batch", "4", "--seq", "64",
@@ -31,6 +32,7 @@ def test_train_with_failure_and_restart(tmp_path):
     assert "attempts=2" in out
 
 
+@pytest.mark.slow
 def test_train_moe_arch(tmp_path):
     out = _run(["repro.launch.train", "--arch", "granite-moe-3b-a800m",
                 "--smoke", "--steps", "4", "--batch", "4", "--seq", "32",

@@ -101,6 +101,7 @@ def test_local_global_window_pattern():
                if (i + 1) % 6 != 0)
 
 
+@pytest.mark.slow
 def test_loss_decreases_on_markov_data(rng):
     """End-to-end sanity: a few optimizer steps reduce the loss."""
     from repro.data import SyntheticLM, SyntheticLMConfig

@@ -1,0 +1,229 @@
+"""Property suite for the paged KV allocator's lifecycle invariants.
+
+Random interleavings of every allocator operation -- alloc / grow /
+extend / free / hold / release / defrag / publish / CoW-share / host
+spill / restore -- must preserve the ownership invariants the serving
+engine builds on:
+
+* every arena page is owned by exactly one of {free list, mapped set,
+  held set}, and a mapped page's refcount equals its reference count
+  (#slot tables holding it + 1 if the prefix index does) and is >= 1;
+* free-page accounting is exact (no page lost, duplicated, resurrected);
+* defrag preserves every slot's logical slot->contents mapping and the
+  prefix index's key->contents mapping (CoW aliases move exactly once);
+* the host pool never exceeds its page capacity.
+
+The first two and the last are asserted by ``PagedKVAllocator.check()``
+(the in-tree oracle) after EVERY operation; contents preservation is
+asserted against a shadow model: each physical page carries a stamp when
+written, each slot records the stamp sequence it logically holds, and a
+shared (CoW) or defrag-moved page must keep presenting the stamp it was
+written with. 200+ generated op sequences (ISSUE 9 acceptance floor).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # container has no hypothesis
+    from _hyp import given, settings, strategies as st
+
+from repro.serving.paged_cache import PagedKVAllocator
+
+N_PAGES = 12
+PAGE = 4
+MAX_PER_SEQ = 6
+HOST_POOL = 8
+SLOTS = 4
+OPS_PER_SEQ = 60
+
+
+class _Shadow:
+    """Contents model: stamps written per physical page, logical per-slot
+    views, and published key -> stamp expectations."""
+
+    def __init__(self):
+        self.mem = {}          # physical page -> stamp last written
+        self.views = {}        # slot -> [stamp, ...] (logical order)
+        self.pub = {}          # chain key -> stamp at publication
+        self.stamp = 0
+
+    def fresh(self):
+        self.stamp += 1
+        return self.stamp
+
+
+def _check_contents(al: PagedKVAllocator, sh: _Shadow) -> None:
+    """Every slot's physical pages must still present the stamps the slot
+    logically wrote (CoW sharing and defrag must be content-invisible)."""
+    for slot, stamps in sh.views.items():
+        pages = al.slot_pages(slot)
+        assert len(pages) == len(stamps), \
+            f"slot {slot}: table length drifted"
+        got = [sh.mem.get(p) for p in pages]
+        assert got == stamps, f"slot {slot}: contents drifted"
+
+
+def _step(al: PagedKVAllocator, sh: _Shadow, rng: np.random.Generator,
+          rid_counter: list) -> None:
+    op = rng.choice(["alloc", "alloc", "alloc_shared", "grow", "extend",
+                     "free", "free", "publish", "publish", "match",
+                     "hold", "defrag", "host_put", "host_take",
+                     "host_drop"])
+    free_slots = [s for s in range(SLOTS) if s not in sh.views]
+    live_slots = sorted(sh.views)
+    if op == "alloc" and free_slots:
+        slot = int(rng.choice(free_slots))
+        n_tok = int(rng.integers(1, MAX_PER_SEQ * PAGE + 1))
+        pages = al.alloc_slot(slot, n_tok)
+        if pages is not None:
+            stamps = []
+            for p in pages:                # simulate the prefill writes
+                sh.mem[p] = sh.fresh()
+                stamps.append(sh.mem[p])
+            sh.views[slot] = stamps
+    elif op == "alloc_shared" and free_slots and sh.pub:
+        slot = int(rng.choice(free_slots))
+        keys = list(sh.pub)
+        k = int(rng.integers(1, len(keys) + 1))
+        ks = [keys[i] for i in sorted(
+            rng.choice(len(keys), size=k, replace=False))]
+        hits = al.match_prefix(ks)
+        # a hit run's contents must be exactly what was published
+        for i, p in enumerate(hits):
+            assert sh.mem.get(p) == sh.pub[ks[i]], \
+                "prefix hit returned a rewritten page"
+        lo = len(hits) * PAGE
+        n_tok = int(rng.integers(lo + 1, MAX_PER_SEQ * PAGE + 1)) \
+            if lo < MAX_PER_SEQ * PAGE else lo
+        pages = al.alloc_slot_shared(slot, n_tok, hits)
+        if pages is not None:
+            stamps = [sh.mem[p] for p in hits]      # CoW: inherited content
+            for p in pages[len(hits):]:
+                sh.mem[p] = sh.fresh()
+                stamps.append(sh.mem[p])
+            sh.views[slot] = stamps
+    elif op == "grow" and live_slots:
+        slot = int(rng.choice(live_slots))
+        n_tok = int(rng.integers(1, MAX_PER_SEQ * PAGE + 1))
+        before = al.slot_pages(slot)
+        new = al.grow_slot(slot, n_tok)
+        if new:
+            assert al.slot_pages(slot) == before + new
+            for p in new:
+                sh.mem[p] = sh.fresh()
+                sh.views[slot].append(sh.mem[p])
+        elif new is None:
+            assert al.slot_pages(slot) == before, \
+                "failed grow must allocate nothing"
+    elif op == "extend" and live_slots:
+        slot = int(rng.choice(live_slots))
+        pid = al.extend_slot(slot)
+        if pid is not None:
+            sh.mem[pid] = sh.fresh()
+            sh.views[slot].append(sh.mem[pid])
+    elif op == "free" and live_slots:
+        slot = int(rng.choice(live_slots))
+        n = al.free_slot(slot)
+        assert n == len(sh.views.pop(slot))
+    elif op == "publish" and live_slots:
+        slot = int(rng.choice(live_slots))
+        pages = al.slot_pages(slot)
+        i = int(rng.integers(0, len(pages)))
+        key = rng.bytes(16)
+        if al.publish_prefix(key, pages[i]):
+            sh.pub[key] = sh.views[slot][i]
+    elif op == "match" and sh.pub:
+        keys = list(sh.pub)
+        hits = al.match_prefix(keys)
+        for i, p in enumerate(hits):
+            assert sh.mem.get(p) == sh.pub[keys[i]]
+    elif op == "hold":
+        k = al.hold_pages(int(rng.integers(0, N_PAGES + 1)))
+        assert al.held_pages == k
+        al.check()
+        assert al.release_held() == k
+    elif op == "defrag":
+        perm = al.defrag()
+        assert sorted(int(p) for p in perm) == list(range(N_PAGES)), \
+            "defrag perm is not a permutation"
+        sh.mem = {int(perm[p]): s for p, s in sh.mem.items()}
+    elif op == "host_put":
+        rid = rid_counter[0]
+        rid_counter[0] += 1
+        n = int(rng.integers(1, HOST_POOL + 3))
+        ok = al.host_put(rid, n, n * PAGE, {"blob": n})
+        assert ok == (n <= HOST_POOL), "pool admission contract"
+        if ok:
+            sp = al.host_peek(rid)
+            assert sp is not None and sp.n_pages == n
+    elif op == "host_take":
+        if rng.random() < 0.5 and al.host_used_pages:
+            # take the most recent spill that still exists
+            for rid in range(rid_counter[0] - 1, -1, -1):
+                if al.host_peek(rid) is not None:
+                    sp = al.host_take(rid)
+                    assert sp is not None and al.host_peek(rid) is None
+                    break
+        else:
+            assert al.host_take(10 ** 9) is None   # unknown rid: no-op
+    elif op == "host_drop":
+        al.host_drop(int(rng.integers(0, max(1, rid_counter[0]))))
+    al.check()
+    _check_contents(al, sh)
+
+
+@settings(max_examples=200, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_lifecycle_op_interleavings(seed):
+    """>= 200 random op sequences preserve every lifecycle invariant."""
+    rng = np.random.default_rng(seed)
+    al = PagedKVAllocator(N_PAGES, PAGE, MAX_PER_SEQ,
+                          host_pool_pages=HOST_POOL)
+    sh = _Shadow()
+    rid_counter = [0]
+    al.check()
+    for _ in range(OPS_PER_SEQ):
+        _step(al, sh, rng, rid_counter)
+    # drain: every slot freed returns the arena to a consistent end state
+    for slot in list(sh.views):
+        al.free_slot(slot)
+        sh.views.pop(slot)
+        al.check()
+    # only prefix-index residents may keep pages out of the free list now
+    assert al.free_pages == N_PAGES - al.prefix_index_pages
+
+
+def test_check_catches_refcount_drift():
+    """The oracle itself must fail loudly on a corrupted allocator --
+    otherwise the 200 green sequences above prove nothing."""
+    al = PagedKVAllocator(8, PAGE, 8)
+    al.alloc_slot(0, 8)
+    al._ref[al.slot_pages(0)[0]] += 1      # simulate a leak
+    with pytest.raises(AssertionError):
+        al.check()
+
+
+def test_reclaim_prefers_lru_and_spares_shared():
+    """Index-only pages evict LRU-first under pressure; pages a table
+    still references are never reclaimed (refcount > 1)."""
+    al = PagedKVAllocator(4, PAGE, 4)
+    pages = al.alloc_slot(0, 4 * PAGE)     # whole arena
+    for i, p in enumerate(pages):
+        assert al.publish_prefix(f"k{i}".encode(), p)
+    al.free_slot(0)                        # all 4 become index-only
+    al.check()
+    assert al.free_pages == 0 and al.can_admit(2 * PAGE)
+    # k1 is refreshed (MRU); k0 is LRU and must be reclaimed first
+    hits = al.match_prefix([b"k1"])
+    got = al.alloc_slot(1, PAGE)           # needs 1 page -> reclaims k0
+    assert got is not None
+    al.check()
+    assert al.match_prefix([b"k0"]) == []
+    assert al.match_prefix([b"k1"]) == hits
+    # CoW-map k1 into a table: now unreclaimable; a full-arena ask fails
+    shared = al.alloc_slot_shared(2, 2 * PAGE, hits)
+    assert shared is not None
+    al.check()
+    assert not al.can_admit(3 * PAGE)

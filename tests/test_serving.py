@@ -117,6 +117,47 @@ def test_alloc_defrag_releases_holds():
     assert al.alloc_slot(3, 8) is not None     # needs 4 of the 5 free
 
 
+def test_defrag_with_held_and_refcount_shared_pages():
+    """PR-6 alias-safe defrag/free-list rebuild, now against the ISSUE-9
+    lifecycle state: a physical page shared CoW across two tables (and the
+    prefix index) must move exactly ONCE -- not be split into two copies
+    or double-counted -- and a held page must not be resurrected into the
+    rebuilt free list while pressure is on the old ids."""
+    al = PagedKVAllocator(n_pages=8, page_size=4, max_pages_per_seq=8)
+    a = al.alloc_slot(0, 12)                   # 3 pages
+    assert al.publish_prefix(b"k0", a[0]) and al.publish_prefix(b"k1", a[1])
+    hits = al.match_prefix([b"k0", b"k1"])
+    assert hits == a[:2]
+    b = al.alloc_slot_shared(1, 16, hits)      # shares 2, allocs 2 fresh
+    assert b is not None and b[:2] == a[:2]
+    al.free_slot(0)                            # a[2] freed; a[:2] survive
+    al.check()
+    assert al.hold_pages(1) == 1               # pressure during defrag
+    before = al.slot_pages(1)
+    perm = al.defrag()
+    al.check()                                 # partition + refcounts exact
+    assert al.held_pages == 0                  # released, never resurrected
+    after = al.slot_pages(1)
+    # the shared pages moved once: table follows the permutation, stays
+    # a single physical page per logical position (no split, no dupe)
+    assert [int(perm[p]) for p in before] == after
+    assert len(set(after)) == 4
+    assert sorted(after) == list(range(4))     # compacted to the front
+    # the prefix index was remapped with the same permutation: a match
+    # still lands on the (moved) shared pages
+    assert al.match_prefix([b"k0", b"k1"]) == after[:2]
+    # eviction refuses to free the still-indexed pages; index retains them
+    al.free_slot(1)
+    al.check()
+    assert al.prefix_index_pages == 2
+    assert al.free_pages == al.n_pages - 2
+    # and they remain reclaimable: a full-arena ask flushes the index
+    assert al.can_admit(8 * 4)
+    assert al.alloc_slot(2, 8 * 4) is not None
+    al.check()
+    assert al.prefix_index_pages == 0
+
+
 # ---------------------------------------------------------------------------
 # paged attention numerics
 # ---------------------------------------------------------------------------
@@ -390,6 +431,7 @@ def _run_vs_reference(eng, prompts, gens):
     return rep
 
 
+@pytest.mark.slow
 def test_engine_matches_reference_greedy(rng):
     eng = ServingEngine(_TINY, max_slots=2, max_context=48, page_size=8,
                         n_pages=16, temperature=0.0, seed=0)
@@ -402,6 +444,7 @@ def test_engine_matches_reference_greedy(rng):
     assert s["p50_ttft_s"] <= s["p50_latency_s"] + 1e-9
 
 
+@pytest.mark.slow
 def test_engine_correct_under_eviction(rng):
     """A starved arena forces preemption-by-eviction mid-decode; the
     recompute restart must still produce the exact reference stream."""
@@ -459,6 +502,7 @@ def test_engine_defrag_preserves_live_requests(rng):
             np.asarray([int(t) for t in r.generated]), want)
 
 
+@pytest.mark.slow
 def test_engine_defrag_under_arena_pressure(rng):
     """Defrag interleaved with injected arena exhaustion (plus the
     eviction pressure a small arena already produces): holds never leak
@@ -629,6 +673,7 @@ _TINY_SSM = tf.ModelConfig(name="tiny-serve-ssm", family="ssm", n_layers=2,
                            ssm_chunk=8, dtype=jnp.float32)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("chunk,page", [(8, 8), (6, 8)])
 def test_chunked_engine_matches_reference(rng, chunk, page):
     """Exact token match vs the single-pass static reference with chunking
@@ -661,6 +706,7 @@ def test_chunked_single_token_final_chunk(rng):
     assert rep["requests"][0]["prefill_chunks"] == 3
 
 
+@pytest.mark.slow
 def test_chunked_engine_ssm_matches_reference(rng):
     """SSM-family chunked prefill resumes the recurrent state per chunk (no
     padding, exact-length chunks) and still reproduces the reference
@@ -674,6 +720,7 @@ def test_chunked_engine_ssm_matches_reference(rng):
     assert rep["summary"]["prefill_chunks"] > 3
 
 
+@pytest.mark.slow
 def test_chunked_eviction_mid_prefill_recompute(rng):
     """A starved arena evicts the youngest runner MID-PREFILL (its pages
     and carried state are gone); the chunk-zero recompute restart still

@@ -80,6 +80,7 @@ def test_attention_heads_sharded_for_llava():
     assert tuple(wq_spec)[-1] == "model"
 
 
+@pytest.mark.slow
 def test_mini_dryrun_train_and_decode(run_subprocess):
     """Lower + compile a train cell and a decode cell on a (2, 4) mesh."""
     code = """

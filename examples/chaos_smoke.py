@@ -39,9 +39,12 @@ GEN_LENS = [6, 6, 6]
 
 
 def run_trace(model_cfg, faults):
+    # assert_invariants: the allocator's ownership oracle runs at every
+    # step boundary -- the chaos run doubles as a lifecycle audit.
     eng = ServingEngine(model_cfg, max_slots=2, max_context=32, page_size=8,
                         n_pages=8, temperature=0.0, seed=0,
-                        backend="interpret", prefill_chunk=8, faults=faults)
+                        backend="interpret", prefill_chunk=8, faults=faults,
+                        assert_invariants=True)
     rng = np.random.default_rng(0)
     for plen, glen in zip(PROMPT_LENS, GEN_LENS):
         eng.submit(rng.integers(0, model_cfg.vocab, (plen,),

@@ -23,4 +23,4 @@ baseline file (`tools/lint_baseline.json`), and gate CI through
 from repro.analysis.lint.findings import (          # noqa: F401
     Finding, apply_baseline, load_baseline, write_baseline)
 from repro.analysis.lint.driver import (            # noqa: F401
-    lint_repo, run_contract_checks, run_source_checks)
+    lint_repo, lint_repo_timed, run_contract_checks, run_source_checks)

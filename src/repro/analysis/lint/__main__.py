@@ -6,6 +6,7 @@ and exits non-zero if any non-baselined finding remains.
 
   python -m repro.analysis.lint                      # human output
   python -m repro.analysis.lint --format json        # CI artifact
+  python -m repro.analysis.lint --select GL201,GL3   # only those codes
   python -m repro.analysis.lint --write-baseline     # accept current
 """
 
@@ -16,8 +17,9 @@ import json
 import sys
 from pathlib import Path
 
-from repro.analysis.lint import (apply_baseline, lint_repo, load_baseline,
+from repro.analysis.lint import (apply_baseline, load_baseline,
                                  write_baseline)
+from repro.analysis.lint.driver import lint_repo_timed
 from repro.analysis.lint.findings import to_report
 
 
@@ -32,6 +34,10 @@ def main(argv=None) -> int:
         prog="repro.analysis.lint",
         description="static kernel-contract + source lint (docs/analysis.md)")
     ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", type=str, default=None, metavar="CODES",
+                    help="comma-separated diagnostic-code prefixes "
+                         "(e.g. GL201,GL3); findings outside the "
+                         "selection are dropped before the baseline")
     ap.add_argument("--baseline", type=Path, default=None,
                     help="suppression file (default: tools/lint_baseline.json)")
     ap.add_argument("--no-baseline", action="store_true",
@@ -42,7 +48,11 @@ def main(argv=None) -> int:
                     help="also write the JSON report to this path")
     args = ap.parse_args(argv)
 
-    findings = lint_repo()
+    findings, timings = lint_repo_timed()
+    if args.select:
+        sel = tuple(c.strip() for c in args.select.split(",") if c.strip())
+        findings = [f for f in findings
+                    if any(f.code.startswith(c) for c in sel)]
 
     baseline_path = args.baseline or _default_baseline()
     if args.write_baseline:
@@ -53,6 +63,7 @@ def main(argv=None) -> int:
     new, suppressed = apply_baseline(findings, baseline)
 
     report = to_report(new, suppressed=suppressed)
+    report["timings_s"] = {k: round(v, 4) for k, v in timings.items()}
     if args.out:
         args.out.write_text(json.dumps(report, indent=2, default=str) + "\n")
     if args.format == "json":

@@ -28,10 +28,23 @@ paged attention path are row-independent, so a request decoded alongside
 arbitrary co-tenants produces bit-identical tokens to the same request
 decoded alone through the static reference path (``examples/serve_decode``
 gates its exit code on this).
+
+Control-plane / compute split: every *decision* the engine makes --
+admission, chunk ordering, preemption, recovery-ladder control flow,
+token-commit accounting, spill/restore protocol -- lives on
+:class:`EngineControlPlane`, which never touches a device tensor. The
+device work (jitted step dispatch, sampling, table sync, DMA copies) is
+behind a handful of compute hooks ``ServingEngine`` implements. A null
+executor (``repro.analysis.mc.harness.NullEngine``) implements the same
+hooks with fabricated deterministic token commits, which is what lets the
+model checker exhaust scheduler x allocator x recovery interleavings
+without a model; the same seam is where speculative-decoding verify steps
+and a sequence-sharded multi-host arena plug in (ROADMAP).
 """
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -112,90 +125,55 @@ def _jitted_steps(engine: ExecutionContext, model_cfg, page_size: int,
     return _JIT_CACHE[key]
 
 
-class ServingEngine:
-    """Continuous-batching executor for one model on one host.
+def _env_check_default() -> bool:
+    """``$GEMMINI_CHECK`` truthiness: the step-boundary allocator-invariant
+    knob's environment default (off unless set to 1/true/on/yes)."""
+    return os.environ.get("GEMMINI_CHECK", "").strip().lower() in (
+        "1", "true", "on", "yes")
 
-    Knobs (see docs/serving.md for the policy discussion):
 
-    * ``max_slots`` / ``max_context`` / ``page_size`` / ``n_pages`` --
-      decode batch width and paged-arena geometry. ``page_size=None``
-      resolves the tuned ``PagedAttnSchedule`` page size when
-      ``GEMMINI_TUNE`` is not ``off``, else the static default.
-    * ``backend`` -- ``xla`` (gather reference, exact-match contract),
-      ``interpret`` (Pallas kernel bodies on CPU), ``pallas`` (TPU).
-    * ``prefill_token_budget`` -- prefill cache positions per iteration.
-    * ``prefill_chunk`` -- chunked prefill: ``None`` or negative =
-      single-pass, ``0`` = auto (one page), else the chunk size in cache
-      positions (floored to ``n_meta_tokens + 1``).
-    * ``policy`` -- ``continuous``, or ``static`` (admission barrier, no
-      slot recycling; the bench baseline). The barrier never blocks an
-      in-flight chunked prefill, only new admissions.
-    * ``admission_policy`` -- queue order for new admissions: ``fifo``
-      (default, unchanged), ``priority`` (highest ``Request.priority``
-      first, deadline then age break ties), or ``deadline``
-      (earliest-deadline-first). See ``scheduler.ContinuousScheduler``.
-    * ``warm_prompt_lens`` -- pre-resolve every tuned schedule the given
-      prompt lengths will hit (no-op under ``GEMMINI_TUNE=off``).
-    * ``faults`` / ``nan_guard`` / ``max_step_retries`` /
-      ``retry_backoff_s`` / ``enforce_deadlines`` -- the robustness
-      envelope (docs/serving.md#robustness): deterministic fault
-      injection (``faults=None`` consults ``$GEMMINI_FAULTS``; off by
-      default), post-step NaN/Inf guard with retry-on-the-XLA-twin +
-      schedule quarantine (defaults to on iff faults are on), bounded
-      retry-with-backoff for transient step failures, and SLO
-      enforcement (shed expired deadlines instead of serving them).
-    * ``kv_offload`` / ``host_pool_pages`` / ``prefix_cache`` -- the
-      page-granular KV lifecycle (docs/serving.md#kv-lifecycle), both off
-      by default with bit-exact parity to the classic paths. Offload
-      spills a preempted victim's committed pages to a host pool (LRU,
-      ``host_pool_pages`` deep; default: the arena size) so restart is a
-      DMA restore + resumed chunked prefill instead of a recompute; the
-      prefix cache content-hashes full pages at prefill commit and maps
-      shared prompt prefixes copy-on-write at admission (attention-only
-      families -- an SSM's recurrent state cannot skip chunks).
-    * ``watchdog`` -- a :class:`repro.runtime.StepWatchdog` (default: a
-      fresh one) observing every engine iteration: straggler flags +
-      step-latency percentiles in the run summary, optional heartbeat.
-    * ``trace`` -- span tracing (docs/observability.md): ``None``
-      consults ``$GEMMINI_TRACE`` (usually: off), ``True``/an int
-      capacity/a :class:`repro.obs.trace.Tracer` enable the ring-buffered
-      tracer for THIS engine (request lifecycle, step phases, allocator
-      events). Off costs one None check per emission site; the disabled
-      path is bit-exact against PR-7 (a regression test holds it there).
-    * ``clock`` -- the engine's one monotonic clock (default
-      ``time.monotonic``): every TTFT/ITL/latency/step duration and
-      every trace timestamp derives from it, and ``submit(deadline=)``
-      timestamps live in its domain (``engine.now() + rel_s``).
-      Injectable for deterministic tests.
+class EngineControlPlane:
+    """The device-free half of the serving engine.
 
-    Dispatch is an :class:`ExecutionContext` (``self.engine``): cfg +
-    backend + tune policy in one frozen value handed to the jitted model
-    steps. A mesh-aware context (``ExecutionContext.with_mesh``) is the
-    multi-host path once the page arena itself is sequence-sharded
-    (ROADMAP).
+    Everything that *decides* lives here: submission, the per-iteration
+    step structure (shed -> prefill chunks -> decode capacity -> decode),
+    token-commit accounting (``_record_token`` and the finish/EOS logic),
+    the recovery ladder's control flow (``_run_guarded``: transient retry
+    -> NaN guard -> fallback -> quarantine), and the host-offload
+    spill/restore protocol. None of it touches a device tensor; the
+    compute work is behind the hooks below, which a subclass implements:
+
+    * :meth:`_dispatch` / :meth:`_dispatch_fallback` -- run one model step
+      (primary / degraded-mode twin), returning ``(logits, state)``.
+    * :meth:`_exec_chunk` -- execute one prefill chunk's compute; returns
+      the sampled token for the last chunk, else None.
+    * :meth:`_exec_decode` -- execute one decode step's compute; returns
+      per-slot sampled tokens.
+    * :meth:`_capture_spill` / :meth:`_apply_restore` -- the device<->host
+      copies behind the offload accounting.
+    * :meth:`_sync_tables` -- push allocator block tables to the device
+      (no-op by default: a tensor-free executor has no tables to sync).
+    * :meth:`_bucket_key` -- the compile-bucket key of a dispatch, for the
+      trace-time jit audit (default: one bucket).
+
+    ``ServingEngine`` implements the hooks against the jitted model steps;
+    ``repro.analysis.mc.harness.NullEngine`` implements them with
+    fabricated deterministic token commits so the model checker can step
+    the REAL scheduling/recovery logic through exhaustive interleavings.
+
+    Subclasses finish construction by setting the geometry and component
+    attributes: ``max_context``, ``page_size``, ``max_pages_per_seq``,
+    ``prefill_pad``, ``alloc``, ``sched``, ``prefill_chunk``,
+    ``_next_token``.
     """
 
-    def __init__(self, model_cfg, *, max_slots: int = 4,
-                 max_context: int = 2048,
-                 page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None,
-                 engine_cfg: Optional[GemminiConfig] = None,
-                 backend: Optional[str] = None,
-                 params=None, seed: int = 0,
-                 temperature: float = 0.0,
-                 prefill_token_budget: int = 512,
-                 prefill_chunk: Optional[int] = None,
+    def __init__(self, model_cfg, *, max_slots: int,
                  policy: str = "continuous",
-                 admission_policy: str = "fifo",
-                 warm_prompt_lens: Sequence[int] = (),
                  faults=None,
                  nan_guard: Optional[bool] = None,
                  max_step_retries: int = 2,
                  retry_backoff_s: float = 0.0,
-                 enforce_deadlines: bool = False,
-                 kv_offload: bool = False,
-                 host_pool_pages: Optional[int] = None,
-                 prefix_cache: bool = False,
+                 assert_invariants: Optional[bool] = None,
                  watchdog: Optional[StepWatchdog] = None,
                  trace=None,
                  clock=None):
@@ -203,9 +181,7 @@ class ServingEngine:
             raise ValueError(f"unknown policy {policy!r}")
         self.model_cfg = model_cfg
         self.policy = policy
-        self.temperature = temperature
         self.max_slots = max_slots
-        self.max_context = max_context
         # -- observability (docs/observability.md) -------------------------
         # One monotonic clock for every duration in the engine (wall
         # clocks step under NTP); the tracer and scheduler share it so
@@ -232,6 +208,12 @@ class ServingEngine:
             else nan_guard
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
+        # Debug oracle: run PagedKVAllocator.check() at every step
+        # boundary. Off by default (it is O(pages) of pure-Python asserts
+        # on the hot loop); None consults $GEMMINI_CHECK so the chaos
+        # suite -- and any bug hunt -- can flip it on without code edits.
+        self.assert_invariants = _env_check_default() \
+            if assert_invariants is None else bool(assert_invariants)
         # per-step-name set of dispatched compile-bucket keys, consumed by
         # the trace-time auditor (repro.analysis.lint.jit_audit): every
         # distinct key is one XLA compilation, and the static census from
@@ -239,118 +221,48 @@ class ServingEngine:
         self.observed_buckets: Dict[str, set] = {}
         self.quarantined: List[str] = []
         self.watchdog = watchdog or StepWatchdog()
-        cfg = engine_cfg or GemminiConfig(input_dtype="bf16",
-                                          acc_dtype="fp32",
-                                          output_dtype="bf16")
-        self.engine = ExecutionContext(
-            cfg=cfg, backend=backend or default_engine_backend())
-
-        # -- page geometry: the tuned schedule is the page size ------------
-        if page_size is None:
-            if flags.get("tune_mode") != "off" and model_cfg.has_attn:
-                from repro import tune
-                page_size = tune.resolve_paged_attn_schedule(
-                    cfg, max_slots, model_cfg.n_heads, model_cfg.n_kv_heads,
-                    model_cfg.head_dim, max_context,
-                    dtype=model_cfg.dtype).page_size
-            else:
-                from repro.tune.schedules import DEFAULT_PAGE_SIZE
-                page_size = DEFAULT_PAGE_SIZE
-        self.page_size = max(8, min(page_size, max_context))
-        self.max_pages_per_seq = -(-max_context // self.page_size)
-        if n_pages is None:
-            # Budget-derived arena, capped at what the engine can ever hold
-            # live: pages belong only to running slots, each at most
-            # max_pages_per_seq deep, so anything beyond slots*MP is zero
-            # pools that no schedule could touch (a full gemma3 config
-            # would otherwise allocate the whole 4096-page cap -- GiBs of
-            # zeros -- to serve a 2-request smoke batch).
-            n_pages = max(self.max_pages_per_seq,
-                          min(max_slots * self.max_pages_per_seq,
-                              arena_pages(model_cfg, cfg, self.page_size)))
-        # -- KV lifecycle (docs/serving.md#kv-lifecycle) -------------------
-        self.kv_offload = bool(kv_offload)
-        self.prefix_cache = bool(prefix_cache)
-        if self.prefix_cache and model_cfg.has_ssm:
-            # A prefix hit skips the chunks below the anchor, but an
-            # SSM/hybrid family's recurrent state is a function of every
-            # skipped position -- CoW pages cannot carry it.
-            raise ValueError("prefix_cache requires an attention-only "
-                             f"family; {model_cfg.name!r} has SSM state")
-        self.alloc = PagedKVAllocator(
-            n_pages, self.page_size, self.max_pages_per_seq,
-            tracer=self.tracer,
-            host_pool_pages=((host_pool_pages if host_pool_pages is not None
-                              else n_pages) if self.kv_offload else 0))
-        # Prompt bucketing (compile-cache friendliness): legal only for
-        # pure-attention families, where padded positions are provably dead
-        # under the causal mask + length mask. An SSM/hybrid model's
-        # recurrent scan state WOULD absorb padding tokens, silently
-        # diverging from the reference path, so those prefill at exact
-        # length (one compile per distinct prompt length).
-        self.prefill_pad = 1 if model_cfg.has_ssm else self.page_size
-        # Chunked prefill: None or negative = single-pass (classic; the
-        # CLI's -1 convention works here too); 0 = auto (one page, the
-        # natural page-multiple default); positive values are floored to
-        # meta+1 by the scheduler (the first chunk carries the meta-token
-        # prefix).
-        if prefill_chunk is not None and prefill_chunk < 0:
-            prefill_chunk = None
-        elif prefill_chunk == 0:
-            prefill_chunk = self.page_size
-        self.sched = ContinuousScheduler(
-            self.alloc, max_slots,
-            prefill_token_budget=prefill_token_budget,
-            extra_tokens_per_prefill=model_cfg.n_meta_tokens,
-            pad_to=self.prefill_pad,
-            prefill_chunk=prefill_chunk,
-            admission_policy=admission_policy,
-            enforce_deadlines=enforce_deadlines,
-            clock=self.clock, tracer=self.tracer, metrics=self.metrics,
-            offload=self.kv_offload, prefix_cache=self.prefix_cache,
-            spill_fn=self._spill, restore_fn=self._restore)
-        self.prefill_chunk = self.sched.prefill_chunk
-        if policy == "static":
-            # Static batching as a degenerate policy: admit only into an
-            # EMPTY engine (group barrier, no slot recycling) and ignore
-            # the prefill budget -- the whole group prefills at once.
-            self.sched.prefill_token_budget = 1 << 30
-
-        # -- model state + jitted steps ------------------------------------
-        self._key = jax.random.PRNGKey(seed)
-        if params is None:
-            self._key, pk = jax.random.split(self._key)
-            params = tf.init_params(pk, model_cfg)
-        self.params = params
-        self.state = tf.init_paged_state(model_cfg, max_slots, n_pages,
-                                         self.page_size,
-                                         self.max_pages_per_seq,
-                                         dtype=model_cfg.dtype)
-        mc = model_cfg
-        # Guarded engines use non-donating jits (see _jitted_steps: the
-        # XLA-twin retry needs the pre-call state buffer alive).
-        self._steps = _jitted_steps(self.engine, mc, self.page_size,
-                                    donate=not self.nan_guard)
-        self._fb_steps = None        # XLA-twin fallbacks, built on demand
         # The tuned schedule the decode path launches, for quarantine on a
-        # guard trip: the same key resolve_paged_attn_schedule resolved the
-        # page size under. None when tuning is off or the family has no
-        # attention (nothing tuned to quarantine).
+        # guard trip (subclasses resolve it when tuning is on).
         self._paged_sched_key: Optional[str] = None
-        if mc.has_attn and flags.get("tune_mode") != "off":
-            from repro.tune import schedules as tsched
-            self._paged_sched_key = tsched.paged_attn_cache_key(
-                cfg, max_slots, mc.n_heads, mc.n_kv_heads, mc.head_dim,
-                max_context, window=None, dtype=mc.dtype)
-
-        tok_shape = (max_slots,) if mc.n_codebooks == 1 \
-            else (max_slots, mc.n_codebooks)
-        self._next_token = np.zeros(tok_shape, np.int32)
         self._rid = 0
         self.requests: List[Request] = []
-        self.warm_stats: Optional[Dict[str, int]] = None
-        if warm_prompt_lens and flags.get("tune_mode") != "off":
-            self.warm_stats = self.warm(warm_prompt_lens)
+
+    # -- compute hooks (subclass responsibility) ---------------------------
+    def _dispatch(self, which: str, args: tuple):
+        """Run one primary model step; returns ``(logits, state)``."""
+        raise NotImplementedError
+
+    def _dispatch_fallback(self, which: str, args: tuple):
+        """Run one degraded-mode (bit-exact twin) model step."""
+        raise NotImplementedError
+
+    def _exec_chunk(self, w):
+        """Execute one prefill chunk's compute against the device state.
+        Must return the sampled token when ``w.last`` (the chunk whose
+        final row is the prompt's last true position), else None."""
+        raise NotImplementedError
+
+    def _exec_decode(self, active_np: np.ndarray) -> np.ndarray:
+        """Execute one decode step's compute; returns sampled tokens
+        indexed by slot (inactive slots' entries are ignored)."""
+        raise NotImplementedError
+
+    def _capture_spill(self, req: Request, page_ids: List[int]) -> Dict:
+        """Device->host copy of a victim's committed pages (plus any
+        per-slot recurrent state): the opaque host-pool payload."""
+        raise NotImplementedError
+
+    def _apply_restore(self, req: Request, slot: int, spill) -> None:
+        """Host->device copy of a spill payload into a fresh slot."""
+        raise NotImplementedError
+
+    def _sync_tables(self, slots) -> None:
+        """Push the allocator's block tables for ``slots`` to the device
+        state. Default: no-op (tensor-free executors keep no tables)."""
+
+    def _bucket_key(self, which: str, args: tuple):
+        """The compile-bucket a dispatch lands in (jit-audit census)."""
+        return ()
 
     # -- observability -----------------------------------------------------
     def now(self) -> float:
@@ -389,51 +301,6 @@ class ServingEngine:
                                 running=len(self.sched.running))
             self.tracer.counter("queue_depth", depth=depth)
 
-    # -- plan warm-up ------------------------------------------------------
-    def warm(self, prompt_lens: Sequence[int]) -> Dict[str, int]:
-        """Pre-resolve every schedule the engine will launch: prefill GEMM
-        and attention shapes per prompt bucket (batch 1), decode GEMMs at
-        the slot batch, and the paged-attention page size the pools were
-        sized with -- so no request ever tunes on the request path.
-
-        With chunked prefill on, the buckets are *chunk lengths*, not
-        prompt buckets: the first chunk prefills like a short fresh prompt
-        (self-attention + GEMMs at the chunk length), continuation chunks
-        launch only GEMMs -- their attention is the block-table gather
-        kernel, whose tuned schedule IS the page size the pools were
-        already sized with."""
-        from repro import tune
-        totals: Dict[str, int] = {}
-        # Prefill really runs at bucket + meta tokens (embed_inputs prepends
-        # them), so that is the length to warm -- warming the bare bucket
-        # would populate fingerprints the request path never hits.
-        first, rest = set(), set()
-        for p in prompt_lens:
-            dummy = Request(rid=-1,
-                            prompt=np.zeros((max(1, int(p)),), np.int32),
-                            max_new_tokens=0)
-            spans = self.sched._chunk_spans(dummy)
-            first.add(spans[0][2])
-            for (s, _e, pe) in spans[1:]:
-                rest.add(pe - s)
-        for i, b in enumerate(sorted(first)):
-            st = tune.warm_model_plans(
-                self.engine.cfg, self.model_cfg, 1, b,
-                include_decode=False,
-                paged_slots=self.max_slots if i == 0 else 0,
-                paged_max_context=self.max_context)
-            totals = {k: totals.get(k, 0) + v for k, v in st.items()}
-        for b in sorted(rest - first):
-            st = tune.warm_model_plans(self.engine.cfg, self.model_cfg, 1, b,
-                                       include_decode=False,
-                                       include_attention=False)
-            totals = {k: totals.get(k, 0) + v for k, v in st.items()}
-        st = tune.warm_model_plans(self.engine.cfg, self.model_cfg,
-                                   self.max_slots, 1,
-                                   include_attention=False)
-        totals = {k: totals.get(k, 0) + v for k, v in st.items()}
-        return totals
-
     # -- submission --------------------------------------------------------
     def _bucket(self, n: int) -> int:
         return -(-max(1, n) // self.prefill_pad) * self.prefill_pad
@@ -462,15 +329,7 @@ class ServingEngine:
         self.sched.submit(req)
         return req
 
-    # -- sampling ----------------------------------------------------------
-    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
-        """logits: (..., V) -> token ids, greedy unless temperature > 0."""
-        if self.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self._key, k = jax.random.split(self._key)
-        return np.asarray(jax.random.categorical(
-            k, logits / self.temperature), np.int32)
-
+    # -- token commit ------------------------------------------------------
     def _record_token(self, req: Request, tok: np.ndarray,
                       now: float) -> None:
         req.generated.append(tok if tok.ndim else int(tok))
@@ -497,53 +356,32 @@ class ServingEngine:
                                      tokens=req.n_generated)
             self.sched.finish(req)
 
-    # -- execution ---------------------------------------------------------
-    def _table_row(self, slot: int) -> np.ndarray:
-        row = np.zeros((self.max_pages_per_seq,), np.int32)
-        pages = self.alloc.slot_pages(slot)
-        row[:len(pages)] = pages
-        return row
-
-    def _sync_tables(self, slots) -> None:
-        tables = self.state.tables
-        for slot in slots:
-            tables = tables.at[slot].set(jnp.asarray(self._table_row(slot)))
-        self.state = self.state._replace(tables=tables)
-
     # -- KV lifecycle: host offload (scheduler-wired hooks) ----------------
     def _spill(self, req: Request, page_ids: List[int],
                committed: int) -> bool:
-        """Device->host copy of a preemption victim's committed pages (plus
-        its per-slot recurrent state), keyed by rid in the allocator's host
-        pool. Runs BEFORE ``free_slot`` re-issues the pages; ``np.asarray``
-        forces the copy to complete while contents are still exclusively
-        owned. Returns False (degrade to recompute) on an injected
-        ``offload_io@spill`` fault or when the pool rejects the entry."""
+        """Host-pool spill of a preemption victim's committed pages. Runs
+        BEFORE ``free_slot`` re-issues the pages; the :meth:`_capture_spill`
+        hook forces the device->host copy to complete while contents are
+        still exclusively owned. Returns False (degrade to recompute) on
+        an injected ``offload_io@spill`` fault or when the pool rejects
+        the entry."""
         inj = self.faults
         if inj is not None and inj.offload_fails("spill"):
             return False
         if not page_ids:
             return False
-        idx = jnp.asarray(np.asarray(page_ids, np.int64))
-        st = self.state
-        payload = {}
-        if st.kv_k is not None:
-            payload["kv_k"] = np.asarray(st.kv_k[:, :, idx])
-            payload["kv_v"] = np.asarray(st.kv_v[:, :, idx])
-        if st.conv is not None:
-            payload["conv"] = np.asarray(st.conv[:, req.slot])
-            payload["ssm"] = np.asarray(st.ssm[:, req.slot])
+        payload = self._capture_spill(req, page_ids)
         ok = self.alloc.host_put(req.rid, len(page_ids), committed, payload)
         if ok:
             self.metrics.counter("offload_spills").inc()
         return ok
 
     def _restore(self, req: Request, slot: int, committed: int) -> bool:
-        """Host->device copy of a spilled victim's pages into the freshly
-        allocated slot (the scheduler allocated BEFORE calling, so the
-        target pages exist and are exclusive). Returns False to degrade
-        the admission to recompute: injected ``offload_io@restore`` fault,
-        or a stale/missing spill entry."""
+        """Host-pool restore into a freshly allocated slot (the scheduler
+        allocated BEFORE calling, so the target pages exist and are
+        exclusive; :meth:`_apply_restore` performs the copies). Returns
+        False to degrade the admission to recompute: injected
+        ``offload_io@restore`` fault, or a stale/missing spill entry."""
         inj = self.faults
         if inj is not None and inj.offload_fails("restore"):
             self.alloc.host_drop(req.rid)
@@ -551,73 +389,11 @@ class ServingEngine:
         sp = self.alloc.host_take(req.rid)
         if sp is None or sp.tokens != committed:
             return False
-        pages = self.alloc.slot_pages(slot)[:sp.n_pages]
-        idx = jnp.asarray(np.asarray(pages, np.int64))
-        st = self.state
-        pl = sp.payload
-        if st.kv_k is not None:
-            st = st._replace(
-                kv_k=st.kv_k.at[:, :, idx].set(jnp.asarray(pl["kv_k"])),
-                kv_v=st.kv_v.at[:, :, idx].set(jnp.asarray(pl["kv_v"])))
-        if st.conv is not None:
-            st = st._replace(
-                conv=st.conv.at[:, slot].set(jnp.asarray(pl["conv"])),
-                ssm=st.ssm.at[:, slot].set(jnp.asarray(pl["ssm"])))
-        self.state = st
+        self._apply_restore(req, slot, sp)
         self.metrics.counter("offload_restores").inc()
         return True
 
     # -- robustness envelope ----------------------------------------------
-    def _fallback_steps(self):
-        """The bit-exact XLA twins of the jitted steps (PR 3/4's exactness
-        contract is what makes degraded mode *exact*): same model, same
-        paged state, same engine datapath for every projection -- only the
-        kernel lowerings swap for their plan-free XLA twins
-        (``backend="xla_twin"``; the plain ``xla`` backend would also flip
-        the model onto the float-LM projection path and the re-run would
-        drift off the faulted stream at bf16-rounding level). An engine
-        already lowering to XLA (``xla`` or ``xla_twin``) has no tuned
-        schedule to blame, so its fallback is a clean re-run of the same
-        backend (donate=False variant)."""
-        if self._fb_steps is None:
-            fb = self.engine.backend if self.engine.impl_backend == "xla" \
-                else "xla_twin"
-            self._fb_steps = _jitted_steps(
-                self.engine.with_backend(fb), self.model_cfg,
-                self.page_size, donate=False)
-        return self._fb_steps
-
-    # -- trace-time audit hooks (repro.analysis.lint.jit_audit) ------------
-    @staticmethod
-    def _bucket_key(which: str, args: tuple):
-        """The compile-bucket a dispatch lands in: the traced token-block
-        shape plus any static argument (the chunk steps' kv_pages)."""
-        if which in ("prefill", "prefill_nl"):
-            return (int(args[1].shape[1]),)
-        if which in ("chunk", "chunk_nl"):
-            return (int(args[1].shape[1]), args[6])
-        return ()                                    # decode: one bucket
-
-    def jit_cache_stats(self) -> Dict[str, int]:
-        """Observed compile-bucket counts per jitted step (both the
-        primary steps and, once built, the XLA-twin fallbacks)."""
-        out: Dict[str, int] = {}
-        for label, steps in (("", self._steps),
-                             ("fb:", self._fb_steps or {})):
-            for which, fn in steps.items():
-                try:
-                    out[label + which] = int(fn._cache_size())
-                except Exception:
-                    pass
-        return out
-
-    def audit(self):
-        """Run the trace-time lint audit against this live engine:
-        compile-bucket explosions (GL601) and post-donation buffer reuse
-        (GL602).  Returns the findings (empty list = healthy)."""
-        from repro.analysis.lint import jit_audit
-        return jit_audit.audit_engine(self)
-
     def _quarantine(self, site: str) -> None:
         """Bar the tuned schedule behind a guard trip from future
         resolution (PlanCache.quarantine). Only the decode path maps 1:1
@@ -632,7 +408,7 @@ class ServingEngine:
         self.quarantined.append(key)
 
     def _run_guarded(self, site: str, which: str, args: tuple):
-        """One jitted model step under the robustness envelope.
+        """One model step under the robustness envelope.
 
         Order of events: (1) injected transient failures raise *before*
         the call and retry with bounded exponential backoff -- state is
@@ -653,7 +429,7 @@ class ServingEngine:
             try:
                 if inj is not None:
                     inj.check_transient(site)
-                logits, state = self._steps[which](*args)
+                logits, state = self._dispatch(which, args)
                 break
             except rfaults.TransientOpError:
                 self.metrics.counter("retries", site=site).inc()
@@ -673,52 +449,18 @@ class ServingEngine:
                 self.tracer.instant("fallback", cat="engine", site=site,
                                     which=which)
             self._quarantine(site)
-            logits, state = self._fallback_steps()[which](*args)
+            logits, state = self._dispatch_fallback(which, args)
             if not bool(np.isfinite(np.asarray(logits)).all()):
                 raise FloatingPointError(
                     f"non-finite logits at {site!r} survived the XLA "
                     f"fallback: model divergence, not a kernel fault")
         return logits, state
 
-    def _do_prefill(self, req: Request, slot: int) -> None:
-        t0 = self.clock()
-        prompt = req.serve_prompt()
-        pad = self._bucket(len(prompt)) - len(prompt)
-        if pad:
-            prompt = np.pad(prompt, ((0, pad),) + ((0, 0),)
-                            * (prompt.ndim - 1))
-        row = self._table_row(slot)
-        logits, self.state = self._run_guarded(
-            "prefill", "prefill",
-            (self.params, jnp.asarray(prompt[None]), self.state,
-             jnp.int32(slot), jnp.asarray(row)))
-        true_len = len(req.serve_prompt()) + self.model_cfg.n_meta_tokens
-        req.cache_len = true_len
-        req.n_chunks += 1
-        self.sched.note_committed(req)
-        self.state = self.state._replace(
-            lengths=self.state.lengths.at[slot].set(true_len))
-        self._sync_tables([slot])
-        tok = self._sample(logits[0, true_len - 1])
-        if self.tracer is not None:
-            self.tracer.complete("prefill", t0, cat="request",
-                                 tid=otrace.req_tid(req.rid), slot=slot,
-                                 tokens=true_len)
-        self._record_token(req, tok, self.clock())
-
+    # -- execution (control skeletons over the compute hooks) --------------
     def _do_prefill_chunk(self, w) -> None:
-        """Execute one scheduler-issued prefill chunk.
-
-        Single-span chunks (``first and last``) take the classic
-        whole-prompt path unchanged. Otherwise: the first chunk runs the
-        fresh ``paged_prefill`` (meta prefix, SSM state reset, self-only
-        attention -- positions [0, chunk) see no cache); continuation
-        chunks run ``paged_prefill_chunk`` (resume SSM state, attend cache
-        pages + chunk at offset ``start``). Only the last chunk samples --
-        its final row is the prompt's last true position -- and only then
-        does the slot's device length go live, flipping it into the decode
-        active set.
-        """
+        """Execute one scheduler-issued prefill chunk: run the compute
+        hook, then commit the accounting (cache_len, prefix publication)
+        and -- for the last chunk -- record the sampled token."""
         req, slot = w.req, w.slot
         if req.state != "running" or req.slot != slot:
             # The scheduler finished or preempted this request AFTER
@@ -727,53 +469,22 @@ class ServingEngine:
             # scatter into a zero table row over pages the allocator may
             # already have re-issued.
             return
-        if w.first and w.last:
-            self._do_prefill(req, slot)
-            return
         t0 = self.clock()
-        meta = self.model_cfg.n_meta_tokens
-        prompt = req.serve_prompt()
-        toks = prompt[max(0, w.start - meta): w.true_end - meta]
-        pad = (w.padded_end - w.true_end)
-        if pad:
-            toks = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1))
-        row = self._table_row(slot)
-        if w.first:
-            which = "prefill" if w.last else "prefill_nl"
-            logits, self.state = self._run_guarded(
-                "prefill", which,
-                (self.params, jnp.asarray(toks[None]), self.state,
-                 jnp.int32(slot), jnp.asarray(row)))
-        else:
-            # Static dead-key bound for the gather attention: the scheduler
-            # stamps each continuation chunk with the pages the whole
-            # (padded) prompt will ever occupy (PrefillChunk.kv_pages) --
-            # table entries past it can never hold live keys and need not
-            # be contracted.
-            which = "chunk" if w.last else "chunk_nl"
-            logits, self.state = self._run_guarded(
-                "chunk", which,
-                (self.params, jnp.asarray(toks[None]), self.state,
-                 jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start),
-                 w.kv_pages or None))
+        tok = self._exec_chunk(w)
         req.cache_len = w.true_end
         req.n_chunks += 1
         self.sched.note_committed(req)
         if self.tracer is not None:
-            self.tracer.complete(
-                f"prefill_chunk[{req.n_chunks - 1}]", t0, cat="request",
-                tid=otrace.req_tid(req.rid), slot=slot, start=w.start,
-                end=w.true_end, last=w.last)
+            if w.first and w.last:
+                self.tracer.complete("prefill", t0, cat="request",
+                                     tid=otrace.req_tid(req.rid), slot=slot,
+                                     tokens=w.true_end)
+            else:
+                self.tracer.complete(
+                    f"prefill_chunk[{req.n_chunks - 1}]", t0, cat="request",
+                    tid=otrace.req_tid(req.rid), slot=slot, start=w.start,
+                    end=w.true_end, last=w.last)
         if w.last:
-            # The device table sync can wait until the slot goes live: the
-            # chunk calls carry the table row as an argument, and a
-            # mid-prefill slot never decodes (saves two host->device
-            # dispatches per intermediate chunk).
-            self._sync_tables([slot])
-            true_len = len(prompt) + meta
-            self.state = self.state._replace(
-                lengths=self.state.lengths.at[slot].set(true_len))
-            tok = self._sample(logits[0, (true_len - 1) - w.start])
             self._record_token(req, tok, self.clock())
 
     def _do_decode(self) -> None:
@@ -783,20 +494,42 @@ class ServingEngine:
             # slots write the trash page and keep frozen lengths, so a
             # partially-prefilled cache can never be touched.
             active_np[slot] = not req.prefilling
-        toks = self._next_token[:, None] \
-            if self.model_cfg.n_codebooks == 1 \
-            else self._next_token[:, None, :]
-        logits, self.state = self._run_guarded(
-            "decode", "decode",
-            (self.params, jnp.asarray(toks), self.state,
-             jnp.asarray(active_np)))
-        last = self._sample(logits[:, -1])
+        last = self._exec_decode(active_np)
         now = self.clock()
         for slot, req in list(self.sched.running.items()):
             if req.prefilling:
                 continue
             req.cache_len += 1
             self._record_token(req, last[slot], now)
+
+    # The two step phases, exposed individually so the model checker can
+    # interleave them as atomic actions; step() composes exactly these, so
+    # the checked control flow and the served control flow are one code
+    # path (no re-model to drift).
+    def control_prefill(self, admit_new: bool = True) -> int:
+        """Admission-boundary phase: shed expired deadlines, execute the
+        scheduler's prefill chunk queue, drain unservable rejections.
+        Returns the number of chunks executed."""
+        self.sched.shed_expired()
+        ws = self.sched.prefill_schedule(admit_new=admit_new)
+        for w in ws:
+            self._do_prefill_chunk(w)
+        for req in self.sched.rejected:
+            # Regrew past the arena while preempted: finish truncated.
+            self.sched.finish(req, truncated=True)
+        self.sched.rejected = []
+        return len(ws)
+
+    def control_decode(self) -> None:
+        """Decode-boundary phase: ensure every running slot can take one
+        more token (preempting by eviction under pressure), shed expired
+        deadlines, decode one token per fully-prefilled running slot."""
+        new_pages, _evicted, _trunc = self.sched.ensure_decode_capacity()
+        if new_pages:
+            self._sync_tables({slot for slot, _ in new_pages})
+        self.sched.shed_expired()
+        if any(not r.prefilling for r in self.sched.running.values()):
+            self._do_decode()
 
     def step(self) -> None:
         """One scheduler iteration: shed expired deadlines (admission
@@ -807,7 +540,9 @@ class ServingEngine:
         slot. With faults on, the injector runs first: straggler sleeps
         and one iteration's worth of arena pressure (pages withheld for
         the whole step, so the scheduler's can_admit-then-alloc protocol
-        stays consistent, then released)."""
+        stays consistent, then released). With ``assert_invariants`` on
+        (``GEMMINI_CHECK``), the allocator's ownership oracle runs at the
+        step boundary."""
         t0 = self.clock()
         inj = self.faults
         held = 0
@@ -817,23 +552,14 @@ class ServingEngine:
             if k:
                 held = self.alloc.hold_pages(k)
         try:
-            self.sched.shed_expired()
             admit_new = not (self.policy == "static" and self.sched.running)
-            for w in self.sched.prefill_schedule(admit_new=admit_new):
-                self._do_prefill_chunk(w)
-            for req in self.sched.rejected:
-                # Regrew past the arena while preempted: finish truncated.
-                self.sched.finish(req, truncated=True)
-            self.sched.rejected = []
-            new_pages, _evicted, _trunc = self.sched.ensure_decode_capacity()
-            if new_pages:
-                self._sync_tables({slot for slot, _ in new_pages})
-            self.sched.shed_expired()
-            if any(not r.prefilling for r in self.sched.running.values()):
-                self._do_decode()
+            self.control_prefill(admit_new=admit_new)
+            self.control_decode()
         finally:
             if held:
                 self.alloc.release_held()
+            if self.assert_invariants:
+                self.alloc.check()
             self._step_gauges()
             if self.tracer is not None:
                 self.tracer.complete("step", t0, cat="engine",
@@ -939,6 +665,454 @@ class ServingEngine:
                 if itl is not None else None,
                 "latency_s": (r.t_finished - r.submitted_at)
                 if r.t_finished else None}
+
+    # -- maintenance -------------------------------------------------------
+    def defrag(self) -> None:
+        """Compact live pages to the arena front (accounting only here;
+        ``ServingEngine.defrag`` additionally permutes the device pools)."""
+        self.alloc.defrag()
+
+
+class ServingEngine(EngineControlPlane):
+    """Continuous-batching executor for one model on one host.
+
+    Knobs (see docs/serving.md for the policy discussion):
+
+    * ``max_slots`` / ``max_context`` / ``page_size`` / ``n_pages`` --
+      decode batch width and paged-arena geometry. ``page_size=None``
+      resolves the tuned ``PagedAttnSchedule`` page size when
+      ``GEMMINI_TUNE`` is not ``off``, else the static default.
+    * ``backend`` -- ``xla`` (gather reference, exact-match contract),
+      ``interpret`` (Pallas kernel bodies on CPU), ``pallas`` (TPU).
+    * ``prefill_token_budget`` -- prefill cache positions per iteration.
+    * ``prefill_chunk`` -- chunked prefill: ``None`` or negative =
+      single-pass, ``0`` = auto (one page), else the chunk size in cache
+      positions (floored to ``n_meta_tokens + 1``).
+    * ``policy`` -- ``continuous``, or ``static`` (admission barrier, no
+      slot recycling; the bench baseline). The barrier never blocks an
+      in-flight chunked prefill, only new admissions.
+    * ``admission_policy`` -- queue order for new admissions: ``fifo``
+      (default, unchanged), ``priority`` (highest ``Request.priority``
+      first, deadline then age break ties), or ``deadline``
+      (earliest-deadline-first). See ``scheduler.ContinuousScheduler``.
+    * ``warm_prompt_lens`` -- pre-resolve every tuned schedule the given
+      prompt lengths will hit (no-op under ``GEMMINI_TUNE=off``).
+    * ``faults`` / ``nan_guard`` / ``max_step_retries`` /
+      ``retry_backoff_s`` / ``enforce_deadlines`` -- the robustness
+      envelope (docs/serving.md#robustness): deterministic fault
+      injection (``faults=None`` consults ``$GEMMINI_FAULTS``; off by
+      default), post-step NaN/Inf guard with retry-on-the-XLA-twin +
+      schedule quarantine (defaults to on iff faults are on), bounded
+      retry-with-backoff for transient step failures, and SLO
+      enforcement (shed expired deadlines instead of serving them).
+    * ``assert_invariants`` -- debug oracle: run
+      ``PagedKVAllocator.check()`` at every step boundary. Off by
+      default; ``None`` consults ``$GEMMINI_CHECK``.
+    * ``kv_offload`` / ``host_pool_pages`` / ``prefix_cache`` -- the
+      page-granular KV lifecycle (docs/serving.md#kv-lifecycle), both off
+      by default with bit-exact parity to the classic paths. Offload
+      spills a preempted victim's committed pages to a host pool (LRU,
+      ``host_pool_pages`` deep; default: the arena size) so restart is a
+      DMA restore + resumed chunked prefill instead of a recompute; the
+      prefix cache content-hashes full pages at prefill commit and maps
+      shared prompt prefixes copy-on-write at admission (attention-only
+      families -- an SSM's recurrent state cannot skip chunks).
+    * ``watchdog`` -- a :class:`repro.runtime.StepWatchdog` (default: a
+      fresh one) observing every engine iteration: straggler flags +
+      step-latency percentiles in the run summary, optional heartbeat.
+    * ``trace`` -- span tracing (docs/observability.md): ``None``
+      consults ``$GEMMINI_TRACE`` (usually: off), ``True``/an int
+      capacity/a :class:`repro.obs.trace.Tracer` enable the ring-buffered
+      tracer for THIS engine (request lifecycle, step phases, allocator
+      events). Off costs one None check per emission site; the disabled
+      path is bit-exact against PR-7 (a regression test holds it there).
+    * ``clock`` -- the engine's one monotonic clock (default
+      ``time.monotonic``): every TTFT/ITL/latency/step duration and
+      every trace timestamp derives from it, and ``submit(deadline=)``
+      timestamps live in its domain (``engine.now() + rel_s``).
+      Injectable for deterministic tests.
+
+    Dispatch is an :class:`ExecutionContext` (``self.engine``): cfg +
+    backend + tune policy in one frozen value handed to the jitted model
+    steps. A mesh-aware context (``ExecutionContext.with_mesh``) is the
+    multi-host path once the page arena itself is sequence-sharded
+    (ROADMAP).
+    """
+
+    def __init__(self, model_cfg, *, max_slots: int = 4,
+                 max_context: int = 2048,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 engine_cfg: Optional[GemminiConfig] = None,
+                 backend: Optional[str] = None,
+                 params=None, seed: int = 0,
+                 temperature: float = 0.0,
+                 prefill_token_budget: int = 512,
+                 prefill_chunk: Optional[int] = None,
+                 policy: str = "continuous",
+                 admission_policy: str = "fifo",
+                 warm_prompt_lens: Sequence[int] = (),
+                 faults=None,
+                 nan_guard: Optional[bool] = None,
+                 max_step_retries: int = 2,
+                 retry_backoff_s: float = 0.0,
+                 enforce_deadlines: bool = False,
+                 assert_invariants: Optional[bool] = None,
+                 kv_offload: bool = False,
+                 host_pool_pages: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 watchdog: Optional[StepWatchdog] = None,
+                 trace=None,
+                 clock=None):
+        super().__init__(model_cfg, max_slots=max_slots, policy=policy,
+                         faults=faults, nan_guard=nan_guard,
+                         max_step_retries=max_step_retries,
+                         retry_backoff_s=retry_backoff_s,
+                         assert_invariants=assert_invariants,
+                         watchdog=watchdog, trace=trace, clock=clock)
+        self.temperature = temperature
+        self.max_context = max_context
+        cfg = engine_cfg or GemminiConfig(input_dtype="bf16",
+                                          acc_dtype="fp32",
+                                          output_dtype="bf16")
+        self.engine = ExecutionContext(
+            cfg=cfg, backend=backend or default_engine_backend())
+
+        # -- page geometry: the tuned schedule is the page size ------------
+        if page_size is None:
+            if flags.get("tune_mode") != "off" and model_cfg.has_attn:
+                from repro import tune
+                page_size = tune.resolve_paged_attn_schedule(
+                    cfg, max_slots, model_cfg.n_heads, model_cfg.n_kv_heads,
+                    model_cfg.head_dim, max_context,
+                    dtype=model_cfg.dtype).page_size
+            else:
+                from repro.tune.schedules import DEFAULT_PAGE_SIZE
+                page_size = DEFAULT_PAGE_SIZE
+        self.page_size = max(8, min(page_size, max_context))
+        self.max_pages_per_seq = -(-max_context // self.page_size)
+        if n_pages is None:
+            # Budget-derived arena, capped at what the engine can ever hold
+            # live: pages belong only to running slots, each at most
+            # max_pages_per_seq deep, so anything beyond slots*MP is zero
+            # pools that no schedule could touch (a full gemma3 config
+            # would otherwise allocate the whole 4096-page cap -- GiBs of
+            # zeros -- to serve a 2-request smoke batch).
+            n_pages = max(self.max_pages_per_seq,
+                          min(max_slots * self.max_pages_per_seq,
+                              arena_pages(model_cfg, cfg, self.page_size)))
+        # -- KV lifecycle (docs/serving.md#kv-lifecycle) -------------------
+        self.kv_offload = bool(kv_offload)
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache and model_cfg.has_ssm:
+            # A prefix hit skips the chunks below the anchor, but an
+            # SSM/hybrid family's recurrent state is a function of every
+            # skipped position -- CoW pages cannot carry it.
+            raise ValueError("prefix_cache requires an attention-only "
+                             f"family; {model_cfg.name!r} has SSM state")
+        self.alloc = PagedKVAllocator(
+            n_pages, self.page_size, self.max_pages_per_seq,
+            tracer=self.tracer,
+            host_pool_pages=((host_pool_pages if host_pool_pages is not None
+                              else n_pages) if self.kv_offload else 0))
+        # Prompt bucketing (compile-cache friendliness): legal only for
+        # pure-attention families, where padded positions are provably dead
+        # under the causal mask + length mask. An SSM/hybrid model's
+        # recurrent scan state WOULD absorb padding tokens, silently
+        # diverging from the reference path, so those prefill at exact
+        # length (one compile per distinct prompt length).
+        self.prefill_pad = 1 if model_cfg.has_ssm else self.page_size
+        # Chunked prefill: None or negative = single-pass (classic; the
+        # CLI's -1 convention works here too); 0 = auto (one page, the
+        # natural page-multiple default); positive values are floored to
+        # meta+1 by the scheduler (the first chunk carries the meta-token
+        # prefix).
+        if prefill_chunk is not None and prefill_chunk < 0:
+            prefill_chunk = None
+        elif prefill_chunk == 0:
+            prefill_chunk = self.page_size
+        self.sched = ContinuousScheduler(
+            self.alloc, max_slots,
+            prefill_token_budget=prefill_token_budget,
+            extra_tokens_per_prefill=model_cfg.n_meta_tokens,
+            pad_to=self.prefill_pad,
+            prefill_chunk=prefill_chunk,
+            admission_policy=admission_policy,
+            enforce_deadlines=enforce_deadlines,
+            clock=self.clock, tracer=self.tracer, metrics=self.metrics,
+            offload=self.kv_offload, prefix_cache=self.prefix_cache,
+            spill_fn=self._spill, restore_fn=self._restore)
+        self.prefill_chunk = self.sched.prefill_chunk
+        if policy == "static":
+            # Static batching as a degenerate policy: admit only into an
+            # EMPTY engine (group barrier, no slot recycling) and ignore
+            # the prefill budget -- the whole group prefills at once.
+            self.sched.prefill_token_budget = 1 << 30
+
+        # -- model state + jitted steps ------------------------------------
+        self._key = jax.random.PRNGKey(seed)
+        if params is None:
+            self._key, pk = jax.random.split(self._key)
+            params = tf.init_params(pk, model_cfg)
+        self.params = params
+        self.state = tf.init_paged_state(model_cfg, max_slots, n_pages,
+                                         self.page_size,
+                                         self.max_pages_per_seq,
+                                         dtype=model_cfg.dtype)
+        mc = model_cfg
+        # Guarded engines use non-donating jits (see _jitted_steps: the
+        # XLA-twin retry needs the pre-call state buffer alive).
+        self._steps = _jitted_steps(self.engine, mc, self.page_size,
+                                    donate=not self.nan_guard)
+        self._fb_steps = None        # XLA-twin fallbacks, built on demand
+        # The tuned schedule the decode path launches, for quarantine on a
+        # guard trip: the same key resolve_paged_attn_schedule resolved the
+        # page size under. None when tuning is off or the family has no
+        # attention (nothing tuned to quarantine).
+        if mc.has_attn and flags.get("tune_mode") != "off":
+            from repro.tune import schedules as tsched
+            self._paged_sched_key = tsched.paged_attn_cache_key(
+                cfg, max_slots, mc.n_heads, mc.n_kv_heads, mc.head_dim,
+                max_context, window=None, dtype=mc.dtype)
+
+        tok_shape = (max_slots,) if mc.n_codebooks == 1 \
+            else (max_slots, mc.n_codebooks)
+        self._next_token = np.zeros(tok_shape, np.int32)
+        self.warm_stats: Optional[Dict[str, int]] = None
+        if warm_prompt_lens and flags.get("tune_mode") != "off":
+            self.warm_stats = self.warm(warm_prompt_lens)
+
+    # -- plan warm-up ------------------------------------------------------
+    def warm(self, prompt_lens: Sequence[int]) -> Dict[str, int]:
+        """Pre-resolve every schedule the engine will launch: prefill GEMM
+        and attention shapes per prompt bucket (batch 1), decode GEMMs at
+        the slot batch, and the paged-attention page size the pools were
+        sized with -- so no request ever tunes on the request path.
+
+        With chunked prefill on, the buckets are *chunk lengths*, not
+        prompt buckets: the first chunk prefills like a short fresh prompt
+        (self-attention + GEMMs at the chunk length), continuation chunks
+        launch only GEMMs -- their attention is the block-table gather
+        kernel, whose tuned schedule IS the page size the pools were
+        already sized with."""
+        from repro import tune
+        totals: Dict[str, int] = {}
+        # Prefill really runs at bucket + meta tokens (embed_inputs prepends
+        # them), so that is the length to warm -- warming the bare bucket
+        # would populate fingerprints the request path never hits.
+        first, rest = set(), set()
+        for p in prompt_lens:
+            dummy = Request(rid=-1,
+                            prompt=np.zeros((max(1, int(p)),), np.int32),
+                            max_new_tokens=0)
+            spans = self.sched._chunk_spans(dummy)
+            first.add(spans[0][2])
+            for (s, _e, pe) in spans[1:]:
+                rest.add(pe - s)
+        for i, b in enumerate(sorted(first)):
+            st = tune.warm_model_plans(
+                self.engine.cfg, self.model_cfg, 1, b,
+                include_decode=False,
+                paged_slots=self.max_slots if i == 0 else 0,
+                paged_max_context=self.max_context)
+            totals = {k: totals.get(k, 0) + v for k, v in st.items()}
+        for b in sorted(rest - first):
+            st = tune.warm_model_plans(self.engine.cfg, self.model_cfg, 1, b,
+                                       include_decode=False,
+                                       include_attention=False)
+            totals = {k: totals.get(k, 0) + v for k, v in st.items()}
+        st = tune.warm_model_plans(self.engine.cfg, self.model_cfg,
+                                   self.max_slots, 1,
+                                   include_attention=False)
+        totals = {k: totals.get(k, 0) + v for k, v in st.items()}
+        return totals
+
+    # -- sampling ----------------------------------------------------------
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        """logits: (..., V) -> token ids, greedy unless temperature > 0."""
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._key, k = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.temperature), np.int32)
+
+    # -- device state ------------------------------------------------------
+    def _table_row(self, slot: int) -> np.ndarray:
+        row = np.zeros((self.max_pages_per_seq,), np.int32)
+        pages = self.alloc.slot_pages(slot)
+        row[:len(pages)] = pages
+        return row
+
+    def _sync_tables(self, slots) -> None:
+        tables = self.state.tables
+        for slot in slots:
+            tables = tables.at[slot].set(jnp.asarray(self._table_row(slot)))
+        self.state = self.state._replace(tables=tables)
+
+    # -- KV lifecycle compute hooks ----------------------------------------
+    def _capture_spill(self, req: Request, page_ids: List[int]) -> Dict:
+        """Device->host copy of a preemption victim's committed pages (plus
+        its per-slot recurrent state); ``np.asarray`` forces the copy to
+        complete while contents are still exclusively owned."""
+        idx = jnp.asarray(np.asarray(page_ids, np.int64))
+        st = self.state
+        payload: Dict = {}
+        if st.kv_k is not None:
+            payload["kv_k"] = np.asarray(st.kv_k[:, :, idx])
+            payload["kv_v"] = np.asarray(st.kv_v[:, :, idx])
+        if st.conv is not None:
+            payload["conv"] = np.asarray(st.conv[:, req.slot])
+            payload["ssm"] = np.asarray(st.ssm[:, req.slot])
+        return payload
+
+    def _apply_restore(self, req: Request, slot: int, spill) -> None:
+        """Host->device copy of a spilled victim's pages into the freshly
+        allocated slot's pages."""
+        pages = self.alloc.slot_pages(slot)[:spill.n_pages]
+        idx = jnp.asarray(np.asarray(pages, np.int64))
+        st = self.state
+        pl = spill.payload
+        if st.kv_k is not None:
+            st = st._replace(
+                kv_k=st.kv_k.at[:, :, idx].set(jnp.asarray(pl["kv_k"])),
+                kv_v=st.kv_v.at[:, :, idx].set(jnp.asarray(pl["kv_v"])))
+        if st.conv is not None:
+            st = st._replace(
+                conv=st.conv.at[:, slot].set(jnp.asarray(pl["conv"])),
+                ssm=st.ssm.at[:, slot].set(jnp.asarray(pl["ssm"])))
+        self.state = st
+
+    # -- robustness envelope (compute side) --------------------------------
+    def _fallback_steps(self):
+        """The bit-exact XLA twins of the jitted steps (PR 3/4's exactness
+        contract is what makes degraded mode *exact*): same model, same
+        paged state, same engine datapath for every projection -- only the
+        kernel lowerings swap for their plan-free XLA twins
+        (``backend="xla_twin"``; the plain ``xla`` backend would also flip
+        the model onto the float-LM projection path and the re-run would
+        drift off the faulted stream at bf16-rounding level). An engine
+        already lowering to XLA (``xla`` or ``xla_twin``) has no tuned
+        schedule to blame, so its fallback is a clean re-run of the same
+        backend (donate=False variant)."""
+        if self._fb_steps is None:
+            fb = self.engine.backend if self.engine.impl_backend == "xla" \
+                else "xla_twin"
+            self._fb_steps = _jitted_steps(
+                self.engine.with_backend(fb), self.model_cfg,
+                self.page_size, donate=False)
+        return self._fb_steps
+
+    def _dispatch(self, which: str, args: tuple):
+        return self._steps[which](*args)
+
+    def _dispatch_fallback(self, which: str, args: tuple):
+        return self._fallback_steps()[which](*args)
+
+    # -- trace-time audit hooks (repro.analysis.lint.jit_audit) ------------
+    @staticmethod
+    def _bucket_key(which: str, args: tuple):
+        """The compile-bucket a dispatch lands in: the traced token-block
+        shape plus any static argument (the chunk steps' kv_pages)."""
+        if which in ("prefill", "prefill_nl"):
+            return (int(args[1].shape[1]),)
+        if which in ("chunk", "chunk_nl"):
+            return (int(args[1].shape[1]), args[6])
+        return ()                                    # decode: one bucket
+
+    def jit_cache_stats(self) -> Dict[str, int]:
+        """Observed compile-bucket counts per jitted step (both the
+        primary steps and, once built, the XLA-twin fallbacks)."""
+        out: Dict[str, int] = {}
+        for label, steps in (("", self._steps),
+                             ("fb:", self._fb_steps or {})):
+            for which, fn in steps.items():
+                try:
+                    out[label + which] = int(fn._cache_size())
+                except Exception:
+                    pass
+        return out
+
+    def audit(self):
+        """Run the trace-time lint audit against this live engine:
+        compile-bucket explosions (GL601) and post-donation buffer reuse
+        (GL602).  Returns the findings (empty list = healthy)."""
+        from repro.analysis.lint import jit_audit
+        return jit_audit.audit_engine(self)
+
+    # -- execution compute hooks -------------------------------------------
+    def _exec_chunk(self, w):
+        """Execute one prefill chunk's device work.
+
+        Single-span chunks (``first and last``) take the classic
+        whole-prompt path unchanged. Otherwise: the first chunk runs the
+        fresh ``paged_prefill`` (meta prefix, SSM state reset, self-only
+        attention -- positions [0, chunk) see no cache); continuation
+        chunks run ``paged_prefill_chunk`` (resume SSM state, attend cache
+        pages + chunk at offset ``start``). Only the last chunk samples --
+        its final row is the prompt's last true position -- and only then
+        does the slot's device length go live, flipping it into the decode
+        active set (the device table sync can wait until then: the chunk
+        calls carry the table row as an argument, and a mid-prefill slot
+        never decodes)."""
+        req, slot = w.req, w.slot
+        meta = self.model_cfg.n_meta_tokens
+        prompt = req.serve_prompt()
+        if w.first and w.last:
+            toks = prompt
+            pad = self._bucket(len(prompt)) - len(prompt)
+            if pad:
+                toks = np.pad(toks, ((0, pad),) + ((0, 0),)
+                              * (toks.ndim - 1))
+            row = self._table_row(slot)
+            logits, self.state = self._run_guarded(
+                "prefill", "prefill",
+                (self.params, jnp.asarray(toks[None]), self.state,
+                 jnp.int32(slot), jnp.asarray(row)))
+            true_len = len(prompt) + meta
+            self.state = self.state._replace(
+                lengths=self.state.lengths.at[slot].set(true_len))
+            self._sync_tables([slot])
+            return self._sample(logits[0, true_len - 1])
+        toks = prompt[max(0, w.start - meta): w.true_end - meta]
+        pad = (w.padded_end - w.true_end)
+        if pad:
+            toks = np.pad(toks, ((0, pad),) + ((0, 0),) * (toks.ndim - 1))
+        row = self._table_row(slot)
+        if w.first:
+            which = "prefill" if w.last else "prefill_nl"
+            logits, self.state = self._run_guarded(
+                "prefill", which,
+                (self.params, jnp.asarray(toks[None]), self.state,
+                 jnp.int32(slot), jnp.asarray(row)))
+        else:
+            # Static dead-key bound for the gather attention: the scheduler
+            # stamps each continuation chunk with the pages the whole
+            # (padded) prompt will ever occupy (PrefillChunk.kv_pages) --
+            # table entries past it can never hold live keys and need not
+            # be contracted.
+            which = "chunk" if w.last else "chunk_nl"
+            logits, self.state = self._run_guarded(
+                "chunk", which,
+                (self.params, jnp.asarray(toks[None]), self.state,
+                 jnp.int32(slot), jnp.asarray(row), jnp.int32(w.start),
+                 w.kv_pages or None))
+        if not w.last:
+            return None
+        self._sync_tables([slot])
+        true_len = len(prompt) + meta
+        self.state = self.state._replace(
+            lengths=self.state.lengths.at[slot].set(true_len))
+        return self._sample(logits[0, (true_len - 1) - w.start])
+
+    def _exec_decode(self, active_np: np.ndarray) -> np.ndarray:
+        toks = self._next_token[:, None] \
+            if self.model_cfg.n_codebooks == 1 \
+            else self._next_token[:, None, :]
+        logits, self.state = self._run_guarded(
+            "decode", "decode",
+            (self.params, jnp.asarray(toks), self.state,
+             jnp.asarray(active_np)))
+        return self._sample(logits[:, -1])
 
     # -- maintenance -------------------------------------------------------
     def defrag(self) -> None:

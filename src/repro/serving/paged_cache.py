@@ -340,13 +340,24 @@ class PagedKVAllocator:
             return False
         self._host.pop(rid, None)                  # re-spill replaces
         while self.host_used_pages + n_pages > self.host_pool_pages:
-            old_rid, old = self._host.popitem(last=False)
-            self._trace("spill_evict", rid=old_rid, pages=old.n_pages)
+            self.host_evict_lru()
         self._host[rid] = HostSpill(rid=rid, n_pages=n_pages, tokens=tokens,
                                     payload=payload)
         self._trace("spill", rid=rid, pages=n_pages,
                     host_used=self.host_used_pages)
         return True
+
+    def host_evict_lru(self) -> Optional[int]:
+        """Evict the least-recently-spilled host-pool entry (its victim
+        degrades to recompute on restart). ``host_put`` calls this under
+        capacity pressure; the model checker calls it directly as an
+        explicit action. Returns the evicted rid, or None on an empty
+        pool."""
+        if not self._host:
+            return None
+        old_rid, old = self._host.popitem(last=False)
+        self._trace("spill_evict", rid=old_rid, pages=old.n_pages)
+        return old_rid
 
     def host_peek(self, rid: int) -> Optional[HostSpill]:
         return self._host.get(rid)
@@ -489,6 +500,24 @@ class PagedKVAllocator:
             "free-page accounting drift"
         assert self.host_used_pages <= max(0, self.host_pool_pages), \
             "host pool over capacity"
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Order-faithful structural view of the allocator, for canonical
+        state hashing (repro.analysis.mc.canon): slot tables in slot
+        order, refcounts, the prefix index in LRU order, held pages, the
+        free list in POP order (LIFO: the next page issued comes first),
+        and host-pool entries in LRU order. Physical page ids appear
+        as-is; the canonicalizer relabels them by traversal order so two
+        states differing only by page naming hash identically."""
+        return {
+            "tables": {s: list(p) for s, p in sorted(self._tables.items())},
+            "ref": dict(self._ref),
+            "prefix": [(k, p) for k, p in self._prefix.items()],
+            "held": list(self._held),
+            "free_pop_order": list(reversed(self._free)),
+            "host": [(rid, sp.n_pages, sp.tokens)
+                     for rid, sp in self._host.items()],
+        }
 
 
 def arena_pages(model_cfg, engine_cfg, page_size: int, *,

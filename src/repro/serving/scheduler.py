@@ -367,6 +367,11 @@ class ContinuousScheduler:
           submission time break ties.
         * ``deadline``: earliest-deadline-first (EDF); deadline-less
           requests are best-effort and sort last by submission time.
+
+        The final tie-break is the rid: submission timestamps from a fast
+        monotonic clock (or an injected logical clock) can collide, and an
+        order that depends on sort stability over a queue whose layout
+        varies with preemption history is not deterministic across runs.
         """
         if self.admission_policy == "fifo" or len(self.queue) < 2:
             return
@@ -375,8 +380,9 @@ class ContinuousScheduler:
         def key(r: Request):
             dl = r.deadline if r.deadline is not None else inf
             if self.admission_policy == "priority":
-                return (r.n_preempted == 0, -r.priority, dl, r.submitted_at)
-            return (r.n_preempted == 0, dl, r.submitted_at)
+                return (r.n_preempted == 0, -r.priority, dl,
+                        r.submitted_at, r.rid)
+            return (r.n_preempted == 0, dl, r.submitted_at, r.rid)
 
         self.queue.sort(key=key)
 

@@ -501,3 +501,54 @@ def test_deadlines_ignored_unless_enforced():
     rep = eng.run()
     assert rep["requests"][0]["status"] == "finished"
     assert rep["summary"]["shed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# assert_invariants debug oracle (GEMMINI_CHECK)
+# ---------------------------------------------------------------------------
+def test_assert_invariants_default_and_env(monkeypatch):
+    """Off by default (it is O(pages) of asserts on the hot loop);
+    $GEMMINI_CHECK flips the default without code edits; an explicit
+    argument always wins over the environment."""
+    monkeypatch.delenv("GEMMINI_CHECK", raising=False)
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, backend="interpret")
+    assert eng.assert_invariants is False
+    monkeypatch.setenv("GEMMINI_CHECK", "1")
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, backend="interpret")
+    assert eng.assert_invariants is True
+    eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                        n_pages=8, backend="interpret",
+                        assert_invariants=False)
+    assert eng.assert_invariants is False
+
+
+def test_assert_invariants_catches_corruption():
+    """The knob really runs the allocator oracle at the step boundary: a
+    simulated refcount leak makes the NEXT step raise, and the same
+    corruption on an unchecked engine passes silently (the default path
+    must stay assert-free)."""
+    rng = np.random.default_rng(0)
+    for checked in (True, False):
+        eng = ServingEngine(_TINY, max_slots=2, max_context=32, page_size=8,
+                            n_pages=8, temperature=0.0, seed=0,
+                            backend="interpret", prefill_chunk=8,
+                            assert_invariants=checked)
+        eng.submit(rng.integers(0, 64, (5,), dtype=np.int32), 4)
+        eng.step()
+        pages = eng.alloc.slot_pages(0)
+        assert pages, "request should hold pages after one step"
+        eng.alloc._ref[pages[0]] += 1          # simulate a leak
+        if checked:
+            with pytest.raises(AssertionError):
+                eng.step()
+        else:
+            eng.step()                          # silently tolerated
+
+
+def test_chaos_run_clean_under_invariant_oracle():
+    """The flagship chaos plan keeps every allocator invariant at every
+    step boundary (the chaos suite doubles as a lifecycle audit)."""
+    _, rep = _run(MIXED_PLAN, assert_invariants=True)
+    assert all(r["status"] in ("finished", "shed") for r in rep["requests"])

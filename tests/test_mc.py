@@ -1,0 +1,288 @@
+"""Control-plane model checker suite (src/repro/analysis/mc/).
+
+Four layers:
+
+* gate -- the shipped bounded configurations exhaust (every reachable
+  interleaving expanded, memoized, terminating) with ZERO violations;
+  this is the property CI enforces with an empty baseline.
+* oracle self-tests -- planted bugs (``sabotage=`` configs) must be
+  FOUND with the right GL8xx codes: a checker that cannot see a
+  deliberate refcount leak / token rewind / arena wedge proves nothing
+  by reporting clean.
+* counterexample machinery -- greedy minimization, deterministic
+  replay (identical violating state hash across re-executions), spec
+  round-trip, exported pytest/fault-script artifacts.
+* decision equivalence -- the NullEngine (fabricated compute) makes the
+  same scheduling/allocation decisions as the real ServingEngine on
+  identical op sequences, so checking the null engine checks the one
+  that serves.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.analysis.mc import explore as mcx
+from repro.analysis.mc.canon import canonical_state, state_tuple
+from repro.analysis.mc.harness import (ALL_CONFIGS, CONFIGS,
+                                       SELFTEST_CONFIGS, LogicalClock,
+                                       MCConfig, NullEngine, build_engine)
+from repro.models import transformer as tf
+from repro.serving.engine import ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# the gate: shipped configs exhaust with zero violations
+# ---------------------------------------------------------------------------
+def test_acceptance_config_exhausts_clean():
+    """The ISSUE's acceptance bar: a 3-slot/12-page/3-request config is
+    fully exhausted -- reported state count, memoization hits, proper
+    termination -- with no GL8xx findings."""
+    cfg = CONFIGS["core-3s12p"]
+    assert (cfg.slots, cfg.pages, len(cfg.prompts)) == (3, 12, 3)
+    res = mcx.explore(cfg)
+    assert res.complete, "state/depth budget must not cap the core config"
+    assert res.violations == []
+    assert res.states >= 100            # non-trivial interleaving space
+    assert res.memo_hits > 0            # canonicalization actually merges
+    assert res.terminal_states > 0      # every path can drain
+    assert res.transitions >= res.states - 1
+
+
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_shipped_config_clean(name):
+    res = mcx.explore(CONFIGS[name])
+    assert res.complete and res.violations == []
+
+
+def test_capped_run_skips_graph_checks():
+    """An exploration that hits the state budget must mark itself
+    incomplete and NOT emit GL804/GL806 (they are only sound over the
+    complete graph)."""
+    res = mcx.explore(CONFIGS["core-3s12p"], max_states=5)
+    assert not res.complete
+    assert all(v.code not in ("GL804", "GL806") for v in res.violations)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-tests: planted bugs must be found
+# ---------------------------------------------------------------------------
+def _codes(res):
+    return {v.code for v in res.violations}
+
+
+def test_selftest_defrag_leak_found():
+    res = mcx.explore(SELFTEST_CONFIGS["sabotage-defrag-leak"])
+    assert {"GL801", "GL803"} <= _codes(res)
+
+
+def test_selftest_rewind_found():
+    res = mcx.explore(SELFTEST_CONFIGS["sabotage-rewind"])
+    assert "GL802" in _codes(res)
+
+
+def test_selftest_wedge_found():
+    """The lost-request + page-hold plant breaks both graph properties:
+    states exist from which neither admission capacity nor a drained
+    workload is ever reachable."""
+    res = mcx.explore(SELFTEST_CONFIGS["sabotage-wedge"])
+    assert res.complete                   # graph checks need exhaustion
+    assert {"GL804", "GL806"} <= _codes(res)
+
+
+# ---------------------------------------------------------------------------
+# counterexample machinery
+# ---------------------------------------------------------------------------
+def _first(res, code):
+    return next(v for v in res.violations if v.code == code)
+
+
+def test_minimize_defrag_leak_to_three_actions():
+    cfg = SELFTEST_CONFIGS["sabotage-defrag-leak"]
+    res = mcx.explore(cfg)
+    v = mcx.minimize(cfg, _first(res, "GL801"))
+    assert v.trace == ("submit", "prefill", "defrag")
+    # each violation keeps ITS OWN message even when one transition
+    # breaks several invariants at once
+    v3 = mcx.minimize(cfg, _first(res, "GL803"))
+    assert v3.code == "GL803" and "ref_multiset" in v3.message
+    assert "allocator invariant" in v.message
+
+
+def test_replay_deterministic_state_hash():
+    """Acceptance bar: re-running an exported counterexample reproduces
+    the identical violating state hash."""
+    cfg = SELFTEST_CONFIGS["sabotage-rewind"]
+    res = mcx.explore(cfg)
+    v = mcx.minimize(cfg, _first(res, "GL802"))
+    r1 = mcx.replay(cfg, v.trace)
+    r2 = mcx.replay(cfg, v.trace)
+    assert r1.valid and r2.valid
+    assert r1.violation.code == "GL802"
+    assert r1.state_hash == r2.state_hash == v.state_hash
+
+
+def test_replay_rejects_disabled_action():
+    r = mcx.replay(CONFIGS["core-3s12p"], ("decode",))   # nothing running
+    assert not r.valid and r.violation is None
+
+
+def test_replay_clean_trace():
+    r = mcx.replay(CONFIGS["core-3s12p"], ("submit", "prefill"))
+    assert r.valid and r.violation is None and r.executed == 2
+
+
+def test_spec_roundtrip():
+    spec = mcx.format_spec("core-3s12p", ("submit", "prefill", "decode"))
+    cfg, trace = mcx.parse_spec(spec)
+    assert cfg is ALL_CONFIGS["core-3s12p"]
+    assert trace == ("submit", "prefill", "decode")
+    with pytest.raises(ValueError):
+        mcx.parse_spec("mc:v1;config=no-such;trace=a")
+    with pytest.raises(ValueError):
+        mcx.parse_spec("not-a-spec")
+
+
+def test_export_artifacts(tmp_path):
+    cfg = SELFTEST_CONFIGS["sabotage-defrag-leak"]
+    res = mcx.explore(cfg)
+    v = mcx.minimize(cfg, _first(res, "GL801"))
+    src = mcx.export_pytest(v)
+    p = tmp_path / "test_ce.py"
+    p.write_text(src)
+    # the generated regression is itself a collectible, passing test
+    assert "def test_mc_counterexample_" in src
+    ret = pytest.main(["-x", "-q", str(p)])
+    assert ret == 0
+    sh = mcx.export_fault_script(v)
+    assert sh.startswith("#!/bin/sh")
+    assert mcx.format_spec(v.config, v.trace) in sh
+
+
+def test_fault_script_carries_armed_plan():
+    v = mcx.Violation("GL807", "boom", ("submit", "fault:nan", "prefill"),
+                      "exception", "faults-2s8p")
+    sh = mcx.export_fault_script(v)
+    assert "GEMMINI_FAULTS" in sh and "nan@" in sh
+
+
+# ---------------------------------------------------------------------------
+# canonicalization
+# ---------------------------------------------------------------------------
+def test_canonical_hash_is_pure_and_stable():
+    cfg = CONFIGS["core-3s12p"]
+    e1, e2 = build_engine(cfg), build_engine(cfg)
+    assert canonical_state(e1) == canonical_state(e2)
+    h0 = canonical_state(e1)
+    assert state_tuple(e1) == state_tuple(e1)   # reading does not mutate
+    assert canonical_state(e1) == h0
+
+
+def test_canonical_hash_bounds_preempt_cycles():
+    """n_preempted clamps to {0,1} and n_chunks (cumulative telemetry) is
+    excluded, so preempt/re-admit churn cannot mint unbounded fresh
+    states -- the property that makes exploration terminate. Decision
+    inputs (n_generated) must still distinguish states."""
+    import copy
+    from repro.analysis.mc.actions import apply_action
+    cfg = MCConfig(name="cycle", slots=1, pages=8, page_size=4,
+                   max_context=16, prompts=((1, 2, 3),), max_new=(4,),
+                   prefill_chunk=4, allow_defrag=False)
+    eng = build_engine(cfg)
+    apply_action(eng, "submit")
+    apply_action(eng, "prefill")
+    apply_action(eng, "preempt")
+    other = copy.deepcopy(eng)
+    req = other.requests[0]
+    req.n_chunks += 17                       # telemetry: not canonical
+    req.n_preempted = 9                      # clamps to the same bucket
+    assert canonical_state(other) == canonical_state(eng)
+    req.generated.append(0)                  # a decision input IS canonical
+    assert canonical_state(other) != canonical_state(eng)
+
+
+# ---------------------------------------------------------------------------
+# decision equivalence: NullEngine vs the real ServingEngine
+# ---------------------------------------------------------------------------
+_TINY = tf.ModelConfig(name="tiny-mc", family="dense", n_layers=2,
+                       d_model=32, vocab=64, n_heads=2, n_kv_heads=1,
+                       head_dim=16, d_ff=64, dtype=jnp.float32)
+
+_EQ_PROMPTS = ((1, 2, 3, 4, 5), (6, 7, 8), (9, 10, 11, 12, 13, 14))
+_EQ_MAX_NEW = (3, 2, 2)
+
+
+def _decision_view(eng):
+    """Everything the control plane decided, nothing the compute did:
+    queue order, running map, per-request lifecycle counters, allocator
+    accounting."""
+    return (
+        tuple(r.rid for r in eng.sched.queue),
+        tuple(sorted((slot, r.rid, r.cache_len, r.prefill_pos,
+                      r.n_generated, r.state)
+                     for slot, r in eng.sched.running.items())),
+        tuple(sorted((r.rid, r.state, r.n_generated, len(r.generated),
+                      bool(r.truncated), r.n_preempted)
+                     for r in eng.requests)),
+        eng.alloc.used_pages,
+        eng.alloc.free_pages,
+    )
+
+
+def _apply_ops(eng, ops):
+    trail = []
+    for op in ops:
+        if op == "submit":
+            i = len(eng.requests)
+            eng.submit(np.asarray(_EQ_PROMPTS[i], np.int32),
+                       _EQ_MAX_NEW[i], eos_id=-1)
+        elif op == "step":
+            eng.step()
+        elif op == "preempt":
+            if eng.sched.running:
+                eng.sched.preempt(eng.sched._eviction_victim())
+        elif op == "defrag":
+            eng.defrag()
+        trail.append(_decision_view(eng))
+    # drain like run(): every request must reach a terminal state
+    it = 0
+    while eng.sched.has_work:
+        eng.step()
+        trail.append(_decision_view(eng))
+        it += 1
+        assert it < 200, "drain did not terminate"
+    return trail
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_null_engine_decision_equivalent_to_serving_engine(seed):
+    """PR-9-style op sequences (submit/step/preempt/defrag + drain) drive
+    the real interpret-backend ServingEngine and the tensor-free
+    NullEngine through identical decision trails: same admissions, same
+    chunk/decode progress, same preemption victims, same page
+    accounting at every op boundary."""
+    rng = np.random.default_rng(seed)
+    ops = ["submit", "step", "submit", "step", "submit"]
+    for _ in range(8):
+        ops.append(rng.choice(["step", "step", "preempt", "defrag"]))
+
+    real = ServingEngine(
+        _TINY, max_slots=2, max_context=32, page_size=8, n_pages=8,
+        prefill_chunk=8, prefill_token_budget=8, backend="interpret",
+        seed=0, clock=LogicalClock())
+    null = NullEngine(MCConfig(
+        name="equiv", slots=2, pages=8, page_size=8, max_context=32,
+        prompts=_EQ_PROMPTS, max_new=_EQ_MAX_NEW, prefill_chunk=8,
+        prefill_token_budget=8))
+
+    t_real = _apply_ops(real, ops)
+    t_null = _apply_ops(null, ops)
+    assert t_real == t_null
+
+
+def test_null_engine_assert_invariants_off_by_default():
+    """The checker supplies its own oracle; the engine-level knob must
+    stay off so GL801 attribution (which action broke it) is precise."""
+    eng = build_engine(CONFIGS["core-3s12p"])
+    assert eng.assert_invariants is False

@@ -366,6 +366,29 @@ def test_admission_policy_deadline_edf_and_preempted_first():
     assert [r.rid for (r, _, _) in order] == [2]
 
 
+def test_admission_tie_break_deterministic_rid_order():
+    """Equal-deadline EDF and equal-priority classes tie-break on rid:
+    with identical logical timestamps (the model checker's LogicalClock
+    makes timestamp collisions the common case, and batch submitters hit
+    it in production too) the admission order must be invariant under
+    queue permutation."""
+    rng = np.random.default_rng(1234)
+    for policy in ("priority", "deadline"):
+        for _ in range(5):
+            al = PagedKVAllocator(n_pages=64, page_size=4,
+                                  max_pages_per_seq=16)
+            sc = ContinuousScheduler(al, n_slots=8,
+                                     prefill_token_budget=1 << 20,
+                                     admission_policy=policy,
+                                     clock=lambda: 0.0)
+            reqs = [_mk_req(i, 4) for i in range(6)]
+            for r in reqs:
+                r.priority, r.deadline = 3, 42.0
+            for i in rng.permutation(6):
+                sc.submit(reqs[i])
+            assert [r.rid for (r, _, _) in sc.admissions()] == list(range(6))
+
+
 def test_admission_policy_unknown_rejected():
     al = PagedKVAllocator(n_pages=8, page_size=4, max_pages_per_seq=4)
     with pytest.raises(ValueError):
